@@ -1,0 +1,55 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+
+# tiny federated benchmark model (CPU-sized)
+BENCH_MODEL = ModelConfig(name="bench-tiny", family="dense", num_layers=4,
+                          d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                          d_ff=128, vocab_size=256, dtype="float32")
+BENCH_LORA = LoRAConfig(rank=8, alpha=8.0)
+BENCH_OPT = OptimConfig(lr=3e-3)
+
+
+def bench_fed(method: str, *, heterogeneous: bool = False, tau: float = 0.9,
+              rounds: int = 0, seed: int = 0, num_clients: int = 20,
+              clients_per_round: int = 5):
+    from repro.core.federated import FederatedTrainer
+    rounds = rounds or (3 if FAST else 10)
+    fed = FedConfig(
+        num_clients=num_clients, clients_per_round=clients_per_round,
+        method=method, tau=tau, homogeneous_rank=8,
+        heterogeneous=heterogeneous,
+        rank_distribution=((4, 8), (8, 4), (16, 4), (32, 2), (64, 2)),
+        zero_padding=heterogeneous and method in ("fedit", "ffa"),
+        seed=seed)
+    tr = FederatedTrainer(BENCH_MODEL, fed, BENCH_LORA, BENCH_OPT,
+                          batch_size=8, local_steps=4, seq_len=32)
+    hist = tr.run(rounds)
+    return hist, tr
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in µs (jit-compiled callables; blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")

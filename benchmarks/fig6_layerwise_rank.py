@@ -1,0 +1,33 @@
+"""Figure 6: layer-wise optimal rank per projection (q_proj vs v_proj) in a
+heterogeneous round — intrinsic dimensionality varies across depth and
+across projections."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_fed, emit
+
+
+def run():
+    hist, tr = bench_fed("florist", heterogeneous=True, tau=0.9, rounds=2)
+    agg = tr.global_state
+    rows = []
+    per_proj = {}
+    for path, ranks in agg.ranks.items():
+        proj = path[-1]
+        per_proj[proj] = ranks
+        rows.append({"name": f"fig6/{proj}", "us_per_call": "",
+                     "derived": "ranks=" + "|".join(map(str, ranks))})
+    if "wq" in per_proj and "wv" in per_proj:
+        rows.append({
+            "name": "fig6/summary", "us_per_call": "",
+            "derived": (f"mean_q={np.mean(per_proj['wq']):.1f};"
+                        f"mean_v={np.mean(per_proj['wv']):.1f};"
+                        f"varies_across_layers="
+                        f"{len(set(per_proj['wq'])) > 1 or len(set(per_proj['wv'])) > 1}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,63 @@
+"""Diagnostic: dump the largest collective ops from an (optionally unrolled,
+reduced-depth) dry-run compile.  Usage:
+
+  PYTHONPATH=src python benchmarks/hlo_collectives.py <arch> <shape> [L] [--unroll]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import collections
+import re
+import sys
+
+import jax  # noqa: E402
+
+from repro.common import flags
+from repro.common.config import INPUT_SHAPES
+from repro.common.pjit_utils import active_mesh
+from repro.configs import get_config, long_context_variant
+from repro.launch.dryrun import _COLLECTIVES, _shape_bytes, build_dryrun, pick_kv_dtype
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    L = int(sys.argv[3]) if len(sys.argv) > 3 and sys.argv[3].isdigit() else 2
+    unroll = "--unroll" in sys.argv
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    kw = {"num_layers": L}
+    if cfg.first_dense_layers:
+        kw["first_dense_layers"] = 1
+    cfg = cfg.replace(**kw)
+    mesh = make_production_mesh()
+    flags.set_analysis_unroll(unroll)
+    fn, args = build_dryrun(cfg, shape, mesh, grad_accum=1,
+                            kv_cache_dtype=pick_kv_dtype(cfg, shape))
+    with mesh, active_mesh(mesh):
+        compiled = fn.lower(*args).compile()
+    txt = compiled.as_text()
+    per_line = []
+    totals = collections.Counter()
+    for line in txt.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op.startswith(c):
+                b = _shape_bytes(m.group(1))
+                totals[c] += b
+                per_line.append((b, c, ls[:150]))
+                break
+    print("totals:", {k: f"{v/2**30:.2f}GiB" for k, v in totals.items()})
+    print(f"\ntop collectives (of {len(per_line)}):")
+    for b, c, l in sorted(per_line, reverse=True)[:12]:
+        print(f"  {b/2**20:9.1f}MiB {c:18s} {l[:120]}")
+
+
+if __name__ == "__main__":
+    main()

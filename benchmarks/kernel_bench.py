@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (not
+meaningful to time), so we time the jit-compiled XLA reference paths (the
+actual CPU execution path) and report the kernels' analytic FLOPs/bytes as
+`derived` (the roofline inputs for the TPU target)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # fused LoRA matmul: M=2048, d=2048, r=16
+    M, D, O, R = 2048, 2048, 2048, 16
+    x = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, O)) * 0.02, jnp.float32)
+    a = jnp.asarray(rng.normal(size=(R, D)) * 0.02, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(O, R)) * 0.02, jnp.float32)
+    t = timeit(jax.jit(lambda *ar: ref.lora_matmul_ref(*ar, 0.5)), x, w, a, b)
+    flops = 2 * M * D * O + 2 * M * R * (D + O)
+    rows.append({"name": "kernel/lora_matmul", "us_per_call": f"{t:.0f}",
+                 "derived": f"flops={flops:.3e};tpu_est_us={flops/197e12*1e6:.1f}"})
+
+    # flash attention: B=1,S=1024,H=8,K=2,hd=64
+    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    t = timeit(jax.jit(ref.flash_attention_ref), q, k, v)
+    flops = 2 * 2 * 1024 * 1024 * 8 * 64
+    rows.append({"name": "kernel/flash_attention", "us_per_call": f"{t:.0f}",
+                 "derived": f"flops={flops:.3e}"})
+
+    # wkv6: B=1,S=512,H=8,hd=64
+    r_ = jnp.asarray(rng.normal(size=(1, 512, 8, 64)), jnp.float32)
+    w_ = -jnp.exp(jnp.asarray(rng.normal(size=(1, 512, 8, 64)), jnp.float32))
+    u = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    t = timeit(jax.jit(ref.wkv6_ref), r_, r_, r_, w_, u)
+    flops = 4 * 512 * 8 * 64 * 64
+    rows.append({"name": "kernel/wkv6", "us_per_call": f"{t:.0f}",
+                 "derived": f"flops={flops:.3e}"})
+
+    # adapter gram: m=8192, r=160
+    xg = jnp.asarray(rng.normal(size=(8192, 160)), jnp.float32)
+    t = timeit(jax.jit(ref.adapter_gram_ref), xg)
+    flops = 2 * 8192 * 160 * 160
+    rows.append({"name": "kernel/adapter_gram", "us_per_call": f"{t:.0f}",
+                 "derived": f"flops={flops:.3e}"})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

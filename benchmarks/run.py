@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table3,fig5] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table3", "benchmarks.table3_comm_cost"),
+    ("table4", "benchmarks.table4_server_flops"),
+    ("fig2", "benchmarks.fig2_spectrum"),
+    ("fig5", "benchmarks.fig5_rank_vs_tau"),
+    ("fig6", "benchmarks.fig6_layerwise_rank"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("table2", "benchmarks.table2_accuracy_efficiency"),
+    ("fig7", "benchmarks.fig7_tau_vs_quality"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ["BENCH_FAST"] = "1"
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+            for r in rows:
+                print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+            print(f"#{tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures.append(tag)
+            traceback.print_exc()
+    # roofline table from dry-run records, if present
+    try:
+        from benchmarks.summarize_dryrun import rows as roof_rows
+        for r in roof_rows():
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},,"
+                  f"dominant={r['dominant']};compute_s={r['compute_s']:.4f};"
+                  f"memory_s={r['memory_s']:.4f};collective_s={r['collective_s']:.4f};"
+                  f"mem_gib={r['mem_gib']:.2f}")
+    except Exception:
+        pass
+    if failures:
+        print(f"FAILED benchmarks: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

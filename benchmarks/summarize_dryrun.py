@@ -1,0 +1,59 @@
+"""Summarize experiments/dryrun/*.json as the roofline table."""
+import glob
+import json
+import os
+import sys
+
+
+def rows(dirpath="experiments/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        d = json.load(open(f))
+        if "memory" not in d:       # e.g. server_aggregation records
+            continue
+        m = d["memory"]
+        tot = (m["argument_bytes"] + m["temp_bytes"] + m["output_bytes"]) / 2**30
+        r = d["roofline"]
+        # MODEL_FLOPS: 6·N_active·D for training (fwd+bwd), 2·N_active·D for
+        # inference; D = tokens processed this step
+        mult = 6 if d["mode"] == "train" else 2
+        model_flops = mult * d["active_params"] * _tokens(d)
+        hlo_global = d["flops_per_device"] * d["chips"]
+        out.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "mem_gib": tot, "compile_s": d["compile_s"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "grad_accum": d.get("grad_accum", 1),
+            "kv": d.get("kv_cache_dtype", "-"),
+            "model_flops": model_flops,
+            "useful_frac": model_flops / hlo_global if hlo_global else 0.0,
+        })
+    return out
+
+
+def _tokens(d):
+    # tokens processed per step (decode: one new token per sequence)
+    from_shape = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                  "decode_32k": 128, "long_500k": 1}
+    return from_shape[d["shape"]]
+
+
+def main():
+    dirpath = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rs = rows(dirpath)
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'mem/dev':>9s} {'cmpl(s)':>8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'dominant':>12s} "
+           f"{'ga':>3s} {'useful%':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rs:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['mem_gib']:8.2f}G {r['compile_s']:8.1f} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['dominant']:>12s} "
+              f"{r['grad_accum']:3d} {100*r['useful_frac']:7.1f}%")
+
+
+if __name__ == "__main__":
+    main()

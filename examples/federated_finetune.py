@@ -1,0 +1,67 @@
+"""End-to-end driver: federated LoRA fine-tuning with all five aggregation
+methods on a configurable model, several hundred local steps total.
+
+  PYTHONPATH=src python examples/federated_finetune.py \
+      [--method florist] [--rounds 20] [--tau 0.9] [--heter] [--model 100m]
+
+``--model 100m`` builds a ~100M-parameter decoder (12L × 768) — the
+paper-style end-to-end run (slow on CPU; the default 'tiny' profile runs in
+a couple of minutes).
+"""
+import argparse
+import time
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.federated import FederatedTrainer
+
+PROFILES = {
+    "tiny": ModelConfig(name="fed-tiny", family="dense", num_layers=4,
+                        d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                        d_ff=256, vocab_size=512, dtype="float32"),
+    "20m": ModelConfig(name="fed-20m", family="dense", num_layers=8,
+                       d_model=384, num_heads=6, num_kv_heads=2, head_dim=64,
+                       d_ff=1024, vocab_size=2048, dtype="float32"),
+    "100m": ModelConfig(name="fed-100m", family="dense", num_layers=12,
+                        d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+                        d_ff=2048, vocab_size=8192, dtype="float32"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="florist",
+                    choices=["florist", "fedit", "ffa", "flora", "flexlora"])
+    ap.add_argument("--model", default="tiny", choices=list(PROFILES))
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--tau", type=float, default=0.9)
+    ap.add_argument("--heter", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = PROFILES[args.model]
+    fed = FedConfig(num_clients=40, clients_per_round=8, method=args.method,
+                    tau=args.tau, homogeneous_rank=16,
+                    heterogeneous=args.heter,
+                    rank_distribution=((4, 16), (8, 8), (16, 8), (32, 4), (64, 4)),
+                    zero_padding=args.heter and args.method in ("fedit", "ffa"),
+                    seed=args.seed)
+    trainer = FederatedTrainer(cfg, fed, LoRAConfig(rank=16, alpha=16.0),
+                               OptimConfig(lr=3e-4), batch_size=8,
+                               local_steps=args.local_steps, seq_len=64)
+    total_steps = args.rounds * fed.clients_per_round * args.local_steps
+    print(f"== federated fine-tune: {cfg.name} ({cfg.param_count():,} params), "
+          f"method={args.method}, {args.rounds} rounds "
+          f"(~{total_steps} local steps total) ==")
+    t0 = time.time()
+    for rnd in range(args.rounds):
+        rec = trainer.run_round(rnd)
+        print(f"[{time.time()-t0:7.1f}s] round {rnd:3d} "
+              f"loss={rec.eval_loss:.4f} acc={rec.eval_acc:.3f} "
+              f"down_rank={rec.download_rank:.0f} "
+              f"down_MB={rec.download_params * 2 / 2**20:.2f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Batched serving of a fine-tuned (base + global LoRA) model: prefill via
+full forward, then greedy batched decode against the KV cache — the
+inference path the decode_32k / long_500k dry-run shapes exercise.
+
+  PYTHONPATH=src python examples/serve_batch.py [--arch qwen2-0.5b] \
+      [--batch 4] [--prompt-len 16] [--gen 24] [--window 0]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config, lora_targets
+from repro.models import transformer as T
+from repro.peft.lora import init_lora
+from repro.train.step import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window size (0 = full attention)")
+    ap.add_argument("--int8-cache", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if args.window:
+        cfg = cfg.replace(sliding_window=args.window)
+    key = jax.random.PRNGKey(0)
+    params = T.init(cfg, key)
+    adapters = init_lora(params, lora_targets(cfg), 8, 16.0, key, sigma=0.05)
+
+    B = args.batch
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(4, cfg.vocab_size, (B, args.prompt_len)))
+
+    serve = jax.jit(make_serve_step(cfg))
+    kv_dtype = jnp.int8 if args.int8_cache else jnp.dtype(cfg.dtype)
+    cache = T.init_cache(cfg, B, capacity=args.prompt_len + args.gen,
+                         kv_dtype=kv_dtype)
+
+    print(f"== serving {cfg.name}: batch={B}, prompt={args.prompt_len}, "
+          f"gen={args.gen}, window={args.window or 'full'}, "
+          f"cache={kv_dtype} ==")
+    # prefill by stepping the decode path over the prompt (cache-filling)
+    t0 = time.time()
+    tok = None
+    for t in range(args.prompt_len):
+        logits, cache = serve(params, adapters, cache, {"tokens": prompts[:, t:t+1]})
+    print(f"prefill: {args.prompt_len} steps in {time.time()-t0:.2f}s")
+
+    generated = []
+    tok = jnp.argmax(logits, -1)[:, None]
+    t0 = time.time()
+    for _ in range(args.gen):
+        generated.append(tok)
+        logits, cache = serve(params, adapters, cache, {"tokens": tok})
+        tok = jnp.argmax(logits, -1)[:, None]
+    dt = time.time() - t0
+    gen = jnp.concatenate(generated, axis=1)
+    print(f"decode: {args.gen} steps × batch {B} in {dt:.2f}s "
+          f"({B*args.gen/dt:.1f} tok/s on CPU)")
+    for b in range(min(B, 2)):
+        print(f"  seq{b}: {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

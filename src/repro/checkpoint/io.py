@@ -1,0 +1,59 @@
+"""Checkpointing: pytree <-> npz with path-string keys.
+
+Restores into an existing tree structure (dtype/shape validated), so a
+checkpoint written on host can be restored under a mesh by sharding the
+loaded arrays with ``jax.device_put`` against the target shardings.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _key_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return _SEP.join(parts)
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_key_str(p): np.asarray(v) for p, v in flat}
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype checked)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, ref in flat:
+        k = _key_str(p)
+        if k not in data:
+            raise KeyError(f"checkpoint missing key {k}")
+        arr = data[k]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {k}: {arr.shape} vs {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def restore_step(path: str) -> Optional[int]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return int(data["__step__"]) if "__step__" in data else None

@@ -1,0 +1,15 @@
+from repro.common.config import (
+    FedConfig,
+    INPUT_SHAPES,
+    LoRAConfig,
+    MeshConfig,
+    ModelConfig,
+    OptimConfig,
+    RunConfig,
+    ShapeConfig,
+)
+
+__all__ = [
+    "FedConfig", "INPUT_SHAPES", "LoRAConfig", "MeshConfig", "ModelConfig",
+    "OptimConfig", "RunConfig", "ShapeConfig",
+]

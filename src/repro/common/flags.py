@@ -1,0 +1,19 @@
+"""Trace-time flags.
+
+ANALYSIS_UNROLL: when True, every internal lax.scan (layer stack, flash
+attention chunks, chunked CE, grad-accum) is fully unrolled at lowering.
+Used ONLY by the roofline analysis lowering (reduced layer counts): XLA's
+cost_analysis counts a while-loop body once, so unrolling is what makes
+HLO_FLOPs/HLO_bytes exact.  Never enabled for the fit-proof compile or real
+execution.
+"""
+ANALYSIS_UNROLL = False
+
+
+def set_analysis_unroll(v: bool) -> None:
+    global ANALYSIS_UNROLL
+    ANALYSIS_UNROLL = bool(v)
+
+
+def scan_unroll() -> bool:
+    return ANALYSIS_UNROLL

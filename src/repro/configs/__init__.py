@@ -1,0 +1,76 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+models (TinyLlama-1.1B, LLaMA-3.2-1B), each in its own module, plus reduced
+smoke variants and per-family LoRA target defaults.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.common.config import ModelConfig
+
+ARCH_IDS = [
+    "phi3_vision_4p2b",
+    "zamba2_1p2b",
+    "rwkv6_1p6b",
+    "qwen1p5_32b",
+    "granite_moe_1b_a400m",
+    "qwen3_4b",
+    "qwen2p5_14b",
+    "qwen2_0p5b",
+    "deepseek_v3_671b",
+    "musicgen_medium",
+    # paper's own models
+    "tinyllama_1p1b",
+    "llama3p2_1b",
+]
+
+ASSIGNED = ARCH_IDS[:10]
+
+_ALIAS = {
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "qwen1.5-32b": "qwen1p5_32b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2.5-14b": "qwen2p5_14b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "musicgen-medium": "musicgen_medium",
+    "tinyllama-1.1b": "tinyllama_1p1b",
+    "llama-3.2-1b": "llama3p2_1b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE
+
+
+def lora_targets(cfg: ModelConfig) -> tuple:
+    """Default LoRA target modules per family (paper: attention q/k/v/o;
+    adapted for attention-free / hybrid / MLA families — DESIGN.md §4)."""
+    if cfg.use_mla:
+        return ("wq_a", "wq_b", "wkv_a", "wkv_b", "wo")
+    if cfg.family == "ssm":
+        return ("wr", "wk", "wv", "wg", "wo")
+    if cfg.family == "hybrid":
+        return ("wq", "wk", "wv", "wo", "in_proj", "out_proj")
+    return ("wq", "wk", "wv", "wo")
+
+
+def long_context_variant(cfg: ModelConfig, window: int = 8192) -> ModelConfig:
+    """Sub-quadratic variant for long_500k: SSM/hybrid-native archs are
+    already O(1)-state; full-attention archs get a sliding window (documented
+    in DESIGN.md §Shape-skips)."""
+    if cfg.family == "ssm":
+        return cfg
+    return cfg.replace(sliding_window=window)

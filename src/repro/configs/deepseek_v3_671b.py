@@ -1,0 +1,45 @@
+"""deepseek-v3-671b — MLA, 1 shared + 256 routed experts top-8, MTP.
+[arXiv:2412.19437]
+
+61L d_model=7168 128H (GQA kv=128 → MLA) d_ff=2048 vocab=129280,
+MoE 256e top-8.  d_ff=2048 is the per-expert (and, per the assignment,
+dense-layer) intermediate size; the first 3 layers are dense, the remainder
+MoE with one shared expert; sigmoid router scoring (V3 style); MLA caches
+only the compressed latent (kv_lora_rank 512 + 64 RoPE dims) at decode.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=129280,
+    num_experts=256,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    first_dense_layers=3,
+    router_sigmoid=True,
+    router_aux_coef=0.001,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    mtp_depth=1,
+    source="arXiv:2412.19437",
+)
+
+SMOKE = CONFIG.replace(
+    name="deepseek-v3-smoke", num_layers=3, d_model=256, num_heads=4,
+    num_kv_heads=4, head_dim=64, d_ff=256, vocab_size=512,
+    num_experts=4, experts_per_token=2, moe_d_ff=128, first_dense_layers=1,
+    q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32, qk_rope_head_dim=16,
+    v_head_dim=32, dtype="float32",
+)

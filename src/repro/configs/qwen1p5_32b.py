@@ -1,0 +1,27 @@
+"""qwen1.5-32b — dense, QKV bias. [hf:Qwen/Qwen1.5-0.5B family scaling]
+
+64L d_model=5120 40H (GQA kv=40) d_ff=27392 vocab=152064.
+decode_32k uses the int8 KV cache (bf16 cache would be 21.5 GB/device on a
+v5e-256 — over HBM; see DESIGN.md §Shape-skips).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen1.5-0.5B",
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen1.5-smoke", num_layers=2, d_model=256, num_heads=4,
+    num_kv_heads=4, head_dim=64, d_ff=512, vocab_size=512, dtype="float32",
+)

@@ -1,0 +1,26 @@
+"""rwkv6-1.6b "Finch" — attention-free, data-dependent decay. [arXiv:2404.05892]
+
+24L d_model=2048 (attn-free) d_ff=7168 vocab=65536.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,          # informational; time-mix heads = d / rwkv_head_dim
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    rwkv_head_dim=64,
+    rwkv_decay_lora=64,
+    source="arXiv:2404.05892",
+)
+
+SMOKE = CONFIG.replace(
+    name="rwkv6-smoke", num_layers=2, d_model=256, num_heads=4,
+    num_kv_heads=4, head_dim=64, d_ff=512, vocab_size=512,
+    rwkv_head_dim=32, rwkv_decay_lora=16, dtype="float32",
+)

@@ -1,0 +1,191 @@
+"""Federated fine-tuning orchestration (paper §4.1 setup).
+
+Simulates the full loop: 100 clients with Dirichlet(0.5) non-IID data, 10
+sampled per round, local LoRA fine-tuning, server aggregation by any of the
+five methods, global-model evaluation and per-round communication accounting.
+
+Per-method client/semantics (faithful to the paper):
+  * fedit / florist : clients resume from the global adapters matched to
+    their local rank (truncate / zero-pad, Alg. 1);
+  * ffa             : A frozen at the shared init, only B trained/averaged;
+  * flora           : the stacked global adapters are merged into the frozen
+    base and clients re-init fresh adapters each round;
+  * flexlora        : each client starts from its own rank-r_k SVD cut.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core import costs as C
+from repro.core.aggregation import AggResult, aggregate
+from repro.data.synthetic import ClientDataset, make_eval_data, make_federated_data
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init
+from repro.peft.lora import init_lora, match_rank, merge_lora
+from repro.train.step import make_eval_step, make_train_step
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    eval_loss: float
+    eval_acc: float
+    upload_params: int
+    download_params: int
+    download_rank: float
+    global_rank_total: int
+
+
+class FederatedTrainer:
+    def __init__(self, cfg: ModelConfig, fed: FedConfig, lora: LoRAConfig,
+                 optim: OptimConfig, clients: Optional[List[ClientDataset]] = None,
+                 eval_data: Optional[Dict] = None, batch_size: int = 8,
+                 local_steps: int = 4, seq_len: int = 64, svd_method: str = "svd",
+                 targets: Optional[tuple] = None,
+                 dp_clip: float = 0.0, dp_sigma: float = 0.0):
+        self.cfg, self.fed, self.lora, self.optim = cfg, fed, lora, optim
+        self.batch_size, self.local_steps = batch_size, local_steps
+        self.svd_method = svd_method
+        # client-level differential privacy (beyond-paper; see core/privacy)
+        self.dp_clip, self.dp_sigma = dp_clip, dp_sigma
+        self.rng = np.random.default_rng(fed.seed)
+        key = jax.random.PRNGKey(fed.seed)
+        kp, ka = jax.random.split(key)
+        self.params = T.init(cfg, kp)
+        self.targets = targets or lora.targets
+        self.client_ranks = fed.client_ranks()
+        self.max_rank = max(self.client_ranks)
+        # one shared init at max rank; client k uses its first r_k rows
+        self.A_init_full = init_lora(self.params, self.targets, self.max_rank,
+                                     float(self.max_rank), ka)
+        self.global_state: Optional[AggResult] = None
+        self.clients = clients if clients is not None else make_federated_data(
+            num_clients=fed.num_clients, seq_len=seq_len,
+            vocab=cfg.vocab_size, alpha=fed.dirichlet_alpha, seed=fed.seed)
+        ev = eval_data if eval_data is not None else make_eval_data(
+            seq_len=seq_len, vocab=cfg.vocab_size)
+        self.eval_batch = {k: jnp.asarray(v) for k, v in ev.items()}
+        self._step_cache: Dict = {}
+        self._eval = jax.jit(make_eval_step(cfg, loss_chunk=seq_len))
+        self.history: List[RoundRecord] = []
+
+    # -- helpers -------------------------------------------------------------
+    def _train_step(self, rank: int):
+        key = (rank, self.fed.method == "ffa")
+        if key not in self._step_cache:
+            self._step_cache[key] = jax.jit(make_train_step(
+                self.cfg, self.optim, remat=False, loss_chunk=64,
+                b_only=(self.fed.method == "ffa")))
+        return self._step_cache[key]
+
+    def _client_init(self, k: int) -> Dict:
+        """Build client k's starting adapters for this round."""
+        rk = self.client_ranks[k]
+        a_init = match_rank(self.A_init_full, rk)
+
+        if self.global_state is None or self.fed.method == "flora":
+            # round 1 (all methods) / every round (flora — base was merged,
+            # adapters restart): B = 0, A = shared init
+            def mk(path, leaf):
+                last = getattr(path[-1], "key", None)
+                return jnp.zeros_like(leaf) if last == "B" else leaf
+            return jax.tree_util.tree_map_with_path(mk, a_init)
+
+        # fedit / florist / flexlora: truncate-or-pad the global adapters to
+        # the client's rank (Alg. 1).  For FlexLoRA the global tree holds the
+        # full SVD sorted by σ, so match_rank == the paper's per-client cut.
+        g = match_rank(self.global_state.global_adapters, rk)
+        if self.fed.method == "ffa":
+            g = self._ffa_compose(g, a_init)   # A stays at the frozen init
+        return g
+
+    def _ffa_compose(self, g: Dict, a_init: Dict) -> Dict:
+        def fix(path, gl):
+            last = getattr(path[-1], "key", None)
+            if last == "A":
+                node = a_init
+                for kk in [getattr(k, "key", getattr(k, "idx", None)) for k in path]:
+                    node = node[kk]
+                return node
+            return gl
+        return jax.tree_util.tree_map_with_path(fix, g)
+
+    # -- main loop ------------------------------------------------------------
+    def run_round(self, rnd: int) -> RoundRecord:
+        fed = self.fed
+        sampled = list(self.rng.choice(fed.num_clients, fed.clients_per_round,
+                                       replace=False))
+        updates, weights, ranks = [], [], []
+        n_total = sum(self.clients[k].num_samples for k in sampled)
+        for k in sampled:
+            rk = self.client_ranks[k]
+            adapters = self._client_init(k)
+            init_adapters = adapters
+            opt_state = adamw_init(adapters)
+            step = self._train_step(rk)
+            data = self.clients[k]
+            brng = np.random.default_rng(1000 * rnd + k)
+            steps_done = 0
+            while steps_done < self.local_steps:
+                for batch in data.batches(min(self.batch_size, data.num_samples), brng):
+                    jb = {kk: jnp.asarray(v) for kk, v in batch.items()}
+                    adapters, opt_state, _ = step(self.params, adapters, opt_state, jb)
+                    steps_done += 1
+                    if steps_done >= self.local_steps:
+                        break
+            if self.dp_clip:
+                from repro.core.privacy import clip_client_adapters
+                adapters = clip_client_adapters(adapters, init_adapters,
+                                                self.dp_clip)
+            updates.append(adapters)
+            weights.append(self.clients[k].num_samples / n_total)
+            ranks.append(rk)
+
+        agg = aggregate(fed.method, updates, weights, tau=fed.tau,
+                        A_init=self.A_init_full, client_ranks=ranks,
+                        zero_padding=fed.zero_padding, svd_method=self.svd_method)
+        if self.dp_sigma and agg.global_adapters is not None:
+            from repro.core.privacy import add_gaussian_noise
+            key = jax.random.PRNGKey(10_000 + rnd)
+            agg.global_adapters = add_gaussian_noise(
+                agg.global_adapters, self.dp_sigma, self.dp_clip or 1.0,
+                fed.clients_per_round, key)
+        dims = C.leaf_dims(updates[0])
+        up = C.upload_params(fed.method, updates)
+        down = C.download_params(fed.method, agg, dims, fed.clients_per_round, ranks)
+
+        if agg.merge_into_base:      # FLoRA: fold stack into the base weights
+            self.params = merge_lora(self.params, agg.global_adapters)
+            eval_params = self.params
+        else:
+            eval_params = merge_lora(self.params, agg.global_adapters)
+        self.global_state = agg
+
+        m = self._eval(eval_params, None, self.eval_batch)
+        rec = RoundRecord(
+            round=rnd,
+            eval_loss=float(m["loss"]),
+            eval_acc=float(m["accuracy"]),
+            upload_params=up,
+            download_params=down,
+            download_rank=C.total_download_rank(agg),
+            global_rank_total=agg.total_download_rank(),
+        )
+        self.history.append(rec)
+        return rec
+
+    def run(self, num_rounds: Optional[int] = None, verbose: bool = False
+            ) -> List[RoundRecord]:
+        for rnd in range(num_rounds or self.fed.num_rounds):
+            rec = self.run_round(rnd)
+            if verbose:
+                print(f"[{self.fed.method:9s}] round {rnd:3d} "
+                      f"loss={rec.eval_loss:.4f} acc={rec.eval_acc:.3f} "
+                      f"down_rank={rec.download_rank:.0f}")
+        return self.history

@@ -1,0 +1,75 @@
+"""Differential privacy for client updates (beyond-paper).
+
+FFA-LoRA's motivating context (Sun et al. 2024, "Improving LoRA in
+privacy-preserving federated learning") is DP-SGD-style training; the
+FLoRIST paper inherits the privacy framing but does not implement noise.
+We provide the standard client-level DP mechanism:
+
+  1. clip each client's adapter update to L2 norm ≤ C (flattened over the
+     whole adapter tree, the update being the delta from the round's init),
+  2. add Gaussian noise N(0, σ²C²/K) to the *aggregated* update
+     (server-side, after FLoRIST truncation — noise is added in the rank-p
+     global adapter factor space, which keeps the download compact).
+
+Interaction with SVT (documented): thresholding *before* noising means the
+noise does not inflate the kept rank; the Eckart–Young bound then holds for
+the pre-noise aggregate.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_l2(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: (x.astype(jnp.float32)
+                                      + y.astype(jnp.float32)).astype(x.dtype), a, b)
+
+
+def clip_update(update: Any, clip_norm: float) -> Tuple[Any, jnp.ndarray]:
+    """Scale the whole update tree so its global L2 ≤ clip_norm."""
+    n = global_l2(update)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), update), n
+
+
+def clip_client_adapters(adapters: Any, init_adapters: Any,
+                         clip_norm: float) -> Any:
+    """Clip the *delta* from the round's starting adapters, re-anchor."""
+    delta = tree_sub(adapters, init_adapters)
+    clipped, _ = clip_update(delta, clip_norm)
+    return tree_add(init_adapters, clipped)
+
+
+def add_gaussian_noise(tree: Any, sigma: float, clip_norm: float,
+                       num_clients: int, key: jax.Array) -> Any:
+    """Server-side Gaussian mechanism: noise std = σ·C / K per coordinate
+    (client-level DP with sensitivity C/K under mean aggregation)."""
+    std = sigma * clip_norm / max(num_clients, 1)
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (l + std * jax.random.normal(k, l.shape)).astype(l.dtype)
+        if l.ndim >= 2 else l           # don't noise scalars ("scale")
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def noise_multiplier_for_epsilon(epsilon: float, delta: float = 1e-5) -> float:
+    """Loose classical Gaussian-mechanism calibration (one release):
+    σ ≥ sqrt(2 ln(1.25/δ)) / ε.  (Per-round; composition is left to an
+    accountant — this module provides the mechanism, not the bookkeeping.)"""
+    import math
+    return math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon

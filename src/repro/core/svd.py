@@ -1,0 +1,172 @@
+"""FLoRIST's efficient SVD pipeline (paper §3, Eqs. 1–4).
+
+Given client adapters ``B_k ∈ R^{m×r_k}``, ``A_k ∈ R^{r_k×n}`` and weights
+``w_k = n_k / N``:
+
+    B_stack = [B_1 | ... | B_K]              (m × r),  r = Σ r_k
+    A_stack = [w_1 A_1 ; ... ; w_K A_K]      (r × n)
+    ΔW      = B_stack A_stack                 (never formed!)
+
+    B_stack = U_B S_B V_Bᵀ,  A_stack = U_A S_A V_Aᵀ          (thin SVDs)
+    Q = V_Bᵀ U_A,  P = S_B Q S_A ∈ R^{r×r}                    (Eq. 2)
+    SVD(P) = U_P S_P V_Pᵀ  →  singular values of ΔW are S_P   (exact)
+    B_g = (U_B U_P)[:, :p] S_P[:p,:p],  A_g = (V_Pᵀ V_Aᵀ)[:p, :]   (Eq. 3)
+
+with ``p`` from the energy threshold (Eq. 6):
+    p = min { p : Σ_{i≤p} σ_i² / Σ_i σ_i² ≥ τ }.
+
+Two thin-SVD backends:
+  * ``svd``  — LAPACK/XLA divide-and-conquer (default; exact),
+  * ``gram`` — eigh of the r×r Gram matrix (TPU-idiomatic for tall-skinny
+    stacks: two MXU matmuls + small eigh instead of an m×r Householder
+    pipeline; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SVDResult(NamedTuple):
+    u: jnp.ndarray
+    s: jnp.ndarray
+    vt: jnp.ndarray
+
+
+def thin_svd(x: jnp.ndarray, method: str = "svd") -> SVDResult:
+    """Thin SVD of x (m×n, any aspect). method: 'svd' | 'gram'."""
+    if method == "svd":
+        u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+        return SVDResult(u, s, vt)
+    if method == "gram":
+        return gram_svd(x)
+    raise ValueError(method)
+
+
+def gram_svd(x: jnp.ndarray) -> SVDResult:
+    """Thin SVD via the Gram trick (TPU route).
+
+    For tall x (m ≥ n): eigh(xᵀx) = V diag(s²) Vᵀ; U = x V / s.
+    For wide x: transpose, recurse, swap.  Numerically fine for LoRA-scale
+    conditioning (σ_max/σ_min ≪ 1/√eps in fp32); exactness is asserted
+    against the LAPACK route in tests.
+    """
+    m, n = x.shape
+    if m < n:
+        r = gram_svd(x.T)
+        return SVDResult(r.vt.T, r.s, r.u.T)
+    g = x.T @ x                                   # (n, n)
+    w, v = jnp.linalg.eigh(g)                      # ascending
+    w = w[::-1]
+    v = v[:, ::-1]
+    s = jnp.sqrt(jnp.clip(w, 0.0))
+    u = (x @ v) / jnp.maximum(s, 1e-20)[None, :]
+    return SVDResult(u, s, v.T)
+
+
+def energy_rank(s: jnp.ndarray, tau: float) -> int:
+    """Smallest p with Σ_{i≤p} σ_i² / Σ σ_i² ≥ τ (concrete int, host side)."""
+    e = jnp.cumsum(s.astype(jnp.float64) ** 2) if s.dtype == jnp.float64 \
+        else jnp.cumsum(s.astype(jnp.float32) ** 2)
+    total = e[-1]
+    frac = e / jnp.maximum(total, 1e-30)
+    p = int(jnp.searchsorted(frac, tau, side="left")) + 1
+    return min(p, int(s.shape[0]))
+
+
+def energy_rank_traced(s: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """Traced (jit-safe) version: returns p as an int32 scalar."""
+    e = jnp.cumsum(s.astype(jnp.float32) ** 2)
+    frac = e / jnp.maximum(e[-1], 1e-30)
+    return jnp.minimum(jnp.searchsorted(frac, tau, side="left") + 1, s.shape[0]).astype(jnp.int32)
+
+
+def knee_rank(s: jnp.ndarray) -> int:
+    """BEYOND-PAPER (paper §5 future work (i)): automatic per-layer rank
+    selection by knee-point detection on the cumulative-energy curve —
+    the point of maximum distance from the chord between (0, 0) and
+    (r, 1).  No tunable τ; adapts to each layer's spectrum shape."""
+    e = jnp.cumsum(s.astype(jnp.float32) ** 2)
+    total = jnp.maximum(e[-1], 1e-30)
+    frac = e / total                                   # (r,)
+    r = s.shape[0]
+    x = (jnp.arange(1, r + 1, dtype=jnp.float32)) / r
+    # distance from the chord y = x (both endpoints normalized)
+    dist = frac - x
+    p = int(jnp.argmax(dist)) + 1
+    return max(1, min(p, r))
+
+
+def stack_adapters(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
+                   weights: Sequence[float]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted stacking (paper: weights fold into A_stack)."""
+    B_stack = jnp.concatenate(list(Bs), axis=1)                      # (m, r)
+    A_stack = jnp.concatenate([w * A for w, A in zip(weights, As)], axis=0)
+    return B_stack, A_stack
+
+
+class FloristOut(NamedTuple):
+    B_g: jnp.ndarray          # (m, p)  — includes S_P scaling
+    A_g: jnp.ndarray          # (p, n)
+    spectrum: jnp.ndarray     # full S_P (r,)
+    p: int
+
+
+def florist_core(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
+                 weights: Sequence[float], tau,
+                 svd_method: str = "svd", max_rank: int = 0) -> FloristOut:
+    """The full FLoRIST server pipeline for one weight matrix (Alg. 1,
+    server block).  Host-side: returns concretely-truncated adapters.
+    tau: float in (0,1], or "auto" for knee-point rank selection
+    (beyond-paper; paper §5 future-work (i))."""
+    B_stack, A_stack = stack_adapters(Bs, As, weights)
+    f32 = jnp.float32
+    B_stack, A_stack = B_stack.astype(f32), A_stack.astype(f32)
+    ub, sb, vbt = thin_svd(B_stack, svd_method)
+    ua, sa, vat = thin_svd(A_stack, svd_method)
+    q = vbt @ ua                                   # (r, r)
+    p_core = (sb[:, None] * q) * sa[None, :]       # P = S_B Q S_A
+    up, sp, vpt = thin_svd(p_core, "svd")          # r×r — always LAPACK-size
+    p = knee_rank(sp) if tau == "auto" else energy_rank(sp, tau)
+    if max_rank:
+        p = min(p, max_rank)
+    B_g = (ub @ up)[:, :p] * sp[None, :p]
+    A_g = (vpt @ vat)[:p, :]
+    return FloristOut(B_g, A_g, sp, p)
+
+
+def florist_core_padded(B_stack: jnp.ndarray, A_stack: jnp.ndarray, tau: float,
+                        svd_method: str = "svd"):
+    """Jit-safe variant: full-rank outputs with columns ≥ p zeroed (same ΔW).
+
+    Used by the sharded multi-pod aggregation where shapes must be static.
+    Returns (B_g_full (m,r), A_g_full (r,n), spectrum (r,), p int32).
+    """
+    f32 = jnp.float32
+    B_stack, A_stack = B_stack.astype(f32), A_stack.astype(f32)
+    ub, sb, vbt = thin_svd(B_stack, svd_method)
+    ua, sa, vat = thin_svd(A_stack, svd_method)
+    q = vbt @ ua
+    p_core = (sb[:, None] * q) * sa[None, :]
+    up, sp, vpt = thin_svd(p_core, "svd")
+    p = energy_rank_traced(sp, tau)
+    r = sp.shape[0]
+    keep = (jnp.arange(r) < p)
+    B_g = (ub @ up) * jnp.where(keep, sp, 0.0)[None, :]
+    A_g = (vpt @ vat) * keep[:, None]
+    return B_g, A_g, sp, p
+
+
+def reconstruction_error(Bs, As, weights, B_g, A_g) -> float:
+    """‖ΔW − B_g A_g‖_F computed without forming ΔW twice (small shapes in
+    tests — forms it once)."""
+    dw = sum(w * (B @ A) for w, B, A in zip(weights, Bs, As))
+    return float(jnp.linalg.norm(dw - B_g @ A_g))
+
+
+def eckart_young_bound(spectrum: jnp.ndarray, p: int) -> float:
+    """(Σ_{i>p} σ_i²)^{1/2} — the paper's Eq. 5 bound."""
+    tail = spectrum[p:]
+    return float(jnp.sqrt(jnp.sum(tail.astype(jnp.float32) ** 2)))

@@ -1,0 +1,50 @@
+"""Tall-skinny Gram kernel: C = XᵀX for adapter stacks X (m × r), m ≫ r.
+
+This is the MXU-friendly building block of the server-side stacked SVD
+(Gram/eigh route, DESIGN.md §3): the m-dimension is streamed through VMEM in
+row panels while the small r×r accumulator stays resident; one pass over X
+instead of a Householder QR pipeline.
+
+Grid: (m/bm,) sequential; fp32 accumulator in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_scr, *, nm: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]
+    acc_scr[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+    @pl.when(i == nm - 1)
+    def _flush():
+        o_ref[...] = acc_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def adapter_gram_kernel(x, bm: int = 512, interpret: bool = False):
+    """x: (m, r) -> xᵀx (r, r) fp32."""
+    m, r = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    nm = m // bm
+    return pl.pallas_call(
+        functools.partial(_kernel, nm=nm),
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, r), jnp.float32)],
+        interpret=interpret,
+    )(x)

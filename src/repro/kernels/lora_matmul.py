@@ -1,0 +1,52 @@
+"""Fused LoRA projection kernel: y = x W + (x Aᵀ) Bᵀ  (B pre-scaled).
+
+The rank-r intermediate z = x Aᵀ is produced and consumed inside VMEM —
+it never round-trips HBM, which is the point of fusing (XLA will otherwise
+materialize z for the (M, r) panel).  Adapter panels A (r × din) and
+B_block (bn × r) are small (r ≤ 128) and held resident.
+
+Tiling: grid (M/bm, dout/bn); every block sees the full contraction dim
+(din ≤ 8k → x-block ≤ 2 MB at bm=128, W-block ≤ 2 MB at bn=128).
+MXU-aligned defaults bm = bn = 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref):
+    x = x_ref[...]
+    acc = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    z = jnp.dot(x, a_ref[...].T, preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(z.astype(x.dtype), b_ref[...].T,
+                        preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def lora_matmul_kernel(x, w, a, b_scaled, bm: int = 128, bn: int = 128,
+                       interpret: bool = False):
+    """x: (M, din), w: (din, dout), a: (r, din), b_scaled: (dout, r)."""
+    M, din = x.shape
+    dout = w.shape[1]
+    bm = min(bm, M)
+    bn = min(bn, dout)
+    assert M % bm == 0 and dout % bn == 0, (M, bm, dout, bn)
+    grid = (M // bm, dout // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, bn), lambda i, j: (0, j)),
+            pl.BlockSpec(a.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, a.shape[0]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, dout), x.dtype),
+        interpret=interpret,
+    )(x, w, a, b_scaled)

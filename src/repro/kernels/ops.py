@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced Python, validating the exact TPU code path.
+Shape padding to block multiples is handled here so callers can use
+arbitrary sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.adapter_gram import adapter_gram_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.lora_matmul import lora_matmul_kernel
+from repro.kernels.wkv6 import wkv6_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def lora_matmul(x, w, a, b, scale, bm: int = 128, bn: int = 128):
+    """x: (..., din) -> (..., dout), fused base + adapter matmul."""
+    lead = x.shape[:-1]
+    din = x.shape[-1]
+    dout = w.shape[1]
+    xf = x.reshape(-1, din)
+    xf, M = _pad_to(xf, 0, bm)
+    b_scaled = (b * scale).astype(w.dtype)
+    wp, _ = _pad_to(w, 1, bn)
+    bp, _ = _pad_to(b_scaled, 0, bn)
+    y = lora_matmul_kernel(xf, wp, a.astype(x.dtype), bp.astype(x.dtype),
+                           bm=bm, bn=bn, interpret=_interpret())
+    return y[:M, :dout].reshape(*lead, dout)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    """GQA flash attention; falls back to the reference for tiny shapes."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    if S % min(bq, S) or T % min(bk, T):
+        return ref.flash_attention_ref(q, k, v, causal, window).astype(q.dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                 bq=bq, bk=bk, interpret=_interpret())
+    return out
+
+
+def wkv6(r, k, v, w, u, chunk: int = 256):
+    return wkv6_kernel(r, k, v, w, u, chunk=min(chunk, r.shape[1]),
+                       interpret=_interpret())
+
+
+def adapter_gram(x, bm: int = 512):
+    x, m = _pad_to(x, 0, min(bm, x.shape[0]))
+    return adapter_gram_kernel(x, bm=min(bm, x.shape[0]), interpret=_interpret())

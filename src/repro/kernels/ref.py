@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose
+tests and the CPU execution path)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """y = x @ w + scale * (x @ aᵀ) @ bᵀ.
+    x: (M, din), w: (din, dout), a: (r, din), b: (dout, r)."""
+    y = x @ w
+    z = x @ a.T.astype(x.dtype)
+    return y + (z @ b.T.astype(x.dtype)) * scale
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd) grouped-query attention, fp32 softmax."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, g, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32))
+    s = s * (1.0 / math.sqrt(hd))
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        m = kpos <= qpos
+        if window:
+            m &= kpos > (qpos - window)
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV6 recurrence (see repro.models.rwkv.wkv_scan).
+    r,k,v,w: (B,S,H,hd) with w = log-decay (<0); u: (H,hd). fp32 out."""
+    B, S, H, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[..., None] * kv)
+        state = jnp.exp(wt)[..., None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1)
+
+
+def adapter_gram_ref(x):
+    """Gram matrix xᵀ x in fp32. x: (m, r)."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf

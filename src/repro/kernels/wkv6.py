@@ -1,0 +1,75 @@
+"""RWKV6 WKV recurrence kernel.
+
+The recurrence is sequential in time but embarrassingly parallel over
+(batch × head).  Grid: (B·H, S/chunk) with the chunk axis sequential — the
+(hd × hd) WKV state lives in VMEM scratch and persists across sequential
+grid steps; inside a chunk, a fori_loop advances one token at a time with
+rank-1 outer-product updates (VPU work: hd=64 → 64×64 tiles).
+
+This is the TPU re-blocking of the original CUDA wkv kernel: instead of one
+thread-block per (b,h) with warp-level state in registers, we keep the state
+resident in VMEM and stream r/k/v/w chunks HBM→VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_scr, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    u = u_ref[0].astype(jnp.float32)                  # (hd,)
+
+    def step(t, state):
+        rt = r_ref[0, t].astype(jnp.float32)          # (hd,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                # (hd, hd)
+        y = jnp.sum(rt[:, None] * (state + u[:, None] * kv), axis=0)
+        o_ref[0, t] = y.astype(o_ref.dtype)
+        return jnp.exp(wt)[:, None] * state + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_kernel(r, k, v, w, u, chunk: int = 256, interpret: bool = False):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd). Returns fp32 (B,S,H,hd)."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+    uf = jnp.tile(u, (B, 1))                          # (B*H, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, hd), lambda bh, ic: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,480 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, with 512 placeholder host devices.
+
+For each combo this prints/records:
+  * compiled.memory_analysis()  — bytes per device (proves it fits),
+  * compiled.cost_analysis()    — FLOPs / bytes for the roofline,
+  * collective bytes parsed from the optimized HLO (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute result sizes),
+and writes a JSON record under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import INPUT_SHAPES, LoRAConfig, ModelConfig, OptimConfig, ShapeConfig
+from repro.configs import ASSIGNED, get_config, long_context_variant, lora_targets
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_pspecs, cache_pspecs, params_pspecs,
+                                   replicated_pspecs, to_shardings)
+from repro.launch.specs import cache_specs, input_specs, state_specs
+from repro.train.step import make_serve_step, make_train_step, make_prefill_step
+
+# ---------------------------------------------------------------------------
+# v5e hardware constants (roofline)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or op in _COLLECTIVES:
+            base = op
+            for c in _COLLECTIVES:
+                if op.startswith(c):
+                    base = c
+                    break
+            else:
+                continue
+            out[base] += _shape_bytes(m.group(1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step construction
+# ---------------------------------------------------------------------------
+
+def default_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Microbatch count: keep the per-device residual-stream carry
+    (tokens/µbatch × d_model × 2B × L) around ≤ 2 GiB, capped so the
+    microbatch still spans the data axis."""
+    if shape.mode != "train":
+        return 1
+    from repro.launch.mesh import axis_size
+    dp = axis_size(mesh, "data") * axis_size(mesh, "pod")
+    carry = shape.global_batch * shape.seq_len // dp * cfg.d_model * 2 * cfg.num_layers
+    micro = 1
+    while carry / micro > 2e9 and micro < shape.global_batch // dp:
+        micro *= 2
+    return micro
+
+
+def build_dryrun(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 lora_rank: int = 16, kv_cache_dtype: str = "bfloat16",
+                 use_kernels: bool = False, loss_chunk: int = 512,
+                 grad_accum: int = 0):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    if grad_accum == 0:
+        grad_accum = default_grad_accum(cfg, shape, mesh)
+    targets = lora_targets(cfg)
+    lora = LoRAConfig(rank=lora_rank, alpha=float(lora_rank), targets=targets)
+    optim = OptimConfig()
+    params_s, adapters_s, opt_s = state_specs(cfg, lora, targets)
+    batch_s = input_specs(cfg, shape)
+
+    params_ps = params_pspecs(mesh, cfg, params_s)
+    adapters_ps = replicated_pspecs(adapters_s)
+    opt_ps = replicated_pspecs(opt_s)
+    batch_ps = batch_pspecs(mesh, cfg, batch_s)
+
+    if shape.mode == "train":
+        step = make_train_step(cfg, optim, remat=True, loss_chunk=loss_chunk,
+                               use_kernels=use_kernels, grad_accum=grad_accum)
+        fn = jax.jit(
+            step,
+            in_shardings=(to_shardings(mesh, params_ps),
+                          to_shardings(mesh, adapters_ps),
+                          to_shardings(mesh, opt_ps),
+                          to_shardings(mesh, batch_ps)),
+            out_shardings=(to_shardings(mesh, adapters_ps),
+                           to_shardings(mesh, opt_ps),
+                           NamedSharding(mesh, P())),
+        )
+        return fn, (params_s, adapters_s, opt_s, batch_s)
+
+    from repro.launch.mesh import axis_size
+    vocab_ax = "model" if cfg.vocab_size % axis_size(mesh, "model") == 0 else None
+
+    if shape.mode == "prefill":
+        step = make_prefill_step(cfg, use_kernels=use_kernels)
+        fn = jax.jit(
+            step,
+            in_shardings=(to_shardings(mesh, params_ps),
+                          to_shardings(mesh, adapters_ps),
+                          to_shardings(mesh, batch_ps)),
+            out_shardings=NamedSharding(mesh, P(None, vocab_ax)),
+        )
+        return fn, (params_s, adapters_s, batch_s)
+
+    # decode
+    kv_dtype = jnp.int8 if kv_cache_dtype == "int8" else jnp.dtype(cfg.dtype)
+    cache_s = cache_specs(cfg, shape, kv_dtype)
+    cache_ps = cache_pspecs(mesh, cfg, cache_s)
+    step = make_serve_step(cfg)
+    fn = jax.jit(
+        step,
+        in_shardings=(to_shardings(mesh, params_ps),
+                      to_shardings(mesh, adapters_ps),
+                      to_shardings(mesh, cache_ps),
+                      to_shardings(mesh, batch_ps)),
+        out_shardings=(NamedSharding(mesh, P(None, vocab_ax)),
+                       to_shardings(mesh, cache_ps)),
+        donate_argnums=(2,),
+    )
+    return fn, (params_s, adapters_s, cache_s, batch_s)
+
+
+def pick_kv_dtype(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """int8 cache where bf16 would exceed v5e HBM (DESIGN.md §Shape-skips).
+    The MHA archs (kv heads = heads) carry 2·d_model bytes/token/layer of
+    bf16 cache — at 32k × batch 128 that is 21–33 GiB/device on a v5e-256."""
+    if shape.mode != "decode":
+        return "bfloat16"
+    if shape.name == "decode_32k" and cfg.name in (
+            "qwen1.5-32b", "phi-3-vision-4.2b", "musicgen-medium"):
+        return "int8"
+    return "bfloat16"
+
+
+def arch_shape_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    return cfg
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            use_kernels: bool = False, lora_rank: int = 16,
+            loss_chunk: int = 512, save: bool = True,
+            verbose: bool = True) -> Dict[str, Any]:
+    from repro.configs import _ALIAS
+    arch = _ALIAS.get(arch, arch)          # canonical record names
+    shape = INPUT_SHAPES[shape_name]
+    cfg = arch_shape_config(arch, shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    kv = pick_kv_dtype(cfg, shape)
+
+    ga = default_grad_accum(cfg, shape, mesh)
+    t0 = time.time()
+    fn, args = build_dryrun(cfg, shape, mesh, lora_rank=lora_rank,
+                            kv_cache_dtype=kv, use_kernels=use_kernels,
+                            loss_chunk=loss_chunk, grad_accum=ga)
+    from repro.common.pjit_utils import active_mesh
+    with mesh, active_mesh(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(n_chips),
+        "mode": shape.mode,
+        "kv_cache_dtype": kv,
+        "grad_accum": ga,
+        "sliding_window": cfg.sliding_window,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "roofline": {
+            # cost_analysis is per-device post-SPMD; global = per_device*chips
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / ICI_BW,
+        },
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    r = rec["roofline"]
+    dom = max(r, key=r.get)
+    rec["roofline"]["dominant"] = dom
+
+    if verbose:
+        hbm_gib = (rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+                   + rec["memory"]["output_bytes"]) / 2**30
+        print(f"[dryrun] {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compile={t_compile:6.1f}s mem/dev={hbm_gib:7.2f}GiB "
+              f"flops/dev={flops:.3e} bytes/dev={bytes_acc:.3e} "
+              f"coll/dev={coll_total:.3e} dominant={dom}")
+    if save:
+        outdir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                              "experiments", "dryrun")
+        os.makedirs(outdir, exist_ok=True)
+        fname = os.path.join(outdir,
+                             f"{arch}_{shape_name}_{rec['mesh']}.json".replace("/", "_"))
+        if os.path.exists(fname):     # preserve an existing analysis section
+            with open(fname) as f:
+                old = json.load(f)
+            if "analysis" in old:
+                rec["analysis"] = old["analysis"]
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# roofline analysis lowering (exact FLOPs/bytes/collectives)
+# ---------------------------------------------------------------------------
+# XLA's cost_analysis counts a while-loop body ONCE, so the scanned fit-proof
+# compile under-reports FLOPs by ~L×.  For the roofline we therefore lower
+# *unrolled* variants at two reduced depths (L1, L2) on the same mesh and
+# extrapolate linearly in depth:  F(L) ≈ F(L1) + (F(L2)-F(L1))/(L2-L1)·(L-L1).
+# Known approximations (documented in EXPERIMENTS.md §Roofline):
+#   * deepseek: the 2 extra dense layers are priced as MoE layers (≲3%);
+#   * rwkv: the WKV time scan stays rolled (flops ≲2% of the block; its HBM
+#     state traffic is a CPU-lowering artifact — the Pallas kernel keeps the
+#     state in VMEM).
+
+def _reduced_pair(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        l1, l2 = cfg.attn_every, 2 * cfg.attn_every
+        return cfg.replace(num_layers=l1), cfg.replace(num_layers=l2), l1, l2
+    kw = {}
+    if cfg.first_dense_layers:
+        kw["first_dense_layers"] = 1
+    return (cfg.replace(num_layers=2, **kw), cfg.replace(num_layers=4, **kw),
+            2, 4)
+
+
+def run_analysis(arch: str, shape_name: str, multi_pod: bool = False,
+                 lora_rank: int = 16, verbose: bool = True) -> Dict[str, Any]:
+    from repro.common import flags
+    from repro.configs import _ALIAS
+    arch = _ALIAS.get(arch, arch)          # canonical record names
+    shape = INPUT_SHAPES[shape_name]
+    cfg = arch_shape_config(arch, shape_name)
+    c1, c2, l1, l2 = _reduced_pair(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kv = pick_kv_dtype(cfg, shape)
+
+    def measure(c):
+        from repro.common.pjit_utils import active_mesh
+        fn, args = build_dryrun(c, shape, mesh, lora_rank=lora_rank,
+                                kv_cache_dtype=kv, grad_accum=1)
+        with mesh, active_mesh(mesh):
+            compiled = fn.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = collective_bytes(compiled.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                float(sum(coll.values())), coll)
+
+    flags.set_analysis_unroll(True)
+    try:
+        t0 = time.time()
+        f1, b1, cl1, _ = measure(c1)
+        f2, b2, cl2, coll2 = measure(c2)
+        dt = time.time() - t0
+    finally:
+        flags.set_analysis_unroll(False)
+
+    L = cfg.num_layers
+
+    def extrap(v1, v2):
+        slope = (v2 - v1) / (l2 - l1)
+        return max(v1 + slope * (L - l1), v1)
+
+    flops = extrap(f1, f2)
+    byts = extrap(b1, b2)
+    coll = extrap(cl1, cl2)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "layers_measured": [l1, l2],
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": coll,
+        "collective_breakdown_L2": coll2,
+        "analysis_wall_s": round(dt, 1),
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": byts / HBM_BW,
+            "collective_s": coll / ICI_BW,
+        },
+    }
+    r = rec["roofline"]
+    r["dominant"] = max(("compute_s", "memory_s", "collective_s"), key=r.get)
+
+    # merge into the dry-run record if present
+    outdir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+    fname = os.path.join(outdir, f"{arch}_{shape_name}_{rec['mesh']}.json")
+    base = {}
+    if os.path.exists(fname):
+        with open(fname) as f:
+            base = json.load(f)
+    base["analysis"] = rec
+    os.makedirs(outdir, exist_ok=True)
+    with open(fname, "w") as f:
+        json.dump(base, f, indent=2)
+    if verbose:
+        print(f"[analysis] {arch:22s} {shape_name:12s} "
+              f"flops/dev={flops:.3e} bytes/dev={byts:.3e} coll/dev={coll:.3e} "
+              f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"coll={r['collective_s']:.4f}s dom={r['dominant']} ({dt:.0f}s)")
+    return rec
+
+
+def run_aggregation_dryrun(multi_pod: bool = False, num_layers: int = 22,
+                           num_proj: int = 2, m: int = 2048, n: int = 2048,
+                           clients: int = 10, rank: int = 16,
+                           tau: float = 0.9, verbose: bool = True):
+    """Lower + compile the FLoRIST *server aggregation itself* as a sharded
+    TPU program (layers × projections sharded over 'model', Gram-route thin
+    SVDs) on the production mesh — the paper's Table-4 step as it would run
+    on the pod.  TinyLlama geometry by default."""
+    from repro.common.pjit_utils import active_mesh
+    from repro.core.distributed import make_sharded_florist
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    L = num_layers * num_proj
+    r = clients * rank
+    fn = make_sharded_florist(mesh, tau=tau, svd_method="gram")
+    Bs = jax.ShapeDtypeStruct((L, m, r), jnp.float32)
+    As = jax.ShapeDtypeStruct((L, r, n), jnp.float32)
+    with mesh, active_mesh(mesh):
+        compiled = fn.lower(Bs, As).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    rec = {
+        "kind": "florist_server_aggregation",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "geometry": {"layers": L, "m": m, "n": n, "stacked_rank": r},
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll,
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "est_seconds_compute": float(cost.get("flops", 0.0)) / PEAK_FLOPS,
+    }
+    outdir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"server_aggregation_{rec['mesh']}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=2)
+    if verbose:
+        print(f"[aggregation] {rec['mesh']} flops/dev={rec['flops_per_device']:.3e} "
+              f"coll/dev={sum(coll.values()):.3e} "
+              f"est_compute={rec['est_seconds_compute']*1e6:.1f}us")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--analyze", action="store_true",
+                    help="run the unrolled reduced-depth roofline lowering "
+                         "instead of the fit-proof compile")
+    ap.add_argument("--aggregation", action="store_true",
+                    help="dry-run the sharded FLoRIST server aggregation")
+    ap.add_argument("--lora-rank", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    if args.aggregation:
+        run_aggregation_dryrun(multi_pod=args.multi_pod)
+        return
+
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in combos:
+        try:
+            if args.analyze:
+                run_analysis(a, s, multi_pod=args.multi_pod,
+                             lora_rank=args.lora_rank)
+            else:
+                run_one(a, s, multi_pod=args.multi_pod,
+                        use_kernels=args.use_kernels, lora_rank=args.lora_rank)
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            failures.append((a, s, repr(e)[:200]))
+            print(f"[dryrun] FAIL {a} {s}: {e}", file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} failures:", file=sys.stderr)
+        for f in failures:
+            print("  ", f, file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall {len(combos)} combos lowered+compiled OK")
+
+
+if __name__ == "__main__":
+    main()

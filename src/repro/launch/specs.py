@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input and state object —
+the dry-run lowers against these (no allocation ever happens).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import LoRAConfig, ModelConfig, OptimConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init
+from repro.peft.lora import init_lora
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for (cfg, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    f32 = jnp.float32
+
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if cfg.frontend == "vision":
+        P = cfg.num_patches
+        batch = {
+            "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.frontend_dim), bf16),
+            "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+        }
+        if shape.mode == "train":
+            batch["loss_mask"] = jax.ShapeDtypeStruct((B, S - P), f32)
+        return batch
+
+    if cfg.frontend == "audio":
+        batch = {"frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), bf16)}
+        if shape.mode == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            batch["loss_mask"] = jax.ShapeDtypeStruct((B, S), f32)
+        return batch
+
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.mode == "train":
+        batch["loss_mask"] = jax.ShapeDtypeStruct((B, S), f32)
+    return batch
+
+
+def state_specs(cfg: ModelConfig, lora: LoRAConfig, targets: Tuple[str, ...]
+                ) -> Tuple[Any, Any, Any]:
+    """(params, adapters, opt_state) ShapeDtypeStruct trees via eval_shape."""
+    def build(key):
+        params = T.init(cfg, key)
+        adapters = init_lora(params, targets, lora.rank, lora.alpha, key,
+                             dtype=jnp.float32)
+        opt_state = adamw_init(adapters)
+        return params, adapters, opt_state
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, kv_dtype) -> Any:
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len, kv_dtype))

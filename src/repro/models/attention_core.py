@@ -1,0 +1,235 @@
+"""Memory-bounded chunked attention in pure JAX (XLA-flash).
+
+``flash_jax`` is the lowering-path attention used for long sequences: a
+double scan (query chunks × kv chunks) with online softmax, so peak live
+memory is O(bq·bk) score tiles instead of O(S²).  GQA/MQA via head grouping
+(k/v have K heads, q has H = g·K).  The Pallas kernel
+(:mod:`repro.kernels.flash_attention`) is the TPU-target fast path behind
+``use_kernels``; this module is what every dry-run lowers by default and the
+oracle the kernel is tested against is the same math.
+
+Also here: the *absorbed* MLA formulation (DeepSeek-V3 weight absorption) —
+queries are projected into the compressed-KV latent space so attention runs
+against the (B,T,kv_lora_rank) latent stream directly and the per-head
+K/V expansion ((B,T,H,192/128) ≈ GiB-scale at 4k×128h) is never
+materialized.  TPU adaptation note: this trades extra MXU FLOPs
+(q·W_absorb) for HBM footprint — the right trade on v5e (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def flash_jax(q, k, v, *, causal: bool = True, window: int = 0,
+              scale: Optional[float] = None, q_chunk: int = 512,
+              kv_chunk: int = 1024, unroll: Optional[bool] = None,
+              q_offset=0):
+    """q: (B,S,H,dq), k: (B,T,K,dq), v: (B,T,K,dv) -> (B,S,H,dv) fp32.
+
+    Double-scan online softmax; O(B·H·bq·bk) live scores.  ``q_offset`` is
+    the global position of q row 0 (sequence-parallel shards pass their
+    offset; the causal/window masks are in global coordinates).
+    """
+    from repro.common import flags
+    if unroll is None:
+        unroll = flags.scan_unroll()
+    B, S, H, dq = q.shape
+    T, K = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = H // K
+    if scale is None:
+        scale = 1.0 / math.sqrt(dq)
+    if unroll:
+        # analysis lowering: same FLOPs, far fewer (bigger) unrolled blocks —
+        # the program is never executed, so tile memory is irrelevant
+        q_chunk = max(q_chunk, S // 2)
+        kv_chunk = max(kv_chunk, T // 2)
+    bq = min(q_chunk, S)
+    bk = min(kv_chunk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+
+    qf = q.astype(jnp.float32).reshape(B, nq, bq, K, g, dq)
+    kf = k.astype(jnp.float32).reshape(B, nk, bk, K, dq)
+    vf = v.astype(jnp.float32).reshape(B, nk, bk, K, dv)
+
+    def q_block(iq, q_blk):
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+
+        # remat: score tiles are recomputed in backward — without this the
+        # inner scan's linearization keeps every (bq×bk) p-tile alive
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ik, k_blk, v_blk = inp
+            s = jnp.einsum("bqkgd,bxkd->bkgqx", q_blk, k_blk) * scale
+            kpos = ik * bk + jnp.arange(bk)
+            msk = _chunk_mask(qpos, kpos, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqx,bxkd->bkgqd", p, v_blk)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, K, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, K, g, bq, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kf.swapaxes(0, 1), vf.swapaxes(0, 1)),
+            unroll=unroll)
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]     # (B,K,g,bq,dv)
+        return out.transpose(0, 3, 1, 2, 4)                 # (B,bq,K,g,dv)
+
+    q_block = jax.checkpoint(q_block)
+    outs = jax.lax.scan(
+        lambda _, inp: (None, q_block(inp[0], inp[1])),
+        None, (jnp.arange(nq), qf.swapaxes(0, 1)), unroll=unroll)[1]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, dv)
+    return out
+
+
+def dispatch_flash(q, k, v, *, causal: bool = True, window: int = 0,
+                   scale: Optional[float] = None, q_chunk: int = 512,
+                   kv_chunk: int = 1024):
+    """Mesh-aware attention dispatch (DESIGN.md §5):
+
+      * no mesh / tests            -> plain flash_jax;
+      * KV heads divide 'model'    -> head parallelism (sharding constraint,
+        zero attention-interior collectives);
+      * otherwise                  -> explicit shard_map SEQUENCE parallelism:
+        q's sequence dim is split over 'model', K/V are broadcast to each
+        shard, every device attends its own q rows.  The shard_map transpose
+        turns dK/dV into psums (reduce-scatter-shaped), avoiding GSPMD's
+        involuntary p-tile all-gathers in the flash backward.
+    """
+    from repro.common.pjit_utils import (_ambient_mesh, batch_axes, constrain,
+                                         mesh_axis_sizes)
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return flash_jax(q, k, v, causal=causal, window=window, scale=scale,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+    sizes = mesh_axis_sizes()
+    msize = sizes.get("model", 1)
+    dax = batch_axes()
+    B, S, H, dq = q.shape
+    K = k.shape[2]
+
+    if msize == 1 or K % msize == 0:
+        q = constrain(q, (dax, None, "model", None))
+        k = constrain(k, (dax, None, "model", None))
+        v = constrain(v, (dax, None, "model", None))
+        return flash_jax(q, k, v, causal=causal, window=window, scale=scale,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    local_S = S // msize
+    d_sz = 1
+    if dax is not None:
+        names = dax if isinstance(dax, tuple) else (dax,)
+        for n in names:
+            d_sz *= sizes.get(n, 1)
+    if S % msize or local_S < 1 or (dax is not None and B % d_sz):
+        # fall back to batch parallelism (replicated over model)
+        q = constrain(q, (dax, None, None, None))
+        k = constrain(k, (dax, None, None, None))
+        v = constrain(v, (dax, None, None, None))
+        return flash_jax(q, k, v, causal=causal, window=window, scale=scale,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    bq = min(q_chunk, local_S)
+
+    def body(q_l, k_l, v_l):
+        off = jax.lax.axis_index("model") * local_S
+        return flash_jax(q_l, k_l, v_l, causal=causal, window=window,
+                         scale=scale, q_chunk=bq, kv_chunk=kv_chunk,
+                         q_offset=off)
+
+    qs = P(dax, "model", None, None)
+    kvs = P(dax, None, None, None)
+    return jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+                         out_specs=qs, check_vma=False)(q, k, v)
+
+
+def mla_absorbed(q_nope, q_rope, c_kv, k_rope, w_kvb, *, num_heads: int,
+                 nope_dim: int, v_dim: int, causal: bool = True,
+                 window: int = 0, q_chunk: int = 512, kv_chunk: int = 1024):
+    """Absorbed-MLA attention.
+
+    q_nope: (B,S,H,nope), q_rope: (B,S,H,rope),
+    c_kv: (B,T,kvr), k_rope: (B,T,rope),
+    w_kvb: (kvr, H*(nope+v_dim)) — the kv up-projection whose K-part is
+    absorbed into the query and V-part applied after attention.
+    Returns (B,S,H,v_dim) fp32.
+    """
+    from repro.common.pjit_utils import (_ambient_mesh, batch_axes,
+                                         mesh_axis_sizes)
+    from jax.sharding import PartitionSpec as P
+
+    B, S, H, _ = q_nope.shape
+    T = c_kv.shape[1]
+    kvr = c_kv.shape[-1]
+    scale = 1.0 / math.sqrt(nope_dim + q_rope.shape[-1])
+
+    def absorbed(qn, qr, ckv, kr, w_kvb_, q_offset=0, q_ck=q_chunk):
+        w = w_kvb_.reshape(kvr, H, nope_dim + v_dim).astype(jnp.float32)
+        w_k, w_v = w[..., :nope_dim], w[..., nope_dim:]
+        # absorb K-projection into the query: (b,s,H,kvr)
+        q_lat = jnp.einsum("bshn,khn->bshk", qn.astype(jnp.float32), w_k)
+        # single "kv head" (MQA): key = [c_kv | k_rope], query = [q_lat | q_rope]
+        q_eff = jnp.concatenate([q_lat, qr.astype(jnp.float32)], axis=-1)
+        k_eff = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :].astype(jnp.float32)
+        v_eff = ckv[:, :, None, :].astype(jnp.float32)
+        out_lat = flash_jax(q_eff, k_eff, v_eff, causal=causal, window=window,
+                            scale=scale, q_chunk=q_ck, kv_chunk=kv_chunk,
+                            q_offset=q_offset)          # (b,s,H,kvr)
+        return jnp.einsum("bshk,khv->bshv", out_lat, w_v)
+
+    mesh = _ambient_mesh()
+    if mesh is not None:
+        sizes = mesh_axis_sizes()
+        msize = sizes.get("model", 1)
+        dax = batch_axes()
+        d_sz = 1
+        if dax is not None:
+            for n in (dax if isinstance(dax, tuple) else (dax,)):
+                d_sz *= sizes.get(n, 1)
+        if msize > 1 and S % msize == 0 and (dax is None or B % d_sz == 0):
+            # sequence-parallel: q stream (and its latent projection, the
+            # memory hot spot) sharded over 'model'; compressed KV stream is
+            # tiny and broadcast
+            local_S = S // msize
+            bq = min(q_chunk, local_S)
+
+            def body(qn_l, qr_l, ckv_l, kr_l, w_l):
+                off = jax.lax.axis_index("model") * local_S
+                return absorbed(qn_l, qr_l, ckv_l, kr_l, w_l,
+                                q_offset=off, q_ck=bq)
+
+            qs = P(dax, "model", None, None)
+            kvs = P(dax, None, None)
+            return jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(qs, qs, kvs, kvs, P(None, None)),
+                out_specs=qs, check_vma=False,
+            )(q_nope, q_rope, c_kv, k_rope, w_kvb)
+
+    return absorbed(q_nope, q_rope, c_kv, k_rope, w_kvb)

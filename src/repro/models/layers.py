@@ -1,0 +1,358 @@
+"""Core transformer layers in pure JAX.
+
+Everything is functional: ``init_*`` builds param subtrees, ``*_fwd`` applies
+them.  Attention supports GQA (arbitrary kv groups), QKV bias (Qwen1.5/2/2.5),
+per-head qk RMSNorm (Qwen3), RoPE, sliding windows, and a single-token cached
+decode path.  MLA (DeepSeek-V3) lives in this module too.
+
+LoRA adapters are threaded through every projection via
+:func:`repro.peft.lora.lora_proj`: each projection takes an optional
+``{"A": (r, in), "B": (out, r)}`` adapter leaf.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.peft.lora import lora_proj
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_dim, dtype):
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given integer positions. positions: (...,)"""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, hd) rotated pairwise-interleaved; cos/sin: (S, hd/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    # broadcast cos/sin over head axis: (S, 1, hd/2)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, dtype) -> Params:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), d, dtype),
+        "wk": dense_init(ks[1], (d, K * hd), d, dtype),
+        "wv": dense_init(ks[2], (d, K * hd), d, dtype),
+        "wo": dense_init(ks[3], (H * hd, d), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: Params, x, adapters, positions):
+    """Project to q,k,v with all arch options. x: (B,S,d)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    a = adapters or {}
+    q = lora_proj(x, p["wq"], a.get("wq"))
+    k = lora_proj(x, p["wk"], a.get("wk"))
+    v = lora_proj(x, p["wv"], a.get("wv"))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_scores_einsum(q, k):
+    """Grouped attention scores. q: (B,S,H,hd), k: (B,T,K,hd) -> (B,H,S,T)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    q = q.reshape(B, S, K, g, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
+    return s.reshape(B, H, S, k.shape[1])
+
+
+def gqa_out_einsum(w, v):
+    """w: (B,H,S,T), v: (B,T,K,hd) -> (B,S,H,hd)."""
+    B, H, S, T = w.shape
+    K = v.shape[2]
+    g = H // K
+    w = w.reshape(B, K, g, S, T)
+    o = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, v.shape[3])
+
+
+def causal_mask(S: int, T: int, q_offset: int = 0, window: int = 0):
+    """(S,T) mask: True = attend. q position i attends kv position j iff
+    j <= i+q_offset and (window == 0 or j > i+q_offset-window)."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > (qpos - window)
+    return m
+
+
+def attention_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None,
+                  use_kernel: bool = False) -> jnp.ndarray:
+    """Full-sequence causal attention (train / prefill). x: (B,S,d).
+
+    Three paths: Pallas kernel (TPU fast path), chunked XLA-flash (default —
+    memory-bounded, what dry-runs lower), einsum fallback (odd tiny shapes).
+    """
+    from repro.models.attention_core import dispatch_flash
+    B, S, d = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(cfg, p, x, adapters, positions)
+    if use_kernel and S % 128 == 0:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    elif S % min(S, 512) == 0:
+        o = dispatch_flash(q, k, v, causal=True, window=cfg.sliding_window,
+                           q_chunk=512, kv_chunk=1024)
+    else:
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        s = gqa_scores_einsum(q, k) * scale
+        mask = causal_mask(S, S, 0, cfg.sliding_window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = gqa_out_einsum(w, v)
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    a = adapters or {}
+    return lora_proj(o, p["wo"], a.get("wo"))
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None):
+    """Single-token decode with KV cache.
+
+    x: (B,1,d). cache: {"k": (B,T,K,hd), "v": (B,T,K,hd), "pos": ()} where T
+    is the cache capacity (= context length, or window size when sliding).
+    Returns (out, new_cache).
+    """
+    from repro.serve.kvcache import cache_update, cache_kv
+    B, S, _ = x.shape
+    assert S == 1
+    pos = cache["pos"]
+    q, k, v = _qkv(cfg, p, x, adapters, pos[None])
+    cache = cache_update(cfg, cache, k, v)
+    kc, vc = cache_kv(cfg, cache)
+    T = kc.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    s = gqa_scores_einsum(q, kc) * scale            # (B,H,1,T)
+    # valid positions: slots < number written (ring buffer handles window)
+    valid = (jnp.arange(T) < cache["length"])[None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = gqa_out_einsum(w, vc)
+    o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    a = adapters or {}
+    return lora_proj(o, p["wo"], a.get("wo")), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H = cfg.num_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr), d, dtype),
+        "q_a_norm": jnp.ones((qr,), dtype),
+        "wq_b": dense_init(ks[1], (qr, H * (nope + rope)), qr, dtype),
+        "wkv_a": dense_init(ks[2], (d, kvr + rope), d, dtype),
+        "kv_a_norm": jnp.ones((kvr,), dtype),
+        "wkv_b": dense_init(ks[3], (kvr, H * (nope + vd)), kvr, dtype),
+        "wo": dense_init(ks[4], (H * vd, d), H * vd, dtype),
+    }
+
+
+def _mla_qkv(cfg: ModelConfig, p: Params, x, adapters, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    a = adapters or {}
+    q = lora_proj(x, p["wq_a"], a.get("wq_a"))
+    q = rmsnorm(q, p["q_a_norm"], cfg.norm_eps)
+    q = lora_proj(q, p["wq_b"], a.get("wq_b")).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv = lora_proj(x, p["wkv_a"], a.get("wkv_a"))
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    cos, sin = rope_freqs(rope, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)  # (B,S,1,rope)
+    c_kv = rmsnorm(c_kv, p["kv_a_norm"], cfg.norm_eps)
+    return q_nope, q_rope, c_kv, k_rope[..., 0, :]
+
+
+def _mla_expand_kv(cfg: ModelConfig, p: Params, c_kv, adapters):
+    """Expand compressed kv latent to per-head k_nope and v."""
+    B, T, _ = c_kv.shape
+    H = cfg.num_heads
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    a = adapters or {}
+    kv = lora_proj(c_kv, p["wkv_b"], a.get("wkv_b")).reshape(B, T, H, nope + vd)
+    return kv[..., :nope], kv[..., nope:]
+
+
+def _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v):
+    """q_*: (B,S,H,*), k_nope/v: (B,T,H,*), k_rope: (B,T,rope) shared."""
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = jnp.einsum("bshc,bthc->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+    s += jnp.einsum("bshc,btc->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    return s * scale, v
+
+
+def mla_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None):
+    """MLA full-sequence attention — *absorbed* formulation: attention runs
+    against the compressed latent stream (B,T,kvr); the per-head K/V
+    expansion is never materialized (attention_core.mla_absorbed)."""
+    from repro.models.attention_core import mla_absorbed
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, adapters, positions)
+    if S % min(S, 512) == 0:
+        w_kvb = p["wkv_b"]
+        a_kvb = (adapters or {}).get("wkv_b")
+        if a_kvb is not None:   # fold the LoRA delta into the absorbed weight
+            w_kvb = w_kvb + ((a_kvb["B"] @ a_kvb["A"]).T
+                             * a_kvb["scale"]).astype(w_kvb.dtype)
+        o = mla_absorbed(q_nope, q_rope, c_kv.astype(jnp.float32),
+                         k_rope.astype(jnp.float32), w_kvb,
+                         num_heads=cfg.num_heads, nope_dim=cfg.qk_nope_head_dim,
+                         v_dim=cfg.v_head_dim, causal=True,
+                         window=cfg.sliding_window)
+    else:
+        k_nope, v = _mla_expand_kv(cfg, p, c_kv, adapters)
+        s, v = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v)
+        mask = causal_mask(S, S, 0, cfg.sliding_window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthv->bshv", w, v.astype(jnp.float32))
+    o = o.reshape(B, S, cfg.num_heads * cfg.v_head_dim).astype(x.dtype)
+    a = adapters or {}
+    return lora_proj(o, p["wo"], a.get("wo"))
+
+
+def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None):
+    """MLA decode — *absorbed* formulation: attention runs directly against
+    the compressed latent cache (the paper-faithful MLA memory saving); the
+    per-head K/V expansion ((B,T,H,·) — 17 GB/layer at 32k×128h) is never
+    materialized.  Scores: q_latᵀc_kv + q_ropeᵀk_rope; values: latent then
+    per-head V-projection after the softmax."""
+    from repro.serve.kvcache import mla_cache_update
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.num_heads
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    pos = cache["pos"]
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(cfg, p, x, adapters, pos[None])
+    cache = mla_cache_update(cache, c_kv_t, k_rope_t)
+    c_kv, k_rope = cache["c_kv"], cache["k_rope"]
+    if c_kv.dtype == jnp.int8:
+        from repro.serve.kvcache import dequant
+        c_kv = dequant(c_kv, cache["c_kv_scale"])
+        k_rope = dequant(k_rope, cache["k_rope_scale"])
+    c_kv = c_kv.astype(jnp.float32)
+    k_rope = k_rope.astype(jnp.float32)
+
+    a = adapters or {}
+    w_kvb = p["wkv_b"]
+    a_kvb = a.get("wkv_b")
+    if a_kvb is not None:        # fold LoRA delta into the absorbed weight
+        w_kvb = w_kvb + ((a_kvb["B"] @ a_kvb["A"]).T
+                         * a_kvb["scale"]).astype(w_kvb.dtype)
+    w = w_kvb.reshape(kvr, H, nope + vd).astype(jnp.float32)
+    w_k, w_v = w[..., :nope], w[..., nope:]
+
+    q_lat = jnp.einsum("bshn,khn->bshk", q_nope.astype(jnp.float32), w_k)
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
+    s = (jnp.einsum("bshk,btk->bhst", q_lat, c_kv)
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), k_rope)) * scale
+    T = s.shape[-1]
+    valid = (jnp.arange(T) < cache["length"])[None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    wts = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhst,btk->bshk", wts, c_kv)          # (B,1,H,kvr)
+    o = jnp.einsum("bshk,khv->bshv", out_lat, w_v)
+    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    return lora_proj(o, p["wo"], a.get("wo")), cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: int = 0) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), d, dtype),
+        "w_up": dense_init(ks[1], (d, ff), d, dtype),
+        "w_down": dense_init(ks[2], (ff, d), ff, dtype),
+    }
+
+
+def mlp_fwd(p: Params, x, adapters=None):
+    a = adapters or {}
+    g = lora_proj(x, p["w_gate"], a.get("w_gate"))
+    u = lora_proj(x, p["w_up"], a.get("w_up"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return lora_proj(h, p["w_down"], a.get("w_down"))

@@ -1,0 +1,171 @@
+"""RWKV6 "Finch" layer (data-dependent decay, attention-free) in pure JAX.
+
+Time-mix with data-dependent token-shift (ddlerp) and data-dependent decay
+(the defining Finch features, arXiv:2404.05892), per-head WKV state
+recurrence, group-norm output, gated; plus the squared-ReLU channel-mix.
+
+The WKV recurrence is sequential over time — the training/prefill path uses
+``lax.scan`` (and optionally the Pallas ``wkv6`` kernel); decode is the O(1)
+state update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.peft.lora import lora_proj
+
+Params = Dict[str, Any]
+
+
+def init_rwkv6(cfg: ModelConfig, key, dtype) -> Params:
+    d, ff, dl = cfg.d_model, cfg.d_ff, cfg.rwkv_decay_lora
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        # --- time mix -------------------------------------------------------
+        "mu_x": (jax.random.uniform(ks[0], (d,))).astype(dtype),
+        "mu": (jax.random.uniform(ks[1], (5, d))).astype(dtype),   # r,k,v,w,g
+        "dd_w1": dense_init(ks[2], (d, 5 * dl), d, dtype),
+        "dd_w2": (jax.random.normal(ks[3], (5, dl, d)) * 0.02).astype(dtype),
+        "wr": dense_init(ks[4], (d, d), d, dtype),
+        "wk": dense_init(ks[5], (d, d), d, dtype),
+        "wv": dense_init(ks[6], (d, d), d, dtype),
+        "wg": dense_init(ks[7], (d, d), d, dtype),
+        "wo": dense_init(ks[8], (d, d), d, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),      # decay base (pre -exp)
+        "wd1": dense_init(ks[9], (d, dl), d, dtype),
+        "wd2": (jax.random.normal(ks[10], (dl, d)) * 0.02).astype(dtype),
+        "u": jnp.zeros((H, hd), jnp.float32),          # time_first bonus
+        "ln_x_w": jnp.ones((d,), dtype),
+        "ln_x_b": jnp.zeros((d,), dtype),
+        # --- channel mix ------------------------------------------------------
+        "mu_ck": (jax.random.uniform(ks[11], (d,))).astype(dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "wck": dense_init(ks[2], (d, ff), d, dtype),
+        "wcv": dense_init(ks[3], (ff, d), ff, dtype),
+        "wcr": dense_init(ks[4], (d, d), d, dtype),
+    }
+
+
+def _shift(x, last=None):
+    """token shift: x_{t-1}; first position gets `last` (or zeros)."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    B, S, d = x.shape
+    base = x + xx * p["mu_x"]
+    dl = p["dd_w1"].shape[1] // 5
+    h = jnp.tanh((base @ p["dd_w1"]).astype(jnp.float32)).reshape(B, S, 5, dl)
+    off = jnp.einsum("bsfl,fld->bsfd", h.astype(x.dtype), p["dd_w2"])  # (B,S,5,d)
+    mixed = x[:, :, None] + xx[:, :, None] * (p["mu"][None, None] + off)
+    return mixed                                                        # (B,S,5,d)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay; returns log-decay w < 0 (fp32)."""
+    dd = jnp.tanh((xw @ p["wd1"]).astype(jnp.float32)) @ p["wd2"].astype(jnp.float32)
+    return -jnp.exp(p["w0"] + dd)                                        # (B,S,d)
+
+
+def wkv_scan(r, k, v, w, u):
+    """Reference WKV recurrence.
+
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) log-decay; u: (H,hd).
+    y_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = e^{w_t} ⊙_k S_{t-1} + k_t ⊗ v_t.
+    Returns (y: (B,S,H,hd), final state (B,H,hd,hd)) in fp32.
+    """
+    B, S, H, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                    # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[..., None] * kv)
+        state = jnp.exp(wt)[..., None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), final
+
+
+def _group_norm(x, w, b, H, eps):
+    """Per-head layer norm. x: (B,S,d) fp32."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return xh.reshape(B, S, d) * w + b
+
+
+def time_mix(cfg: ModelConfig, p: Params, x, adapters=None, state=None,
+             use_kernel: bool = False):
+    """x: (B,S,d). state: None (train/prefill) or decode state dict."""
+    B, S, d = x.shape
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    a = adapters or {}
+    last = state["tm_x"] if state is not None else None
+    xx = _shift(x, last) - x
+    mixed = _ddlerp(p, x, xx)
+    xr, xk, xv, xw, xg = (mixed[:, :, i] for i in range(5))
+    r = lora_proj(xr, p["wr"], a.get("wr")).reshape(B, S, H, hd)
+    k = lora_proj(xk, p["wk"], a.get("wk")).reshape(B, S, H, hd)
+    v = lora_proj(xv, p["wv"], a.get("wv")).reshape(B, S, H, hd)
+    g = jax.nn.silu(lora_proj(xg, p["wg"], a.get("wg")).astype(jnp.float32))
+    w = _decay(p, xw).reshape(B, S, H, hd)
+
+    if state is not None:
+        # O(1) decode update
+        s = state["wkv"]                                    # (B,H,hd,hd) fp32
+        rt, kt, vt = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+        wt = w[:, 0]
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + p["u"][..., None] * kv)[:, None]
+        new_s = jnp.exp(wt)[..., None] * s + kv
+        new_state = {"tm_x": x[:, -1], "wkv": new_s}
+    elif use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.wkv6(r, k, v, w, p["u"])
+        new_state = None
+    else:
+        y, _ = wkv_scan(r, k, v, w, p["u"])
+        new_state = None
+
+    y = y.reshape(B, -1, d)
+    y = _group_norm(y, p["ln_x_w"].astype(jnp.float32),
+                    p["ln_x_b"].astype(jnp.float32), H, cfg.norm_eps)
+    y = (y * g).astype(x.dtype)
+    return lora_proj(y, p["wo"], a.get("wo")), new_state
+
+
+def channel_mix(cfg: ModelConfig, p: Params, x, adapters=None, state=None):
+    a = adapters or {}
+    last = state["cm_x"] if state is not None else None
+    xx = _shift(x, last) - x
+    xk = x + xx * p["mu_ck"]
+    xr = x + xx * p["mu_cr"]
+    k = lora_proj(xk, p["wck"], a.get("wck"))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    rgate = jax.nn.sigmoid(lora_proj(xr, p["wcr"], a.get("wcr")).astype(jnp.float32))
+    out = (rgate * lora_proj(k, p["wcv"], a.get("wcv")).astype(jnp.float32)).astype(x.dtype)
+    new_state = {"cm_x": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d, H, hd = cfg.d_model, cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "tm_x": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "cm_x": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) layer in pure JAX — chunked, MXU-friendly formulation.
+
+Used standalone and as the backbone of the Zamba2 hybrid.  The training /
+prefill path uses the chunkwise-parallel SSD algorithm (intra-chunk matmuls +
+inter-chunk state scan); decode is the O(1) single-token recurrence.
+n_groups = 1 (B/C shared across heads), as in Zamba2-1.2B.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+from repro.peft.lora import lora_proj
+
+Params = Dict[str, Any]
+
+CHUNK = 256
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype) -> Params:
+    d, din, st, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.num_ssm_heads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * din + 2 * st + H
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), d, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, din + 2 * st)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((din + 2 * st,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[2], (din, d), din, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    din, st, H = cfg.d_inner, cfg.ssm_state, cfg.num_ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din: 2 * din + 2 * st]
+    dt = zxbcdt[..., 2 * din + 2 * st:]
+    return z, xBC, dt
+
+
+def mamba2_fwd(cfg: ModelConfig, p: Params, x, adapters=None):
+    """x: (B,S,d) -> (B,S,d)."""
+    Bsz, S, d = x.shape
+    din, st, H, hd = cfg.d_inner, cfg.ssm_state, cfg.num_ssm_heads, cfg.ssm_head_dim
+    a = adapters or {}
+    zxbcdt = lora_proj(x, p["in_proj"], a.get("in_proj"))
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :din].reshape(Bsz, S, H, hd)
+    Bm = xBC[..., din: din + st]                      # (B,S,st)
+    Cm = xBC[..., din + st:]                           # (B,S,st)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    dA = dt * A                                                    # (B,S,H)
+
+    y = _ssd_chunked(xs, dt, dA, Bm, Cm)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], cfg.norm_eps)
+    return lora_proj(y, p["out_proj"], a.get("out_proj"))
+
+
+def _ssd_chunked(xs, dt, dA, Bm, Cm, chunk: int = CHUNK):
+    """Chunkwise-parallel SSD.
+
+    xs: (B,S,H,hd), dt/dA: (B,S,H), Bm/Cm: (B,S,st). Returns fp32 (B,S,H,hd).
+    """
+    Bsz, S, H, hd = xs.shape
+    st = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    def r(t, *shape):
+        return t.reshape(Bsz, nc, c, *shape)
+    xs_, dt_, dA_ = r(xs, H, hd), r(dt, H), r(dA, H)
+    B_, C_ = r(Bm, st), r(Cm, st)
+
+    cum = jnp.cumsum(dA_, axis=2)                       # (B,nc,c,H)
+    # intra-chunk: y[t] = sum_{s<=t} exp(cum_t - cum_s) * (C_t . B_s) dt_s x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,c(t),c(s),H)
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, None, :, :, None]
+    # mask BEFORE exp: masked (s>t) entries have seg>0 and can overflow, and
+    # a where() after exp turns 0·inf into NaN in the backward pass
+    seg = jnp.where(tri, seg, 0.0)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bntk,bnsk->bnts",
+                        C_.astype(jnp.float32), B_.astype(jnp.float32))
+    M = scores[..., None] * decay                        # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bntsh,bnsh,bnshd->bnthd", M, dt_, xs_.astype(jnp.float32))
+
+    # chunk-final states and inter-chunk scan
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,c,H)
+    states = jnp.einsum("bnsh,bnsh,bnsk,bnshd->bnhkd",
+                        dec_end, dt_, B_.astype(jnp.float32), xs_.astype(jnp.float32))
+    total = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def step(h, inp):
+        stt, tot = inp                                   # (B,H,st,hd), (B,H)
+        h_new = h * tot[..., None, None] + stt
+        return h_new, h                                  # emit previous state
+
+    from repro.common import flags
+    h0 = jnp.zeros((Bsz, H, st, hd), jnp.float32)
+    _, h_prev = jax.lax.scan(step,
+                             h0,
+                             (states.swapaxes(0, 1), total.swapaxes(0, 1)),
+                             unroll=flags.scan_unroll())
+    h_prev = h_prev.swapaxes(0, 1)                       # (B,nc,H,st,hd)
+    y_inter = jnp.einsum("bntk,bnth,bnhkd->bnthd",
+                         C_.astype(jnp.float32), jnp.exp(cum), h_prev)
+    return (y_intra + y_inter).reshape(Bsz, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    din, st = cfg.d_inner, cfg.ssm_state
+    H, hd = cfg.num_ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * st), dtype),
+        "ssm": jnp.zeros((batch, H, st, hd), jnp.float32),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, p: Params, x, state: Dict, adapters=None):
+    """x: (B,1,d) -> (y, new_state)."""
+    Bsz, S, d = x.shape
+    din, st, H, hd = cfg.d_inner, cfg.ssm_state, cfg.num_ssm_heads, cfg.ssm_head_dim
+    a = adapters or {}
+    zxbcdt = lora_proj(x, p["in_proj"], a.get("in_proj"))
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    hist = jnp.concatenate([state["conv"], xBC], axis=1)   # (B,K,cdim)
+    new_conv = hist[:, 1:]
+    K = p["conv_w"].shape[0]
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)[:, None]
+    xs = xBC[..., :din].reshape(Bsz, H, hd)
+    Bm = xBC[:, 0, din: din + st]
+    Cm = xBC[:, 0, din + st:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A)                                   # (B,H)
+    h = state["ssm"] * dec[..., None, None] + jnp.einsum(
+        "bh,bk,bhd->bhkd", dt, Bm.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bk,bhkd->bhd", Cm.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], cfg.norm_eps)
+    out = lora_proj(y, p["out_proj"], a.get("out_proj"))
+    return out, {"conv": new_conv, "ssm": h}

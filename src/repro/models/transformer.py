@@ -1,0 +1,307 @@
+"""Model assembly: segment plan + scan-over-layers for all assigned families.
+
+A model is a sequence of *segments*; each segment is ``(kind, count)`` where
+``count`` homogeneous layers are stacked and executed with ``lax.scan`` (so
+HLO size / compile time is O(#segments), not O(depth)).  Zamba2's shared
+attention block is stored once (``params["shared_blk"]``) and applied at each
+``("shared", 1)`` plan entry; DeepSeek-V3's first dense layers form their own
+segment.
+
+Public API:
+    layer_plan(cfg)                       -> [(kind, count), ...]
+    init(cfg, key)                        -> params
+    forward(cfg, params, batch, ...)      -> (hidden, aux)   [train / prefill]
+    logits(cfg, params, hidden)           -> (B, S, V)
+    init_cache(cfg, batch, capacity, ...) -> cache pytree
+    decode(cfg, params, cache, batch, ..) -> (logits, cache) [one token]
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as Lyr
+from repro.models import moe as Moe
+from repro.models import rwkv as Rwkv
+from repro.models import ssm as Ssm
+from repro.serve import kvcache as Kv
+
+Params = Dict[str, Any]
+
+ATTN_KINDS = ("dense", "moe", "mla_dense", "mla_moe", "shared")
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return [("rwkv", L)]
+    if cfg.family == "hybrid":
+        plan, remaining = [], L
+        while remaining > 0:
+            n = min(cfg.attn_every, remaining)
+            plan.append(("mamba", n))
+            remaining -= n
+            if n == cfg.attn_every:
+                plan.append(("shared", 1))
+        return plan
+    if cfg.num_experts:
+        kind = "mla_moe" if cfg.use_mla else "moe"
+        dense_kind = "mla_dense" if cfg.use_mla else "dense"
+        if cfg.first_dense_layers:
+            return [(dense_kind, cfg.first_dense_layers),
+                    (kind, L - cfg.first_dense_layers)]
+        return [(kind, L)]
+    return [("dense", L)]
+
+
+def num_shared_applications(cfg: ModelConfig) -> int:
+    return sum(1 for k, _ in layer_plan(cfg) if k == "shared")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: str, key, dtype) -> Params:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    if kind == "mamba":
+        return {"ln": jnp.ones((d,), dtype), "mixer": Ssm.init_mamba2(cfg, k1, dtype)}
+    if kind == "rwkv":
+        return {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+                "mix": Rwkv.init_rwkv6(cfg, k1, dtype)}
+    attn_init = Lyr.init_mla if kind.startswith("mla") else Lyr.init_attention
+    blk = {"ln1": jnp.ones((d,), dtype), "attn": attn_init(cfg, k1, dtype),
+           "ln2": jnp.ones((d,), dtype)}
+    if kind in ("moe", "mla_moe"):
+        blk["moe"] = Moe.init_moe(cfg, k2, dtype)
+    else:
+        blk["mlp"] = Lyr.init_mlp(cfg, k2, dtype)
+    return blk
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (V, d)) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Lyr.dense_init(keys[1], (d, V), d, dtype)
+    if cfg.frontend:
+        fd = cfg.frontend_dim or d
+        params["frontend_proj"] = Lyr.dense_init(keys[2], (fd, d), fd, dtype)
+    blocks = []
+    kb = keys[3]
+    for i, (kind, count) in enumerate(layer_plan(cfg)):
+        if kind == "shared":
+            continue
+        kb, ks = jax.random.split(kb)
+        layer_keys = jax.random.split(ks, count)
+        blocks.append(jax.vmap(lambda k: _init_block(cfg, kind, k, dtype))(layer_keys))
+    params["blocks"] = tuple(blocks)
+    if cfg.family == "hybrid":
+        params["shared_blk"] = _init_block(cfg, "shared", keys[4], dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(cfg: ModelConfig, kind: str, p: Params, x, a: Dict,
+               use_kernels: bool):
+    """One layer, full sequence. Returns (x, aux)."""
+    a = a or {}
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h = Ssm.mamba2_fwd(cfg, p["mixer"], Lyr.rmsnorm(x, p["ln"], cfg.norm_eps),
+                           a.get("mixer"))
+        return x + h, aux
+    if kind == "rwkv":
+        h, _ = Rwkv.time_mix(cfg, p["mix"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                             a.get("mix"), use_kernel=use_kernels)
+        x = x + h
+        h, _ = Rwkv.channel_mix(cfg, p["mix"], Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps),
+                                a.get("mix"))
+        return x + h, aux
+    attn_fn = Lyr.mla_fwd if kind.startswith("mla") else partial(
+        Lyr.attention_fwd, use_kernel=use_kernels)
+    h = attn_fn(cfg, p["attn"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps), a.get("attn"))
+    x = x + h
+    xn = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind in ("moe", "mla_moe"):
+        h, aux = Moe.moe_fwd(cfg, p["moe"], xn, a.get("moe"))
+    else:
+        h = Lyr.mlp_fwd(p["mlp"], xn, a.get("mlp"))
+    return x + h, aux
+
+
+def _seg_scan(cfg, kind, seg_p, seg_a, x, use_kernels, remat):
+    """Scan `count` stacked layers of one kind."""
+    body_fn = partial(_block_fwd, cfg, kind, use_kernels=use_kernels)
+    if remat:
+        body_fn = jax.checkpoint(body_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, xs):
+        x, aux = carry
+        p_l, a_l = xs
+        x, aux_l = body_fn(p_l, x, a_l)
+        return (x, aux + aux_l), None
+
+    from repro.common import flags
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (seg_p, seg_a), unroll=flags.scan_unroll())
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch: Dict) -> jnp.ndarray:
+    dtype = jnp.dtype(cfg.dtype)
+    parts = []
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        parts.append((batch["patch_embeds"] @ params["frontend_proj"]).astype(dtype))
+    if cfg.frontend == "audio" and "frame_embeds" in batch:
+        parts.append((batch["frame_embeds"] @ params["frontend_proj"]).astype(dtype))
+    if "tokens" in batch:
+        parts.append(params["embed"][batch["tokens"]])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x
+
+
+def logits(cfg: ModelConfig, params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return hidden @ head
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict,
+            adapters: Optional[Dict] = None, remat: bool = False,
+            use_kernels: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (final hidden (B,S,d), moe aux loss)."""
+    x = embed_inputs(cfg, params, batch)
+    a_blocks = (adapters or {}).get("blocks", ())
+    aux = jnp.zeros((), jnp.float32)
+    seg_i = 0
+    for kind, count in layer_plan(cfg):
+        if kind == "shared":
+            sa = (adapters or {}).get("shared_blk", {})
+            x, aux_l = _block_fwd(cfg, "shared", params["shared_blk"], x, sa, use_kernels)
+            aux += aux_l
+            continue
+        seg_a = a_blocks[seg_i] if seg_i < len(a_blocks) and a_blocks[seg_i] else {}
+        x, aux_l = _seg_scan(cfg, kind, params["blocks"][seg_i], seg_a, x,
+                             use_kernels, remat)
+        aux += aux_l
+        seg_i += 1
+    x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _stack_zeros(tree, n: int):
+    return jax.tree.map(lambda t: jnp.zeros((n,) + t.shape, t.dtype), tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               kv_dtype=jnp.bfloat16) -> Tuple:
+    """Cache pytree mirroring the segment plan.
+
+    capacity: context length (or window size when cfg.sliding_window > 0).
+    """
+    if cfg.sliding_window:
+        capacity = min(capacity, cfg.sliding_window)
+    caches = []
+    for kind, count in layer_plan(cfg):
+        if kind == "shared":
+            caches.append(Kv.attn_cache(cfg, batch, capacity, kv_dtype))
+        elif kind == "mamba":
+            caches.append(_stack_zeros(Ssm.mamba2_init_state(cfg, batch), count))
+        elif kind == "rwkv":
+            caches.append(_stack_zeros(Rwkv.rwkv6_init_state(cfg, batch), count))
+        elif kind.startswith("mla"):
+            caches.append(_stack_zeros(Kv.mla_cache(cfg, batch, capacity, kv_dtype), count))
+        else:
+            caches.append(_stack_zeros(Kv.attn_cache(cfg, batch, capacity, kv_dtype), count))
+    return tuple(caches)
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict):
+    """One layer, one token. Returns (x, new_cache)."""
+    a = a or {}
+    if kind == "mamba":
+        h, cache = Ssm.mamba2_decode(cfg, p["mixer"],
+                                     Lyr.rmsnorm(x, p["ln"], cfg.norm_eps),
+                                     cache, a.get("mixer"))
+        return x + h, cache
+    if kind == "rwkv":
+        h, st = Rwkv.time_mix(cfg, p["mix"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              a.get("mix"), state=cache)
+        x = x + h
+        cache = {**cache, **st}
+        h, st = Rwkv.channel_mix(cfg, p["mix"], Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps),
+                                 a.get("mix"), state=cache)
+        cache = {**cache, **st}
+        return x + h, cache
+    dec_fn = Lyr.mla_decode if kind.startswith("mla") else Lyr.attention_decode
+    h, cache = dec_fn(cfg, p["attn"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                      cache, a.get("attn"))
+    x = x + h
+    xn = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind in ("moe", "mla_moe"):
+        h, _ = Moe.moe_fwd(cfg, p["moe"], xn, a.get("moe"))
+    else:
+        h = Lyr.mlp_fwd(p["mlp"], xn, a.get("mlp"))
+    return x + h, cache
+
+
+def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
+           adapters: Optional[Dict] = None) -> Tuple[jnp.ndarray, Tuple]:
+    """One decode step. batch: {"tokens": (B,1)} (or frame/patch embeds).
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed_inputs(cfg, params, batch)
+    a_blocks = (adapters or {}).get("blocks", ())
+    new_caches = []
+    seg_i = 0
+    plan = layer_plan(cfg)
+    for ci, (kind, count) in enumerate(plan):
+        if kind == "shared":
+            sa = (adapters or {}).get("shared_blk", {})
+            x, c = _block_decode(cfg, "shared", params["shared_blk"], x, cache[ci], sa)
+            new_caches.append(c)
+            continue
+        seg_a = a_blocks[seg_i] if seg_i < len(a_blocks) and a_blocks[seg_i] else {}
+
+        def body(carry, xs, kind=kind):
+            xc = carry
+            p_l, a_l, c_l = xs
+            xc, c_l = _block_decode(cfg, kind, p_l, xc, c_l, a_l)
+            return xc, c_l
+
+        from repro.common import flags
+        x, c = jax.lax.scan(body, x, (params["blocks"][seg_i], seg_a, cache[ci]),
+                            unroll=flags.scan_unroll())
+        new_caches.append(c)
+        seg_i += 1
+    x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits(cfg, params, x), tuple(new_caches)

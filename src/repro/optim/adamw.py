@@ -1,0 +1,93 @@
+"""Optimizers in pure JAX (no optax): AdamW, SGD+momentum, schedules,
+global-norm clipping.  Operated over the *adapter* tree only — the base model
+is frozen in LoRA fine-tuning, so no optimizer state exists for it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import OptimConfig
+
+
+def schedule(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps:
+        warm = jnp.minimum(1.0, (s + 1) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps) /
+                     max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        t = jnp.clip((s - cfg.warmup_steps) /
+                     max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return lr * warm * decay
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_init(params: Any) -> Dict:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"mu": zeros(), "nu": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimConfig, grads: Any, state: Dict, params: Any
+                 ) -> Tuple[Any, Dict]:
+    step = state["step"] + 1
+    if cfg.grad_clip:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.betas
+    lr = schedule(cfg, step)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    flat_p = tdef.flatten_up_to(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv)
+    return (tdef.unflatten(new_p),
+            {"mu": tdef.unflatten(new_m), "nu": tdef.unflatten(new_v), "step": step})
+
+
+def sgd_init(params: Any) -> Dict:
+    return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(cfg: OptimConfig, grads: Any, state: Dict, params: Any,
+               momentum: float = 0.9) -> Tuple[Any, Dict]:
+    step = state["step"] + 1
+    if cfg.grad_clip:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = schedule(cfg, step)
+    mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                      state["mu"], grads)
+    params = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                          params, mu)
+    return params, {"mu": mu, "step": step}

@@ -1,0 +1,8 @@
+from repro.peft.lora import (
+    adapter_num_params,
+    init_lora,
+    lora_proj,
+    match_rank,
+    merge_lora,
+    target_leaves,
+)

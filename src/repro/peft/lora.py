@@ -1,0 +1,157 @@
+"""LoRA adapters over arbitrary model parameter trees.
+
+Convention (matches the paper): a target weight ``W`` used as ``y = x @ W``
+with ``W: (in, out)`` carries an adapter ``{"A": (r, in), "B": (out, r)}``
+so that the effective update is ``ΔWᵀ = (B A)ᵀ``:
+
+    y = x @ W + scale * (x @ Aᵀ) @ Bᵀ ,   scale = alpha / r.
+
+``B`` is zero-initialized and ``A`` is Gaussian (Hu et al. 2022), so training
+starts at the base model.  When model layers are stacked for
+``lax.scan`` (leading ``L`` axis), adapters carry the same leading axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# set by launchers to route LoRA matmuls through the fused Pallas kernel
+USE_KERNEL: bool = False
+
+
+def lora_proj(x: jnp.ndarray, w: jnp.ndarray, adapter: Optional[Dict] = None) -> jnp.ndarray:
+    """y = x @ w (+ LoRA delta). x: (..., in), w: (in, out)."""
+    if adapter is None:
+        return x @ w
+    if USE_KERNEL and x.ndim == 3:
+        from repro.kernels import ops as kops
+        return kops.lora_matmul(x, w, adapter["A"], adapter["B"], adapter["scale"])
+    y = x @ w
+    z = x @ adapter["A"].T.astype(x.dtype)
+    y = y + (z @ adapter["B"].T.astype(x.dtype)) * adapter["scale"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# adapter-tree construction
+# ---------------------------------------------------------------------------
+
+def target_leaves(params: Any, targets: Sequence[str]) -> List[Tuple[Tuple, jnp.ndarray]]:
+    """All (path, leaf) pairs whose final key is in `targets` and that look
+    like 2-D weights (possibly with a leading scan axis)."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+        if keys[-1] in targets and leaf.ndim in (2, 3):
+            out.append((keys, leaf))
+    return out
+
+
+def _set_path(tree: Dict, keys: Tuple, value: Any) -> None:
+    node = tree
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = value
+
+
+def init_lora(params: Any, targets: Sequence[str], rank: int, alpha: float,
+              key: jax.Array, dtype=jnp.float32, sigma: float = 0.02) -> Dict:
+    """Build an adapter tree mirroring `params` at the target leaves.
+
+    For a scanned leaf ``(L, in, out)`` the adapter is ``A: (L, r, in)``,
+    ``B: (L, out, r)``; for a plain ``(in, out)`` leaf it is ``(r, in)`` /
+    ``(out, r)``.
+    """
+    tree: Dict = {}
+    leaves = target_leaves(params, targets)
+    ks = jax.random.split(key, max(len(leaves), 1))
+    for (keys, leaf), k in zip(leaves, ks):
+        if leaf.ndim == 3:
+            L, din, dout = leaf.shape
+            a = jax.random.normal(k, (L, rank, din)) * sigma
+            b = jnp.zeros((L, dout, rank))
+            # per-layer scale so the stacked tree is scan-compatible
+            scale = jnp.full((L,), alpha / rank, jnp.float32)
+        else:
+            din, dout = leaf.shape
+            a = jax.random.normal(k, (rank, din)) * sigma
+            b = jnp.zeros((dout, rank))
+            scale = jnp.asarray(alpha / rank, dtype=jnp.float32)
+        _set_path(tree, keys, {
+            "A": a.astype(dtype),
+            "B": b.astype(dtype),
+            "scale": scale,
+        })
+    return tree
+
+
+def adapter_num_params(adapters: Any) -> int:
+    n = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(adapters)[0]:
+        last = getattr(path[-1], "key", None)
+        if last in ("A", "B"):
+            n += leaf.size
+    return n
+
+
+def merge_lora(params: Any, adapters: Dict) -> Any:
+    """Return params with ΔW = scale·(BA)ᵀ folded into the target weights."""
+    flat = dict(jax.tree_util.tree_flatten_with_path(adapters)[0])
+
+    def keys_of(path):
+        return tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+
+    adapter_map: Dict[Tuple, Dict] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(adapters)[0]:
+        keys = keys_of(path)
+        adapter_map.setdefault(keys[:-1], {})[keys[-1]] = leaf
+
+    def merge(path, w):
+        keys = keys_of(path)
+        ad = adapter_map.get(keys)
+        if ad is None:
+            return w
+        A, B, s = ad["A"], ad["B"], ad["scale"]
+        if w.ndim == 3:
+            sl = s[:, None, None] if getattr(s, "ndim", 0) == 1 else s
+            delta = jnp.einsum("lor,lri->lio", B, A) * sl
+        else:
+            delta = (B @ A).T * s
+        return (w.astype(jnp.float32) + delta.astype(jnp.float32)).astype(w.dtype)
+
+    return jax.tree_util.tree_map_with_path(merge, params)
+
+
+def match_rank(adapters: Dict, rank: int) -> Dict:
+    """Algorithm 1 client-side rank matching: truncate (p > r_k) or zero-pad
+    (p < r_k) the global adapters to the client's local rank."""
+
+    def fix(path, leaf):
+        last = getattr(path[-1], "key", None)
+        if last == "A":                       # (..., p, in)
+            p = leaf.shape[-2]
+            if p == rank:
+                return leaf
+            if p > rank:
+                return leaf[..., :rank, :]
+            pad = [(0, 0)] * leaf.ndim
+            pad[-2] = (0, rank - p)
+            return jnp.pad(leaf, pad)
+        if last == "B":                       # (..., out, p)
+            p = leaf.shape[-1]
+            if p == rank:
+                return leaf
+            if p > rank:
+                return leaf[..., :rank]
+            pad = [(0, 0)] * leaf.ndim
+            pad[-1] = (0, rank - p)
+            return jnp.pad(leaf, pad)
+        if last == "scale":
+            # local training resumes at the client's own alpha/r scaling of
+            # the *downloaded* update; keep scale consistent with stored B·A
+            return leaf
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, adapters)

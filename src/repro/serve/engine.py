@@ -1,0 +1,138 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step, with sampling strategies (greedy / temperature / top-k / top-p) and
+per-sequence stop conditions.
+
+The engine owns a fixed batch of B slots against one KV cache.  Requests
+are admitted into free slots; every engine step decodes one token for every
+active slot (inactive slots decode into a scratch position and are masked).
+This is the single-host serving loop the decode_32k dry-run shape lowers —
+here runnable end-to-end on CPU with the smoke configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models import transformer as T
+from repro.train.step import make_serve_step
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => no top-k filter
+    top_p: float = 1.0              # 1 => no nucleus filter
+    max_tokens: int = 32
+    stop_token: int = -1            # -1 => never
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    params: SamplingParams
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def sample_logits(logits: jnp.ndarray, params: SamplingParams,
+                  key: jax.Array) -> jnp.ndarray:
+    """logits: (V,) -> token id. Pure-JAX single-sequence sampler."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits)
+    logits = logits / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(logits, params.top_k)[0][-1]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits)[::-1]
+        probs = jax.nn.softmax(sorted_logits)
+        cum = jnp.cumsum(probs)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.searchsorted(cum, params.top_p, side="left")
+        cutoff = sorted_logits[jnp.minimum(cutoff_idx, logits.shape[0] - 1)]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, adapters: Any = None,
+                 batch_slots: int = 4, capacity: int = 256,
+                 kv_dtype=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.adapters = adapters
+        self.B = batch_slots
+        self.capacity = capacity
+        self.key = jax.random.PRNGKey(seed)
+        kv_dtype = kv_dtype or jnp.dtype(cfg.dtype)
+        self.cache = T.init_cache(cfg, batch_slots, capacity, kv_dtype)
+        self._step = jax.jit(make_serve_step(cfg))
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self._pending: List[Request] = []
+        self._uid = 0
+        self._last_tokens = np.zeros((batch_slots, 1), np.int32)
+        self._prefill_left: Dict[int, List[int]] = {}
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, prompt: List[int],
+               params: Optional[SamplingParams] = None) -> int:
+        self._uid += 1
+        self._pending.append(Request(self._uid, list(prompt),
+                                     params or SamplingParams()))
+        return self._uid
+
+    def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
+        """Run until all submitted requests complete. Returns uid->tokens."""
+        results: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self._admit()
+            if all(s is None for s in self.slots) and not self._pending:
+                break
+            self._engine_step(results)
+        # drain stragglers
+        for s in self.slots:
+            if s is not None:
+                results[s.uid] = s.generated
+        return results
+
+    # -- internals -------------------------------------------------------------
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self._pending:
+                req = self._pending.pop(0)
+                self.slots[i] = req
+                # prompt tokens are fed through the decode path (cache fill)
+                self._prefill_left[i] = list(req.prompt)
+
+    def _engine_step(self, results: Dict[int, List[int]]):
+        toks = self._last_tokens.copy()
+        feeding = [False] * self.B
+        for i, req in enumerate(self.slots):
+            if req is None:
+                toks[i, 0] = 0
+            elif self._prefill_left.get(i):
+                toks[i, 0] = self._prefill_left[i].pop(0)
+                feeding[i] = True
+        logits, self.cache = self._step(self.params, self.adapters,
+                                        self.cache, {"tokens": jnp.asarray(toks)})
+        self.key, *keys = jax.random.split(self.key, self.B + 1)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if feeding[i] and self._prefill_left.get(i):
+                continue                      # still consuming the prompt
+            tok = int(sample_logits(logits[i], req.params, keys[i]))
+            req.generated.append(tok)
+            self._last_tokens[i, 0] = tok
+            if (tok == req.params.stop_token
+                    or len(req.generated) >= req.params.max_tokens):
+                req.done = True
+                results[req.uid] = req.generated
+                self.slots[i] = None
+                self._prefill_left.pop(i, None)

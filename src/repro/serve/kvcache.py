@@ -1,0 +1,128 @@
+"""KV caches for batched decode.
+
+Supports:
+  * full-context caches (capacity = context length),
+  * sliding-window ring-buffer caches (capacity = window) — the documented
+    sub-quadratic variant used for ``long_500k`` on full-attention archs,
+  * int8-quantized storage (per-token, per-head absmax scales) — used where
+    the bf16 cache exceeds HBM (qwen1.5-32b @ decode_32k),
+  * MLA compressed-latent caches (DeepSeek-V3): only (c_kv, k_rope) stored.
+
+All update ops are jit/pjit-friendly (dynamic_update_slice at ``pos % cap``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization helpers
+# ---------------------------------------------------------------------------
+
+def quant(x: jnp.ndarray):
+    """absmax int8 quantization over the last axis. Returns (q, scale)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def dequant(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * s
+
+
+# ---------------------------------------------------------------------------
+# GQA attention cache
+# ---------------------------------------------------------------------------
+
+def attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16) -> Dict:
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    int8 = dtype == jnp.int8
+    store = jnp.int8 if int8 else dtype
+    c = {
+        "k": jnp.zeros((batch, capacity, K, hd), store),
+        "v": jnp.zeros((batch, capacity, K, hd), store),
+        "pos": jnp.zeros((), jnp.int32),       # absolute next position
+        "length": jnp.zeros((), jnp.int32),    # tokens resident (<= capacity)
+    }
+    if int8:
+        c["k_scale"] = jnp.zeros((batch, capacity, K, 1), jnp.float32)
+        c["v_scale"] = jnp.zeros((batch, capacity, K, 1), jnp.float32)
+    return c
+
+
+def cache_update(cfg: ModelConfig, cache: Dict, k, v) -> Dict:
+    """Insert one token's k,v (B,1,K,hd) at slot pos % capacity."""
+    cap = cache["k"].shape[1]
+    slot = cache["pos"] % cap
+    c = dict(cache)
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = quant(k)
+        vq, vs = quant(v)
+        c["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        c["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        c["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1)
+        c["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1)
+    else:
+        c["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        c["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    c["pos"] = cache["pos"] + 1
+    c["length"] = jnp.minimum(cache["length"] + 1, cap)
+    return c
+
+
+def cache_kv(cfg: ModelConfig, cache: Dict):
+    """Return attendable (k, v) as fp tensors."""
+    if cache["k"].dtype == jnp.int8:
+        k = dequant(cache["k"], cache["k_scale"]).astype(jnp.bfloat16)
+        v = dequant(cache["v"], cache["v_scale"]).astype(jnp.bfloat16)
+        return k, v
+    return cache["k"], cache["v"]
+
+
+# ---------------------------------------------------------------------------
+# MLA compressed cache (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16) -> Dict:
+    int8 = dtype == jnp.int8
+    store = jnp.int8 if int8 else dtype
+    c = {
+        "c_kv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), store),
+        "k_rope": jnp.zeros((batch, capacity, cfg.qk_rope_head_dim), store),
+        "pos": jnp.zeros((), jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if int8:
+        c["c_kv_scale"] = jnp.zeros((batch, capacity, 1), jnp.float32)
+        c["k_rope_scale"] = jnp.zeros((batch, capacity, 1), jnp.float32)
+    return c
+
+
+def mla_cache_update(cache: Dict, c_kv_t, k_rope_t) -> Dict:
+    """c_kv_t: (B,1,kvr), k_rope_t: (B,1,rope)."""
+    cap = cache["c_kv"].shape[1]
+    slot = cache["pos"] % cap
+    c = dict(cache)
+    if cache["c_kv"].dtype == jnp.int8:
+        q1, s1 = quant(c_kv_t)
+        q2, s2 = quant(k_rope_t)
+        c["c_kv"] = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], q1, slot, axis=1)
+        c["k_rope"] = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], q2, slot, axis=1)
+        c["c_kv_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["c_kv_scale"], s1, slot, axis=1)
+        c["k_rope_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_rope_scale"], s2, slot, axis=1)
+    else:
+        c["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), slot, axis=1)
+        c["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), slot, axis=1)
+    c["pos"] = cache["pos"] + 1
+    c["length"] = jnp.minimum(cache["length"] + 1, cap)
+    return c

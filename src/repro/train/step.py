@@ -1,0 +1,124 @@
+"""Train / eval / serve step builders.
+
+``make_train_step`` builds the LoRA fine-tuning step: gradients flow through
+the frozen base into the *adapter tree only* — no base-model grads, no
+base-model optimizer state (this is what makes the 671B config trainable on
+v5e pods).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, OptimConfig, RunConfig
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.train.loss import chunked_ce
+
+
+def loss_fn(cfg: ModelConfig, params, adapters, batch: Dict,
+            remat: bool = False, loss_chunk: int = 512,
+            use_kernels: bool = False):
+    hidden, aux = T.forward(cfg, params, batch, adapters, remat=remat,
+                            use_kernels=use_kernels)
+    tokens = batch.get("labels", batch.get("tokens"))
+    mask = batch.get("loss_mask", jnp.ones_like(tokens, jnp.float32))
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        # hidden includes patch positions; loss only over the text tail
+        P = batch["patch_embeds"].shape[1]
+        hidden = hidden[:, P:]
+    loss, metrics = chunked_ce(cfg, params, hidden, tokens, mask, loss_chunk)
+    if cfg.router_aux_coef:
+        loss = loss + cfg.router_aux_coef * aux
+    metrics["aux"] = aux
+    return loss, metrics
+
+
+def _mask_a_grads(grads):
+    """Zero gradients on A leaves (FFA-LoRA trains B only)."""
+    def fix(path, g):
+        last = getattr(path[-1], "key", None)
+        return jnp.zeros_like(g) if last == "A" else g
+    return jax.tree_util.tree_map_with_path(fix, grads)
+
+
+def make_train_step(cfg: ModelConfig, optim: OptimConfig, remat: bool = True,
+                    loss_chunk: int = 512, use_kernels: bool = False,
+                    b_only: bool = False, grad_accum: int = 1):
+    """Returns train_step(params, adapters, opt_state, batch) ->
+    (adapters, opt_state, metrics).
+
+    ``b_only`` freezes A (FFA-LoRA).  ``grad_accum`` splits the global batch
+    into microbatches processed sequentially (lax.scan): live activation
+    memory scales with batch/grad_accum while LoRA grads (tiny) accumulate —
+    this is what fits the deep archs' residual stream in v5e HBM.
+    """
+
+    def train_step(params, adapters, opt_state, batch):
+        def grad_fn(a, b):
+            return jax.value_and_grad(
+                lambda a_: loss_fn(cfg, params, a_, b, remat, loss_chunk,
+                                   use_kernels), has_aux=True)(a)
+
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(adapters, batch)
+        else:
+            mb = jax.tree.map(
+                lambda t: t.reshape(grad_accum, t.shape[0] // grad_accum,
+                                    *t.shape[1:]), batch)
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), adapters)
+
+            def body(g_acc, b):
+                (_, m), g = grad_fn(adapters, b)
+                g_acc = jax.tree.map(lambda x, y: x + y.astype(jnp.float32),
+                                     g_acc, g)
+                return g_acc, m
+
+            grads, ms = jax.lax.scan(body, g0, mb)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m.mean(0), ms)
+        if b_only:
+            grads = _mask_a_grads(grads)
+        adapters, opt_state = adamw_update(optim, grads, opt_state, adapters)
+        return adapters, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, loss_chunk: int = 512):
+    def eval_step(params, adapters, batch):
+        _, metrics = loss_fn(cfg, params, adapters, batch, remat=False,
+                             loss_chunk=loss_chunk)
+        return metrics
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, use_kernels: bool = False):
+    """Full-sequence forward returning last-position logits (B, V)."""
+    def prefill_step(params, adapters, batch):
+        hidden, _ = T.forward(cfg, params, batch, adapters, remat=False,
+                              use_kernels=use_kernels)
+        return T.logits(cfg, params, hidden[:, -1:])[:, 0]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode against a KV cache: (params, adapters, cache, batch)
+    -> (next_token_logits (B,V), cache)."""
+    def serve_step(params, adapters, cache, batch):
+        lg, cache = T.decode(cfg, params, cache, batch, adapters)
+        return lg[:, 0], cache
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, run: RunConfig, key) -> Tuple:
+    from repro.peft.lora import init_lora
+    kp, ka = jax.random.split(key)
+    params = T.init(cfg, kp)
+    adapters = init_lora(params, run.lora.targets, run.lora.rank,
+                         run.lora.alpha, ka)
+    opt_state = adamw_init(adapters)
+    return params, adapters, opt_state

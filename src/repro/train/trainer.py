@@ -1,0 +1,95 @@
+"""Trainer: the single-tenant training loop as a resumable object —
+checkpointing (adapters + optimizer state + step), periodic eval, metric
+history.  Wraps the same jitted train step the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import restore, restore_step, save
+from repro.common.config import LoRAConfig, ModelConfig, OptimConfig
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init
+from repro.peft.lora import init_lora
+from repro.train.step import make_eval_step, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    eval_every: int = 25
+    ckpt_every: int = 50
+    ckpt_path: str = ""
+    loss_chunk: int = 64
+    grad_accum: int = 1
+    use_kernels: bool = False
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, lora: LoRAConfig, optim: OptimConfig,
+                 tcfg: TrainerConfig, targets: tuple, seed: int = 0,
+                 params: Optional[Any] = None):
+        self.cfg, self.lora, self.optim, self.tcfg = cfg, lora, optim, tcfg
+        key = jax.random.PRNGKey(seed)
+        kp, ka = jax.random.split(key)
+        self.params = params if params is not None else T.init(cfg, kp)
+        self.adapters = init_lora(self.params, targets, lora.rank, lora.alpha, ka)
+        self.opt_state = adamw_init(self.adapters)
+        self.step_no = 0
+        self._train = jax.jit(make_train_step(
+            cfg, optim, remat=False, loss_chunk=tcfg.loss_chunk,
+            use_kernels=tcfg.use_kernels, grad_accum=tcfg.grad_accum))
+        self._eval = jax.jit(make_eval_step(cfg, loss_chunk=tcfg.loss_chunk))
+        self.history: List[Dict] = []
+
+    # -- checkpointing ---------------------------------------------------------
+    def save_ckpt(self, path: Optional[str] = None) -> str:
+        path = path or self.tcfg.ckpt_path
+        assert path, "no checkpoint path configured"
+        save(path, {"adapters": self.adapters, "opt": self.opt_state},
+             step=self.step_no)
+        return path
+
+    def restore_ckpt(self, path: Optional[str] = None) -> int:
+        path = path or self.tcfg.ckpt_path
+        like = {"adapters": self.adapters, "opt": self.opt_state}
+        tree = restore(path, like)
+        self.adapters, self.opt_state = tree["adapters"], tree["opt"]
+        self.step_no = restore_step(path) or 0
+        return self.step_no
+
+    # -- loop --------------------------------------------------------------------
+    def fit(self, batches: Iterator[Dict], eval_batch: Optional[Dict] = None,
+            steps: Optional[int] = None, verbose: bool = False) -> List[Dict]:
+        steps = steps or self.tcfg.steps
+        t0 = time.time()
+        for batch in batches:
+            if self.step_no >= steps:
+                break
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.adapters, self.opt_state, metrics = self._train(
+                self.params, self.adapters, self.opt_state, jb)
+            self.step_no += 1
+            rec = {"step": self.step_no, "loss": float(metrics["loss"]),
+                   "accuracy": float(metrics["accuracy"]),
+                   "wall_s": time.time() - t0}
+            if eval_batch is not None and self.step_no % self.tcfg.eval_every == 0:
+                em = self._eval(self.params, self.adapters,
+                                {k: jnp.asarray(v) for k, v in eval_batch.items()})
+                rec["eval_loss"] = float(em["loss"])
+                rec["eval_accuracy"] = float(em["accuracy"])
+            if self.tcfg.ckpt_path and self.step_no % self.tcfg.ckpt_every == 0:
+                self.save_ckpt()
+            self.history.append(rec)
+            if verbose and self.step_no % self.tcfg.log_every == 0:
+                print(f"step {rec['step']:5d} loss={rec['loss']:.4f} "
+                      f"acc={rec['accuracy']:.3f}")
+        return self.history

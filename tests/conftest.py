@@ -1,0 +1,14 @@
+import os
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the single real device; only launch/dryrun.py forces
+# 512 placeholder devices (and does so before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

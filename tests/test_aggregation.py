@@ -1,0 +1,193 @@
+"""The five aggregation methods: correctness, rank ordering, cross-term
+noise (the paper's comparative claims)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (adapter_leaf_paths, aggregate, get_path)
+from repro.core import costs as C
+
+
+def _client_tree(rng, L, m, n, r, scale=1.0):
+    return {"blocks": {0: {"attn": {"wq": {
+        "A": jnp.asarray(rng.normal(size=(L, r, n)), jnp.float32),
+        "B": jnp.asarray(rng.normal(size=(L, m, r)), jnp.float32),
+        "scale": jnp.full((L,), scale, jnp.float32),
+    }}}}}
+
+
+def _delta_w(tree, l=0):
+    leaf = get_path(tree, adapter_leaf_paths(tree)[0])
+    s = leaf["scale"][l] if leaf["scale"].ndim else leaf["scale"]
+    return s * (leaf["B"][l] @ leaf["A"][l])
+
+
+@pytest.fixture
+def clients3(rng):
+    trees = [_client_tree(rng, L=2, m=48, n=40, r=r) for r in (4, 8, 16)]
+    weights = [0.5, 0.3, 0.2]
+    return trees, weights
+
+
+def _true_dw(trees, weights, l=0):
+    return sum(w * _delta_w(t, l) for w, t in zip(weights, trees))
+
+
+class TestFlorist:
+    def test_exact_at_tau_one(self, clients3):
+        trees, w = clients3
+        agg = aggregate("florist", trees, w, tau=1.0)
+        for l in range(2):
+            got = _delta_w(agg.global_adapters, l)
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(_true_dw(trees, w, l)),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_per_layer_ranks_recorded(self, clients3):
+        trees, w = clients3
+        agg = aggregate("florist", trees, w, tau=0.9)
+        path = adapter_leaf_paths(trees[0])[0]
+        assert len(agg.ranks[path]) == 2
+        assert all(1 <= p <= 28 for p in agg.ranks[path])
+
+    def test_heterogeneous_scales_folded(self, rng):
+        """Clients with different alpha/r scalings must aggregate the same
+        effective ΔW."""
+        t1 = _client_tree(rng, 1, 32, 24, 4, scale=2.0)
+        t2 = _client_tree(rng, 1, 32, 24, 8, scale=0.5)
+        agg = aggregate("florist", [t1, t2], [0.6, 0.4], tau=1.0)
+        true = 0.6 * _delta_w(t1) + 0.4 * _delta_w(t2)
+        np.testing.assert_allclose(np.asarray(_delta_w(agg.global_adapters)),
+                                   np.asarray(true), rtol=1e-4, atol=1e-4)
+
+
+class TestBaselines:
+    def test_fedit_has_cross_term_noise(self, rng):
+        """(Σw B)(Σw A) ≠ Σw BA — the paper's motivating inaccuracy."""
+        trees = [_client_tree(rng, 1, 32, 24, 8) for _ in range(3)]
+        w = [1 / 3] * 3
+        agg = aggregate("fedit", trees, w)
+        err = np.linalg.norm(np.asarray(_delta_w(agg.global_adapters)
+                                        - _true_dw(trees, w)))
+        assert err > 1.0   # materially wrong, not rounding noise
+
+    def test_fedit_rejects_heterogeneous_without_padding(self, clients3):
+        trees, w = clients3
+        with pytest.raises(ValueError):
+            aggregate("fedit", trees, w)
+        agg = aggregate("fedit", trees, w, zero_padding=True)   # HetLoRA
+        assert agg.global_adapters is not None
+
+    def test_ffa_exact_with_shared_frozen_a(self, rng):
+        """When all clients share frozen A, averaging B is noise-free:
+        Σw B_k A = (Σw B_k) A."""
+        A_shared = jnp.asarray(rng.normal(size=(1, 8, 24)), jnp.float32)
+        trees = []
+        for _ in range(3):
+            t = _client_tree(rng, 1, 32, 24, 8)
+            t["blocks"][0]["attn"]["wq"]["A"] = A_shared
+            trees.append(t)
+        w = [0.2, 0.3, 0.5]
+        agg = aggregate("ffa", trees, w, A_init=trees[0])
+        np.testing.assert_allclose(np.asarray(_delta_w(agg.global_adapters)),
+                                   np.asarray(_true_dw(trees, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_flora_stack_is_exact_and_max_rank(self, clients3):
+        trees, w = clients3
+        agg = aggregate("flora", trees, w)
+        np.testing.assert_allclose(np.asarray(_delta_w(agg.global_adapters)),
+                                   np.asarray(_true_dw(trees, w)),
+                                   rtol=1e-4, atol=1e-4)
+        assert agg.merge_into_base
+        path = adapter_leaf_paths(trees[0])[0]
+        assert agg.ranks[path][0] == 4 + 8 + 16
+
+    def test_flexlora_global_is_exact(self, clients3):
+        trees, w = clients3
+        agg = aggregate("flexlora", trees, w, client_ranks=[4, 8, 16])
+        np.testing.assert_allclose(np.asarray(_delta_w(agg.global_adapters)),
+                                   np.asarray(_true_dw(trees, w)),
+                                   rtol=1e-4, atol=1e-4)
+        assert agg.per_client is not None and len(agg.per_client) == 3
+
+    def test_flexlora_equals_florist_at_same_rank(self, clients3):
+        """Both are truncated SVDs of the same ΔW — at equal rank the
+        reconstructions must coincide (paper: FLoRIST computes FlexLoRA's
+        decomposition without forming ΔW)."""
+        trees, w = clients3
+        fl = aggregate("florist", trees, w, tau=1.0, max_rank=8)
+        fx = aggregate("flexlora", trees, w, client_ranks=[8, 8, 8])
+        dw_fl = _delta_w(fl.global_adapters)
+        cl = fx.per_client[0]
+        dw_fx = _delta_w(cl)
+        np.testing.assert_allclose(np.asarray(dw_fl), np.asarray(dw_fx),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestRankOrdering:
+    def test_paper_rank_inequality(self, clients3):
+        """Rank: FLoRIST < FlexLoRA ≤ FedIT < FLoRA (paper §3)."""
+        trees, w = clients3
+        ranks = [4, 8, 16]
+        fl = aggregate("florist", trees, w, tau=0.9)
+        fx = aggregate("flexlora", trees, w, client_ranks=ranks)
+        fi = aggregate("fedit", trees, w, zero_padding=True)
+        fo = aggregate("flora", trees, w)
+        path = adapter_leaf_paths(trees[0])[0]
+        p_fl = max(fl.ranks[path])
+        p_fx = max(fx.ranks[path])          # ≤ max client rank
+        p_fi = fi.ranks[path][0]            # = max client rank
+        p_fo = fo.ranks[path][0]            # = Σ ranks
+        assert p_fl < p_fi < p_fo
+        assert p_fx <= p_fi
+
+
+class TestCommAccounting:
+    def test_download_ordering(self, clients3):
+        """florist < ffa(half) <= fedit = flexlora-ish < flora (Table 2/3)."""
+        trees, w = clients3
+        ranks = [4, 8, 16]
+        dims = C.leaf_dims(trees[0])
+        res = {}
+        for m, kw in [("florist", dict(tau=0.9)),
+                      ("fedit", dict(zero_padding=True)),
+                      ("flora", {}),
+                      ("flexlora", dict(client_ranks=ranks)),
+                      ("ffa", dict(A_init=trees[0], zero_padding=True))]:
+            agg = aggregate(m, trees, w, **kw)
+            res[m] = C.download_params(m, agg, dims, num_clients=3,
+                                       client_ranks=ranks)
+        assert res["florist"] < res["fedit"]
+        assert res["fedit"] < res["flora"]
+        assert res["ffa"] < res["fedit"]
+
+    def test_upload_ffa_half(self, clients3):
+        trees, w = clients3
+        up_full = C.upload_params("florist", trees)
+        up_ffa = C.upload_params("ffa", trees)
+        assert up_ffa < up_full
+
+    def test_efficiency_proxy_tinyllama_shape(self, rng):
+        """Reproduce the paper's FedIT homogeneous efficiency on TinyLlama
+        geometry: 22 layers × 2 proj × rank16 → 14.2e-4."""
+        trees = [{"blocks": {0: {"attn": {
+            "wq": {"A": jnp.zeros((22, 16, 2048)), "B": jnp.zeros((22, 2048, 16)),
+                   "scale": jnp.ones((22,))},
+            "wv": {"A": jnp.zeros((22, 16, 2048)), "B": jnp.zeros((22, 2048, 16)),
+                   "scale": jnp.ones((22,))},
+        }}}} for _ in range(2)]
+        agg = aggregate("fedit", trees, [0.5, 0.5])
+        eff = C.efficiency(agg)
+        assert eff == pytest.approx(1 / (22 * 2 * 16), rel=1e-6)
+        assert eff == pytest.approx(14.2e-4, rel=0.01)
+
+    def test_server_flops_florist_much_cheaper_than_flexlora(self, clients3):
+        """Table 4: FLoRIST ≪ FlexLoRA server cost (~7.5× there)."""
+        trees, w = clients3
+        dims = C.leaf_dims(trees[0])
+        fl = aggregate("florist", trees, w, tau=0.9)
+        f_fl = C.server_flops("florist", dims, [4, 8, 16], fl.ranks)
+        f_fx = C.server_flops("flexlora", dims, [4, 8, 16])
+        assert f_fl < f_fx

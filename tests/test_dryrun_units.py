@@ -1,0 +1,87 @@
+"""Unit tests for dry-run helpers that don't need 512 devices."""
+import os
+
+import jax
+import pytest
+
+# dryrun sets XLA_FLAGS (512 host devices) at import.  This module is
+# imported during pytest *collection*, i.e. before the JAX backend
+# initializes — restore the env immediately so the rest of the suite keeps
+# seeing the single real device.
+_prev_flags = os.environ.get("XLA_FLAGS")
+from repro.launch import dryrun as D  # noqa: E402
+
+if _prev_flags is None:
+    os.environ.pop("XLA_FLAGS", None)
+else:
+    os.environ["XLA_FLAGS"] = _prev_flags
+from repro.common.config import INPUT_SHAPES
+from repro.configs import get_config
+
+
+class TestCollectiveParser:
+    HLO = """
+  %ar = bf16[16,4096,896]{2,1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[32,128]{1,0} all-gather(%y), dimensions={0}
+  ROOT %a2a = (f32[2,4]{1,0}, f32[2,4]{1,0}) all-to-all(%z, %w), channel_id=3
+  %rs = bf16[8,8]{1,0} reduce-scatter(%q), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%p), source_target_pairs={{0,1}}
+  %notacoll = f32[7]{0} add(%a, %b)
+  %fused_all-reduce_like = f32[9]{0} fusion(%c), kind=kLoop
+"""
+
+    def test_counts_each_type(self):
+        out = D.collective_bytes(self.HLO)
+        assert out["all-reduce"] == 16 * 4096 * 896 * 2
+        assert out["all-gather"] == 32 * 128 * 4
+        assert out["all-to-all"] == 2 * (2 * 4 * 4)
+        assert out["reduce-scatter"] == 8 * 8 * 2
+        assert out["collective-permute"] == 100
+
+    def test_ignores_non_collectives(self):
+        out = D.collective_bytes("%x = f32[4]{0} add(%a, %b)")
+        assert sum(out.values()) == 0
+
+
+class TestShapeBytes:
+    @pytest.mark.parametrize("ty,expect", [
+        ("bf16[10,10]", 200),
+        ("f32[2,3,4]", 96),
+        ("s8[1024]", 1024),
+        ("(f32[2]{0}, bf16[4]{0})", 16),
+        ("pred[8]", 8),
+    ])
+    def test_sizes(self, ty, expect):
+        assert D._shape_bytes(ty) == expect
+
+
+class TestHelpers:
+    def test_reduced_pair_dense(self):
+        cfg = get_config("qwen3-4b")
+        c1, c2, l1, l2 = D._reduced_pair(cfg)
+        assert (c1.num_layers, c2.num_layers) == (2, 4)
+
+    def test_reduced_pair_hybrid_respects_attn_every(self):
+        cfg = get_config("zamba2-1.2b")
+        c1, c2, l1, l2 = D._reduced_pair(cfg)
+        assert l1 == cfg.attn_every and l2 == 2 * cfg.attn_every
+
+    def test_reduced_pair_deepseek_keeps_one_dense(self):
+        cfg = get_config("deepseek-v3-671b")
+        c1, c2, _, _ = D._reduced_pair(cfg)
+        assert c1.first_dense_layers == 1 and c2.first_dense_layers == 1
+
+    def test_kv_dtype_policy(self):
+        assert D.pick_kv_dtype(get_config("qwen1.5-32b"),
+                               INPUT_SHAPES["decode_32k"]) == "int8"
+        assert D.pick_kv_dtype(get_config("qwen3-4b"),
+                               INPUT_SHAPES["decode_32k"]) == "bfloat16"
+        assert D.pick_kv_dtype(get_config("qwen1.5-32b"),
+                               INPUT_SHAPES["train_4k"]) == "bfloat16"
+
+    def test_long_context_variant(self):
+        from repro.configs import long_context_variant
+        dense = long_context_variant(get_config("qwen3-4b"))
+        assert dense.sliding_window == 8192
+        ssm = long_context_variant(get_config("rwkv6-1.6b"))
+        assert ssm.sliding_window == 0   # native sub-quadratic

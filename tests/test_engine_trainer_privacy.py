@@ -1,0 +1,143 @@
+"""Serving engine, Trainer (resume), and DP mechanism."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.configs import get_smoke_config, lora_targets
+from repro.models import transformer as T
+
+
+class TestServeEngine:
+    @pytest.fixture(scope="class")
+    def engine_setup(self):
+        from repro.serve.engine import ServeEngine
+        cfg = get_smoke_config("qwen2-0.5b")
+        params = T.init(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_greedy_completion(self, engine_setup):
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+        uid = eng.submit([5, 6, 7], SamplingParams(max_tokens=8))
+        out = eng.run()
+        assert len(out[uid]) == 8
+        assert all(0 <= t < cfg.vocab_size for t in out[uid])
+
+    def test_more_requests_than_slots(self, engine_setup):
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+        uids = [eng.submit([3 + i], SamplingParams(max_tokens=4))
+                for i in range(5)]
+        out = eng.run()
+        assert set(out) == set(uids)
+        assert all(len(v) == 4 for v in out.values())
+
+    def test_greedy_deterministic(self, engine_setup):
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        outs = []
+        for _ in range(2):
+            eng = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+            uid = eng.submit([9, 10], SamplingParams(max_tokens=6))
+            outs.append(tuple(eng.run()[uid]))
+        assert outs[0] == outs[1]
+
+    def test_sampling_respects_top_k(self):
+        from repro.serve.engine import SamplingParams, sample_logits
+        logits = jnp.asarray([10.0, 9.0, -5.0, -5.0])
+        for seed in range(10):
+            t = int(sample_logits(logits, SamplingParams(temperature=1.0, top_k=2),
+                                  jax.random.PRNGKey(seed)))
+            assert t in (0, 1)
+
+    def test_top_p_filters_tail(self):
+        from repro.serve.engine import SamplingParams, sample_logits
+        logits = jnp.asarray([10.0, 0.0, 0.0, 0.0])
+        for seed in range(10):
+            t = int(sample_logits(logits,
+                                  SamplingParams(temperature=1.0, top_p=0.9),
+                                  jax.random.PRNGKey(seed)))
+            assert t == 0
+
+
+class TestTrainer:
+    def _mk(self, tmp_path):
+        from repro.train.trainer import Trainer, TrainerConfig
+        cfg = get_smoke_config("qwen2-0.5b")
+        tcfg = TrainerConfig(steps=6, eval_every=3, ckpt_every=3,
+                             ckpt_path=str(tmp_path / "ck.npz"), loss_chunk=8)
+        return Trainer(cfg, LoRAConfig(rank=4, alpha=4.0), OptimConfig(lr=1e-3),
+                       tcfg, targets=lora_targets(cfg)), cfg
+
+    def _batches(self, cfg, n=100):
+        rng = np.random.default_rng(0)
+        for _ in range(n):
+            yield {"tokens": rng.integers(0, cfg.vocab_size, (2, 16)),
+                   "loss_mask": np.ones((2, 16), np.float32)}
+
+    def test_fit_and_history(self, tmp_path):
+        tr, cfg = self._mk(tmp_path)
+        hist = tr.fit(self._batches(cfg), steps=4)
+        assert len(hist) == 4 and np.isfinite(hist[-1]["loss"])
+
+    def test_checkpoint_resume(self, tmp_path):
+        tr, cfg = self._mk(tmp_path)
+        tr.fit(self._batches(cfg), steps=3)   # ckpt at step 3
+        tr2, _ = self._mk(tmp_path)
+        step = tr2.restore_ckpt()
+        assert step == 3
+        a1 = jax.tree.leaves(tr.adapters)
+        a2 = jax.tree.leaves(tr2.adapters)
+        for x, y in zip(a1, a2):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestPrivacy:
+    def test_clip_bounds_norm(self, rng):
+        from repro.core.privacy import clip_update, global_l2
+        tree = {"a": jnp.asarray(rng.normal(size=(8, 8)) * 10, jnp.float32)}
+        clipped, n = clip_update(tree, 1.0)
+        assert float(global_l2(clipped)) <= 1.0 + 1e-5
+        small = {"a": jnp.asarray(rng.normal(size=(8, 8)) * 1e-3, jnp.float32)}
+        same, _ = clip_update(small, 1.0)
+        np.testing.assert_array_equal(np.asarray(same["a"]), np.asarray(small["a"]))
+
+    def test_clip_anchored_at_init(self, rng):
+        from repro.core.privacy import clip_client_adapters, global_l2, tree_sub
+        init = {"x": {"A": jnp.zeros((4, 8)), "B": jnp.ones((8, 4)),
+                      "scale": jnp.asarray(1.0)}}
+        trained = {"x": {"A": jnp.full((4, 8), 5.0), "B": jnp.ones((8, 4)),
+                         "scale": jnp.asarray(1.0)}}
+        out = clip_client_adapters(trained, init, clip_norm=1.0)
+        delta = tree_sub(out, init)
+        assert float(global_l2(delta)) <= 1.0 + 1e-5
+
+    def test_noise_zero_sigma_identity(self, rng):
+        from repro.core.privacy import add_gaussian_noise
+        tree = {"A": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)}
+        out = add_gaussian_noise(tree, 0.0, 1.0, 10, jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(np.asarray(out["A"]), np.asarray(tree["A"]))
+
+    def test_dp_federated_round_runs(self):
+        from repro.core.federated import FederatedTrainer
+        cfg = ModelConfig(name="dp-tiny", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                          d_ff=128, vocab_size=256, dtype="float32")
+        fed = FedConfig(num_clients=8, clients_per_round=3, method="florist",
+                        tau=0.9, homogeneous_rank=8, seed=0)
+        tr = FederatedTrainer(cfg, fed, LoRAConfig(rank=8, alpha=8.0),
+                              OptimConfig(lr=3e-3), batch_size=8,
+                              local_steps=2, seq_len=32,
+                              dp_clip=1.0, dp_sigma=0.1)
+        hist = tr.run(2)
+        assert all(np.isfinite(h.eval_loss) for h in hist)
+
+    def test_sigma_calibration(self):
+        from repro.core.privacy import noise_multiplier_for_epsilon
+        assert noise_multiplier_for_epsilon(1.0) > noise_multiplier_for_epsilon(8.0)

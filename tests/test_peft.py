@@ -1,0 +1,103 @@
+"""LoRA adapter tree machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, lora_targets
+from repro.models import transformer as T
+from repro.peft.lora import (adapter_num_params, init_lora, lora_proj,
+                             match_rank, merge_lora, target_leaves)
+
+
+@pytest.fixture
+def setup():
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    adapters = init_lora(params, lora_targets(cfg), 8, 16.0,
+                         jax.random.PRNGKey(1))
+    return cfg, params, adapters
+
+
+def test_targets_found(setup):
+    cfg, params, adapters = setup
+    leaves = target_leaves(params, lora_targets(cfg))
+    assert len(leaves) == 4          # wq, wk, wv, wo (stacked over layers)
+    paths = {l[0][-1] for l in leaves}
+    assert paths == {"wq", "wk", "wv", "wo"}
+
+
+def test_b_zero_init_means_identity(setup):
+    """Fresh adapters must not change the model (B = 0)."""
+    cfg, params, adapters = setup
+    toks = jnp.arange(2 * 16).reshape(2, 16) % cfg.vocab_size
+    h0, _ = T.forward(cfg, params, {"tokens": toks})
+    h1, _ = T.forward(cfg, params, {"tokens": toks}, adapters)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), atol=1e-6)
+
+
+def test_merge_equals_adapter_forward(setup):
+    cfg, params, adapters = setup
+    adapters = jax.tree.map(
+        lambda x: x + 0.02 if x.ndim >= 2 else x, adapters)
+    toks = jnp.arange(2 * 16).reshape(2, 16) % cfg.vocab_size
+    h_ad, _ = T.forward(cfg, params, {"tokens": toks}, adapters)
+    merged = merge_lora(params, adapters)
+    h_merged, _ = T.forward(cfg, merged, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(h_ad), np.asarray(h_merged),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lora_proj_math(rng):
+    x = jnp.asarray(rng.normal(size=(3, 10, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    ad = {"A": jnp.asarray(rng.normal(size=(4, 16)), jnp.float32),
+          "B": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+          "scale": jnp.asarray(0.5)}
+    y = lora_proj(x, w, ad)
+    expect = x @ w + 0.5 * (x @ ad["A"].T) @ ad["B"].T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("r_from,r_to", [(8, 4), (8, 16), (8, 8)])
+def test_match_rank_shapes(setup, r_from, r_to):
+    cfg, params, adapters = setup
+    out = match_rank(adapters, r_to)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(out)[0]:
+        last = getattr(path[-1], "key", None)
+        if last == "A":
+            assert leaf.shape[-2] == r_to
+        if last == "B":
+            assert leaf.shape[-1] == r_to
+
+
+def test_match_rank_truncation_preserves_top_directions(rng):
+    """After truncation, B·A equals the top-r submatrix product."""
+    ad = {"x": {"A": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+                "B": jnp.asarray(rng.normal(size=(12, 8)), jnp.float32),
+                "scale": jnp.asarray(1.0)}}
+    tr = match_rank(ad, 4)
+    expect = ad["x"]["B"][:, :4] @ ad["x"]["A"][:4]
+    got = tr["x"]["B"] @ tr["x"]["A"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect))
+
+
+def test_match_rank_padding_keeps_product(rng):
+    ad = {"x": {"A": jnp.asarray(rng.normal(size=(4, 16)), jnp.float32),
+                "B": jnp.asarray(rng.normal(size=(12, 4)), jnp.float32),
+                "scale": jnp.asarray(1.0)}}
+    pd = match_rank(ad, 8)
+    np.testing.assert_allclose(np.asarray(pd["x"]["B"] @ pd["x"]["A"]),
+                               np.asarray(ad["x"]["B"] @ ad["x"]["A"]),
+                               atol=1e-6)
+
+
+def test_adapter_num_params(setup):
+    cfg, params, adapters = setup
+    n = adapter_num_params(adapters)
+    # 4 targets × L layers × r × (in + out)
+    L, d, r = cfg.num_layers, cfg.d_model, 8
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    expect = L * r * ((d + H * hd) + 2 * (d + K * hd) + (H * hd + d))
+    assert n == expect

@@ -1,0 +1,82 @@
+"""Serving: KV caches (full / sliding / int8), loss chunking, checkpoint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve.kvcache import attn_cache, cache_kv, cache_update, dequant, quant
+from repro.train.loss import chunked_ce
+
+
+class TestQuant:
+    def test_roundtrip_error_bounded(self, rng):
+        x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)) * 3, jnp.float32)
+        q, s = quant(x)
+        err = np.abs(np.asarray(dequant(q, s) - x))
+        # absmax int8: error <= scale/2 per element
+        assert (err <= np.asarray(s) * 0.5 + 1e-6).all()
+
+    def test_quant_preserves_zero(self):
+        q, s = quant(jnp.zeros((2, 4)))
+        assert (np.asarray(dequant(q, s)) == 0).all()
+
+
+class TestRingBuffer:
+    def test_wraparound(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        c = attn_cache(cfg, batch=1, capacity=4, dtype=jnp.float32)
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        for t in range(6):
+            k = jnp.full((1, 1, K, hd), float(t))
+            c = cache_update(cfg, c, k, k)
+        assert int(c["pos"]) == 6
+        assert int(c["length"]) == 4
+        kc, _ = cache_kv(cfg, c)
+        # slots hold tokens 4,5,2,3 (ring)
+        got = sorted(float(kc[0, i, 0, 0]) for i in range(4))
+        assert got == [2.0, 3.0, 4.0, 5.0]
+
+
+class TestChunkedCE:
+    @pytest.mark.parametrize("chunk", [4, 8, 32, 31])
+    def test_matches_direct(self, rng, chunk):
+        cfg = get_smoke_config("qwen2-0.5b")
+        params = T.init(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 32
+        hidden = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+        mask = jnp.asarray(rng.integers(0, 2, (B, S)), jnp.float32)
+        loss, m = chunked_ce(cfg, params, hidden, toks, mask, chunk=chunk)
+        # direct
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (hidden[:, :-1] @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        tgt = jnp.take_along_axis(logits, toks[:, 1:, None], -1)[..., 0]
+        direct = float(((lse - tgt) * mask[:, 1:]).sum() / mask[:, 1:].sum())
+        assert float(loss) == pytest.approx(direct, rel=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng):
+        from repro.checkpoint.io import restore, restore_step, save
+        cfg = get_smoke_config("qwen3-4b")
+        params = T.init(cfg, jax.random.PRNGKey(0))
+        p = str(tmp_path / "ckpt.npz")
+        save(p, params, step=42)
+        like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+        back = restore(p, like)
+        flat_a = jax.tree.leaves(params)
+        flat_b = jax.tree.leaves(back)
+        for a, b in zip(flat_a, flat_b):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+        assert restore_step(p) == 42
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        from repro.checkpoint.io import restore, save
+        save(str(tmp_path / "c.npz"), {"w": jnp.ones(4)})
+        with pytest.raises(ValueError):
+            restore(str(tmp_path / "c.npz"), {"w": jnp.ones(5)})

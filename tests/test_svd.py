@@ -1,0 +1,151 @@
+"""FLoRIST SVD pipeline: the paper's central mathematical claims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.svd import (eckart_young_bound, energy_rank, florist_core,
+                            florist_core_padded, gram_svd, reconstruction_error,
+                            stack_adapters, thin_svd)
+
+
+def _clients(rng, m, n, ranks):
+    Bs = [jnp.asarray(rng.normal(size=(m, r)), jnp.float32) for r in ranks]
+    As = [jnp.asarray(rng.normal(size=(r, n)), jnp.float32) for r in ranks]
+    w = rng.dirichlet([1.0] * len(ranks)).tolist()
+    return Bs, As, w
+
+
+class TestExactness:
+    """Claim: (B_g, A_g) is the exact truncated SVD of ΔW = Σ w_k B_k A_k
+    computed without forming ΔW (paper §3, Eq. 4)."""
+
+    def test_tau_one_reconstructs_exactly(self, rng):
+        Bs, As, w = _clients(rng, 96, 80, [4, 8, 16])
+        out = florist_core(Bs, As, w, tau=1.0)
+        dw = sum(wi * (B @ A) for wi, B, A in zip(w, Bs, As))
+        rel = float(jnp.linalg.norm(dw - out.B_g @ out.A_g) / jnp.linalg.norm(dw))
+        assert rel < 1e-5
+
+    def test_spectrum_matches_direct_svd(self, rng):
+        """S_P are the singular values of ΔW (paper: 'without explicitly
+        forming ΔW')."""
+        Bs, As, w = _clients(rng, 64, 96, [4, 4, 8])
+        out = florist_core(Bs, As, w, tau=1.0)
+        dw = sum(wi * (B @ A) for wi, B, A in zip(w, Bs, As))
+        s_direct = jnp.linalg.svd(dw, compute_uv=False)
+        r = sum([4, 4, 8])
+        np.testing.assert_allclose(np.asarray(out.spectrum[:r]),
+                                   np.asarray(s_direct[:r]),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_error_equals_eckart_young_bound(self, rng):
+        """Truncated SVD achieves the Eckart–Young optimum, so the paper's
+        Eq. 5 bound is met with equality."""
+        Bs, As, w = _clients(rng, 96, 80, [8, 8])
+        out = florist_core(Bs, As, w, tau=0.85)
+        err = reconstruction_error(Bs, As, w, out.B_g, out.A_g)
+        bound = eckart_young_bound(out.spectrum, out.p)
+        assert err == pytest.approx(bound, rel=1e-3)
+
+    def test_truncation_beats_any_other_rank_p_factorization(self, rng):
+        """Eckart–Young: no rank-p pair (e.g. FedIT-averaged) does better."""
+        Bs, As, w = _clients(rng, 64, 64, [8, 8])
+        out = florist_core(Bs, As, w, tau=0.8)
+        dw = sum(wi * (B @ A) for wi, B, A in zip(w, Bs, As))
+        err_fl = float(jnp.linalg.norm(dw - out.B_g @ out.A_g))
+        # a same-rank alternative: truncated FedAvg of the factors
+        B_avg = sum(wi * B for wi, B in zip(w, Bs))[:, : out.p]
+        A_avg = sum(wi * A for wi, A in zip(w, As))[: out.p]
+        err_avg = float(jnp.linalg.norm(dw - B_avg @ A_avg))
+        assert err_fl <= err_avg + 1e-5
+
+
+class TestEnergyRank:
+    @given(st.lists(st.floats(0.01, 100.0), min_size=1, max_size=64),
+           st.floats(0.05, 1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_energy_rank_is_minimal_and_sufficient(self, sigmas, tau):
+        s = jnp.asarray(sorted(sigmas, reverse=True), jnp.float32)
+        p = energy_rank(s, tau)
+        e = np.cumsum(np.asarray(s, np.float64) ** 2)
+        frac = e / e[-1]
+        assert frac[p - 1] >= tau - 1e-6          # sufficient
+        if p > 1:
+            assert frac[p - 2] < tau + 1e-6        # minimal
+
+    def test_tau_monotone(self, rng):
+        s = jnp.asarray(np.sort(rng.gamma(2, 2, size=32))[::-1].copy(), jnp.float32)
+        ps = [energy_rank(s, t) for t in (0.5, 0.8, 0.9, 0.99, 1.0)]
+        assert ps == sorted(ps)
+        assert ps[-1] <= 32
+
+
+class TestBackends:
+    @pytest.mark.parametrize("shape", [(128, 16), (16, 128), (64, 64)])
+    def test_gram_svd_matches_lapack(self, rng, shape):
+        x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        a = thin_svd(x, "svd")
+        g = gram_svd(x)
+        np.testing.assert_allclose(np.asarray(g.s), np.asarray(a.s),
+                                   rtol=2e-3, atol=2e-3)
+        # U S Vt must reconstruct x
+        np.testing.assert_allclose(np.asarray(g.u @ jnp.diag(g.s) @ g.vt),
+                                   np.asarray(x), rtol=2e-2, atol=2e-3)
+
+    def test_padded_variant_same_delta_w(self, rng):
+        Bs, As, w = _clients(rng, 48, 40, [4, 8])
+        B_stack, A_stack = stack_adapters(Bs, As, w)
+        bg, ag, sp, p = florist_core_padded(B_stack, A_stack, tau=0.9)
+        out = florist_core(Bs, As, w, tau=0.9)
+        assert int(p) == out.p
+        np.testing.assert_allclose(np.asarray(bg @ ag),
+                                   np.asarray(out.B_g @ out.A_g),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestKneeRank:
+    """Beyond-paper: automatic rank selection (paper §5 future work (i))."""
+
+    def test_sharp_spectrum_small_rank(self):
+        from repro.core.svd import knee_rank
+        s = jnp.asarray([10.0, 9.0, 8.0] + [0.01] * 29, jnp.float32)
+        p = knee_rank(s)
+        assert 1 <= p <= 4
+
+    def test_flat_spectrum_larger_rank(self):
+        from repro.core.svd import knee_rank
+        sharp = knee_rank(jnp.asarray([10.0] * 2 + [0.01] * 30, jnp.float32))
+        flat = knee_rank(jnp.asarray(np.linspace(10, 9, 32), jnp.float32))
+        assert flat > sharp
+
+    def test_auto_in_florist_core(self, rng):
+        Bs, As, w = _clients(rng, 64, 48, [8, 8])
+        out = florist_core(Bs, As, w, tau="auto")
+        assert 1 <= out.p <= 16
+        # reconstruction still bounded by Eckart–Young at the chosen rank
+        err = reconstruction_error(Bs, As, w, out.B_g, out.A_g)
+        assert err == pytest.approx(eckart_young_bound(out.spectrum, out.p),
+                                    rel=1e-3)
+
+
+class TestProperties:
+    @given(st.integers(1, 4), st.floats(0.3, 0.999))
+    @settings(max_examples=20, deadline=None)
+    def test_rank_never_exceeds_stack_rank(self, k, tau):
+        rng = np.random.default_rng(k)
+        ranks = [int(r) for r in rng.integers(2, 8, size=k)]
+        Bs, As, w = _clients(rng, 32, 24, ranks)
+        out = florist_core(Bs, As, w, tau=tau)
+        assert 1 <= out.p <= sum(ranks)
+
+    def test_scaling_invariance_of_product(self, rng):
+        """ΔW depends only on w_k·B_k A_k — folding weights into A_stack
+        (the paper's choice) must equal folding into B_stack."""
+        Bs, As, w = _clients(rng, 40, 32, [4, 4])
+        out_a = florist_core(Bs, As, w, tau=1.0)
+        Bs2 = [wi * B for wi, B in zip(w, Bs)]
+        out_b = florist_core(Bs2, As, [1.0, 1.0], tau=1.0)
+        np.testing.assert_allclose(np.asarray(out_a.B_g @ out_a.A_g),
+                                   np.asarray(out_b.B_g @ out_b.A_g),
+                                   rtol=1e-4, atol=1e-4)

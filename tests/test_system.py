@@ -1,0 +1,77 @@
+"""System-level integration: the full paper pipeline end to end, plus the
+headline comparative claims on one shared run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core import costs as C
+from repro.core.federated import FederatedTrainer
+
+CFG = ModelConfig(name="sys-tiny", family="dense", num_layers=3, d_model=96,
+                  num_heads=4, num_kv_heads=2, head_dim=24, d_ff=192,
+                  vocab_size=256, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def runs():
+    """One 4-round run per method on identical data/seed."""
+    out = {}
+    for method in ("florist", "fedit", "ffa", "flora", "flexlora"):
+        fed = FedConfig(num_clients=16, clients_per_round=5, method=method,
+                        tau=0.9, homogeneous_rank=8, seed=1)
+        tr = FederatedTrainer(CFG, fed, LoRAConfig(rank=8, alpha=8.0),
+                              OptimConfig(lr=3e-3), batch_size=8,
+                              local_steps=3, seq_len=32)
+        out[method] = (tr.run(4), tr)
+    return out
+
+
+def test_all_methods_learn(runs):
+    for method, (hist, _) in runs.items():
+        assert hist[-1].eval_loss < hist[0].eval_loss + 0.02, method
+
+
+def test_florist_most_download_efficient(runs):
+    """Headline claim: FLoRIST has the best download communication
+    efficiency among the two-adapter methods (FFA halves params by
+    construction but fell behind in accuracy in the paper)."""
+    down = {m: h[-1].download_params for m, (h, _) in runs.items()}
+    assert down["florist"] < down["fedit"]
+    assert down["florist"] < down["flora"]
+    assert down["florist"] < down["flexlora"]
+
+
+def test_florist_accuracy_competitive(runs):
+    """FLoRIST loss within a small margin of the best method.  (4 rounds on
+    a tiny model — differences are ~1e-2; the paper's ±1% claim is over 75
+    rounds, exercised in benchmarks/table2.)"""
+    losses = {m: h[-1].eval_loss for m, (h, _) in runs.items()}
+    best = min(losses.values())
+    assert losses["florist"] <= best + 0.1
+
+
+def test_rank_ordering_on_live_run(runs):
+    r = {m: h[-1].download_rank for m, (h, _) in runs.items()}
+    # Rank: FLoRIST < FlexLoRA <= FedIT < FLoRA (paper §3)
+    assert r["florist"] < r["fedit"] < r["flora"]
+
+
+def test_comm_accounting_consistency(runs):
+    """upload == K clients × adapter params; download scales with rank."""
+    hist, tr = runs["florist"]
+    rec = hist[-1]
+    assert rec.upload_params > 0
+    assert rec.download_params < rec.upload_params * tr.fed.clients_per_round
+
+
+def test_gram_svd_backend_end_to_end():
+    """The TPU (Gram/eigh) SVD route drives the same pipeline."""
+    fed = FedConfig(num_clients=8, clients_per_round=3, method="florist",
+                    tau=0.9, homogeneous_rank=8, seed=0)
+    tr = FederatedTrainer(CFG, fed, LoRAConfig(rank=8, alpha=8.0),
+                          OptimConfig(lr=3e-3), batch_size=8, local_steps=2,
+                          seq_len=32, svd_method="gram")
+    hist = tr.run(2)
+    assert np.isfinite(hist[-1].eval_loss)
