@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core import costs as C
-from repro.core.aggregation import aggregate
+from repro.core.aggregators import leaf_dims, make_aggregator
 
 L, D, R, K = 22, 2048, 16, 10       # TinyLlama: layers, d_model, rank, clients
 
@@ -29,18 +29,23 @@ def run(florist_p: int = 7):
     full_ft_mb = C.mb(cfg.param_count())
     trees = [_client_tree(R) for _ in range(K)]
     w = [1.0 / K] * K
-    dims = C.leaf_dims(trees[0])
+    dims = leaf_dims(trees[0])
 
     rows = [{"name": "table3/full_ft", "us_per_call": "",
              "derived": f"upload_mb={full_ft_mb:.2f};download_mb={full_ft_mb:.2f}"}]
     out = {}
-    for method, kw in [("fedit", {}), ("flora", {}),
-                       ("flexlora", dict(client_ranks=[R] * K)),
-                       ("ffa", dict(A_init=trees[0])),
-                       ("florist", dict(tau=1.0, max_rank=florist_p))]:
-        agg = aggregate(method, trees, w, **kw)
-        up = C.mb(C.upload_params(method, trees)) / K          # per client
-        down = C.mb(C.download_params(method, agg, dims, 1, [R] * K))
+    for method, cfg_kw in [("fedit", {}), ("flora", {}),
+                           ("flexlora", {}),
+                           ("ffa", dict(A_init=trees[0])),
+                           ("florist", dict(tau=1.0, max_rank=florist_p))]:
+        # streaming server lifecycle: one client in memory at a time
+        strat = make_aggregator(method, **cfg_kw)
+        strat.begin_round(dims)
+        for tree, wk in zip(trees, w):
+            strat.add_client(tree, wk, rank=R)
+        agg = strat.finalize()
+        up = C.mb(strat.round_upload_params) / K               # per client
+        down = C.mb(strat.download_params(agg, dims, 1, [R] * K))
         out[method] = down
         rows.append({"name": f"table3/{method}", "us_per_call": "",
                      "derived": f"upload_mb={up:.2f};download_mb={down:.2f}"})

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core import costs as C
+from repro.core.aggregators import make_aggregator
 from repro.core.svd import florist_core_padded, thin_svd
 
 M = N = 2048
@@ -59,7 +59,7 @@ def run():
     dims = {("blocks", 0, "attn", "wq"): (22, N, M),
             ("blocks", 0, "attn", "wv"): (22, N, M)}
     ranks = {k: [7] * 22 for k in dims}
-    ana = {m: C.server_flops(m, dims, [R] * K, ranks)
+    ana = {m: make_aggregator(m).server_flops(dims, [R] * K, ranks)
            for m in ("fedit", "ffa", "flora", "flexlora", "florist")}
 
     rows = [

@@ -12,6 +12,8 @@ import argparse
 import time
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+import repro.core.distributed  # noqa: F401  (registers florist_sharded)
+from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
 
 PROFILES = {
@@ -30,7 +32,7 @@ PROFILES = {
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", default="florist",
-                    choices=["florist", "fedit", "ffa", "flora", "flexlora"])
+                    choices=available_aggregators())
     ap.add_argument("--model", default="tiny", choices=list(PROFILES))
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--local-steps", type=int, default=8)

@@ -6,6 +6,7 @@ eval quality vs τ, on the synthetic federated task.
 import argparse
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.aggregators import make_aggregator
 from repro.core.federated import FederatedTrainer
 
 CFG = ModelConfig(name="sweep-tiny", family="dense", num_layers=4, d_model=64,
@@ -24,9 +25,12 @@ def main():
     for tau in (float(t) for t in args.taus.split(",")):
         fed = FedConfig(num_clients=20, clients_per_round=5, method="florist",
                         tau=tau, homogeneous_rank=8, seed=0)
+        # the strategy is injectable: build it explicitly and hand it to the
+        # trainer (same as what fed.method would construct via the registry)
         tr = FederatedTrainer(CFG, fed, LoRAConfig(rank=8, alpha=8.0),
                               OptimConfig(lr=3e-3), batch_size=8,
-                              local_steps=4, seq_len=32)
+                              local_steps=4, seq_len=32,
+                              aggregator=make_aggregator("florist", tau=tau))
         hist = tr.run(args.rounds)
         last = hist[-1]
         rank = last.global_rank_total

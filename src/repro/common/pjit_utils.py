@@ -106,3 +106,17 @@ def batch_axes() -> Axis:
     if "data" in sizes:
         return "data"
     return None
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable ``shard_map``: jax >= 0.5 exposes ``jax.shard_map``
+    with ``check_vma``; 0.4.x only has the experimental one with
+    ``check_rep`` (same semantics: replication/varying-manual-axes check)."""
+    try:
+        sm = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as esm
+        return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_vma=check_vma)

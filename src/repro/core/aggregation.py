@@ -1,5 +1,13 @@
-"""Server-side aggregation: FLoRIST + the four baselines (FedIT, FFA-LoRA,
-FLoRA, FlexLoRA), operating on per-client adapter trees.
+"""Legacy one-shot aggregation entry point (compatibility shim).
+
+The aggregation layer lives in :mod:`repro.core.aggregators`: each method is
+a registered :class:`~repro.core.aggregators.Aggregator` strategy with a
+streaming ``begin_round`` / ``add_client`` / ``finalize`` lifecycle, its own
+client-init semantics and its own cost model.  This module keeps the
+original call shape — ``aggregate(method, clients, weights, **kw)`` — as a
+thin wrapper that builds the registered strategy and runs the streaming
+lifecycle over the in-memory client list, so existing callers and tests
+keep working unchanged.
 
 A client update is an adapter tree whose LoRA leaves are
 ``{"A": (L, r_k, n), "B": (L, m, r_k), "scale": (L,)}`` (or un-stacked 2-D
@@ -12,297 +20,27 @@ lives in :mod:`repro.core.distributed`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# re-exported for callers that still import the tree plumbing from here
+from repro.core.aggregators import (AggResult, METHODS, accepted_config,
+                                    adapter_leaf_paths, get_path,
+                                    make_aggregator, set_path)
 
-from repro.core.svd import florist_core, thin_svd, energy_rank
+__all__ = ["AggResult", "METHODS", "adapter_leaf_paths", "aggregate",
+           "get_path", "set_path"]
 
-METHODS = ("florist", "fedit", "ffa", "flora", "flexlora")
-
-
-# ---------------------------------------------------------------------------
-# tree plumbing
-# ---------------------------------------------------------------------------
-
-def adapter_leaf_paths(tree: Dict) -> List[Tuple]:
-    """Paths of LoRA leaves (subdicts holding A/B/scale)."""
-    out = []
-
-    def walk(node, path):
-        if isinstance(node, dict) and "A" in node and "B" in node:
-            out.append(path)
-            return
-        if isinstance(node, dict):
-            for k, v in node.items():
-                walk(v, path + (k,))
-
-    walk(tree, ())
-    return out
-
-
-def get_path(tree, path):
-    node = tree
-    for k in path:
-        node = node[k]
-    return node
-
-
-def set_path(tree, path, value):
-    node = tree
-    for k in path[:-1]:
-        node = node.setdefault(k, {})
-    node[path[-1]] = value
-
-
-def _fold_scale(leaf: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Return (B', A) with scale folded into B. Handles stacked + flat."""
-    A, B, s = leaf["A"], leaf["B"], leaf["scale"]
-    if B.ndim == 3:
-        sl = s[:, None, None] if s.ndim == 1 else s
-        return B * sl, A
-    return B * s, A
-
-
-def _per_layer(mat: jnp.ndarray, l: int, stacked: bool):
-    return mat[l] if stacked else mat
-
-
-def _ones_scale(ref_scale):
-    return jnp.ones_like(ref_scale)
-
-
-# ---------------------------------------------------------------------------
-# result container
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class AggResult:
-    method: str
-    global_adapters: Optional[Dict]          # unified tree (None for flexlora)
-    per_client: Optional[List[Dict]]         # flexlora: tailored trees
-    ranks: Dict[Tuple, List[int]]            # leaf path -> per-layer rank
-    spectra: Dict[Tuple, List[np.ndarray]]   # leaf path -> per-layer σ (florist/flex)
-    merge_into_base: bool = False            # flora semantics
-
-    def total_download_rank(self) -> int:
-        return int(sum(sum(v) for v in self.ranks.values()))
-
-
-# ---------------------------------------------------------------------------
-# the five methods
-# ---------------------------------------------------------------------------
-
-def aggregate_fedit(clients: Sequence[Dict], weights: Sequence[float],
-                    zero_padding: bool = False) -> AggResult:
-    """FedAvg of A's and B's separately — mathematically inexact (cross
-    terms).  Heterogeneous ranks require HetLoRA zero-padding."""
-    ranks = [get_path(c, adapter_leaf_paths(c)[0])["A"].shape[-2] for c in clients]
-    R = max(ranks)
-    if len(set(ranks)) > 1 and not zero_padding:
-        raise ValueError("FedIT requires homogeneous ranks (or zero_padding=True)")
-    out: Dict = {}
-    rank_rec: Dict[Tuple, List[int]] = {}
-    for path in adapter_leaf_paths(clients[0]):
-        As, Bs = [], []
-        for c in clients:
-            Bk, Ak = _fold_scale(get_path(c, path))
-            r = Ak.shape[-2]
-            if r < R:
-                padA = [(0, 0)] * Ak.ndim
-                padA[-2] = (0, R - r)
-                padB = [(0, 0)] * Bk.ndim
-                padB[-1] = (0, R - r)
-                Ak, Bk = jnp.pad(Ak, padA), jnp.pad(Bk, padB)
-            As.append(Ak)
-            Bs.append(Bk)
-        A_avg = sum(w * A for w, A in zip(weights, As))
-        B_avg = sum(w * B for w, B in zip(weights, Bs))
-        ref = get_path(clients[0], path)["scale"]
-        set_path(out, path, {"A": A_avg, "B": B_avg, "scale": _ones_scale(ref)})
-        L = A_avg.shape[0] if A_avg.ndim == 3 else 1
-        rank_rec[path] = [R] * L
-    return AggResult("fedit", out, None, rank_rec, {})
-
-
-def aggregate_ffa(clients: Sequence[Dict], weights: Sequence[float],
-                  A_init: Dict, zero_padding: bool = False) -> AggResult:
-    """FFA-LoRA: A frozen at init (shared), only B averaged."""
-    out: Dict = {}
-    rank_rec: Dict[Tuple, List[int]] = {}
-    for path in adapter_leaf_paths(clients[0]):
-        Bs = []
-        ranks = []
-        for c in clients:
-            Bk, _ = _fold_scale(get_path(c, path))
-            ranks.append(Bk.shape[-1])
-            Bs.append(Bk)
-        R = max(ranks)
-        if len(set(ranks)) > 1 and not zero_padding:
-            raise ValueError("FFA-LoRA requires homogeneous ranks (or zero_padding=True)")
-        padded = []
-        for Bk in Bs:
-            r = Bk.shape[-1]
-            if r < R:
-                pad = [(0, 0)] * Bk.ndim
-                pad[-1] = (0, R - r)
-                Bk = jnp.pad(Bk, pad)
-            padded.append(Bk)
-        B_avg = sum(w * B for w, B in zip(weights, padded))
-        a0 = get_path(A_init, path)
-        A = a0["A"]
-        r0 = A.shape[-2]
-        if r0 < R:
-            pad = [(0, 0)] * A.ndim
-            pad[-2] = (0, R - r0)
-            A = jnp.pad(A, pad)
-        elif r0 > R:
-            A = A[..., :R, :]
-        set_path(out, path, {"A": A, "B": B_avg, "scale": _ones_scale(a0["scale"])})
-        L = B_avg.shape[0] if B_avg.ndim == 3 else 1
-        # only B travels; rank-equivalent download is R/2 per the paper's
-        # half-parameter accounting (handled in costs.py)
-        rank_rec[path] = [R] * L
-    return AggResult("ffa", out, None, rank_rec, {})
-
-
-def aggregate_flora(clients: Sequence[Dict], weights: Sequence[float]) -> AggResult:
-    """FLoRA: stack everything, broadcast the stack (rank = Σ r_k); clients
-    merge into the frozen base and re-init local adapters."""
-    out: Dict = {}
-    rank_rec: Dict[Tuple, List[int]] = {}
-    for path in adapter_leaf_paths(clients[0]):
-        Bs, As = [], []
-        for c, w in zip(clients, weights):
-            Bk, Ak = _fold_scale(get_path(c, path))
-            Bs.append(Bk)
-            As.append(w * Ak)
-        B_stack = jnp.concatenate(Bs, axis=-1)
-        A_stack = jnp.concatenate(As, axis=-2)
-        ref = get_path(clients[0], path)["scale"]
-        set_path(out, path, {"A": A_stack, "B": B_stack, "scale": _ones_scale(ref)})
-        L = A_stack.shape[0] if A_stack.ndim == 3 else 1
-        rank_rec[path] = [A_stack.shape[-2]] * L
-    return AggResult("flora", out, None, rank_rec, {}, merge_into_base=True)
-
-
-def aggregate_flexlora(clients: Sequence[Dict], weights: Sequence[float],
-                       client_ranks: Sequence[int]) -> AggResult:
-    """FlexLoRA: form the dense ΔW = Σ w_k B_k A_k per layer, full SVD, then
-    cut per-client adapters at each client's own rank."""
-    paths = adapter_leaf_paths(clients[0])
-    per_client: List[Dict] = [{} for _ in clients]
-    glob: Dict = {}
-    rank_rec: Dict[Tuple, List[int]] = {}
-    spectra: Dict[Tuple, List[np.ndarray]] = {}
-    for path in paths:
-        leaf0 = get_path(clients[0], path)["A"]
-        stacked = leaf0.ndim == 3
-        L = leaf0.shape[0] if stacked else 1
-        Rmax = max(client_ranks)
-        ub_l, sp_l, vt_l = [], [], []
-        for l in range(L):
-            dw = None
-            for c, w in zip(clients, weights):
-                Bk, Ak = _fold_scale(get_path(c, path))
-                Bl, Al = _per_layer(Bk, l, stacked), _per_layer(Ak, l, stacked)
-                term = w * (Bl.astype(jnp.float32) @ Al.astype(jnp.float32))
-                dw = term if dw is None else dw + term
-            u, s, vt = thin_svd(dw, "svd")
-            ub_l.append(u)
-            sp_l.append(s)
-            vt_l.append(vt)
-        spectra[path] = [np.asarray(s) for s in sp_l]
-        rank_rec[path] = [min(Rmax, int(s.shape[0])) for s in sp_l]
-        # global (exact) adapters at full rank — used for server-side eval
-        r_full = sp_l[0].shape[0]
-        Bg = jnp.stack([u * s[None, :] for u, s in zip(ub_l, sp_l)]) if stacked \
-            else ub_l[0] * sp_l[0][None, :]
-        Ag = jnp.stack(vt_l) if stacked else vt_l[0]
-        ref = get_path(clients[0], path)["scale"]
-        set_path(glob, path, {"A": Ag, "B": Bg, "scale": _ones_scale(ref)})
-        # per-client truncations
-        for ci, rk in enumerate(client_ranks):
-            rr = min(rk, r_full)
-            if stacked:
-                Bc = jnp.stack([u[:, :rr] * s[None, :rr] for u, s in zip(ub_l, sp_l)])
-                Ac = jnp.stack([vt[:rr] for vt in vt_l])
-            else:
-                Bc = ub_l[0][:, :rr] * sp_l[0][None, :rr]
-                Ac = vt_l[0][:rr]
-            if rr < rk:   # pad up to the client's rank
-                padB = [(0, 0)] * Bc.ndim
-                padB[-1] = (0, rk - rr)
-                padA = [(0, 0)] * Ac.ndim
-                padA[-2] = (0, rk - rr)
-                Bc, Ac = jnp.pad(Bc, padB), jnp.pad(Ac, padA)
-            set_path(per_client[ci], path,
-                     {"A": Ac, "B": Bc, "scale": _ones_scale(ref)})
-    return AggResult("flexlora", glob, per_client, rank_rec, spectra)
-
-
-def aggregate_florist(clients: Sequence[Dict], weights: Sequence[float],
-                      tau: float, svd_method: str = "svd",
-                      max_rank: int = 0) -> AggResult:
-    """FLoRIST (Algorithm 1, server block): stacked thin-SVDs + r×r core SVD
-    + per-layer energy thresholding.  Ragged per-layer ranks are zero-padded
-    to the per-leaf max so the global tree stays scan-compatible; the true
-    ranks are recorded for communication accounting."""
-    paths = adapter_leaf_paths(clients[0])
-    out: Dict = {}
-    rank_rec: Dict[Tuple, List[int]] = {}
-    spectra: Dict[Tuple, List[np.ndarray]] = {}
-    for path in paths:
-        leaf0 = get_path(clients[0], path)["A"]
-        stacked = leaf0.ndim == 3
-        L = leaf0.shape[0] if stacked else 1
-        Bg_l, Ag_l, ps = [], [], []
-        spectra[path] = []
-        for l in range(L):
-            Bs, As = [], []
-            for c in clients:
-                Bk, Ak = _fold_scale(get_path(c, path))
-                Bs.append(_per_layer(Bk, l, stacked))
-                As.append(_per_layer(Ak, l, stacked))
-            res = florist_core(Bs, As, weights, tau, svd_method, max_rank)
-            Bg_l.append(res.B_g)
-            Ag_l.append(res.A_g)
-            ps.append(res.p)
-            spectra[path].append(np.asarray(res.spectrum))
-        p_max = max(ps)
-        if stacked:
-            Bg = jnp.stack([jnp.pad(b, ((0, 0), (0, p_max - b.shape[1]))) for b in Bg_l])
-            Ag = jnp.stack([jnp.pad(a, ((0, p_max - a.shape[0]), (0, 0))) for a in Ag_l])
-        else:
-            Bg, Ag = Bg_l[0], Ag_l[0]
-        ref = get_path(clients[0], path)["scale"]
-        set_path(out, path, {"A": Ag, "B": Bg, "scale": _ones_scale(ref)})
-        rank_rec[path] = ps
-    return AggResult("florist", out, None, rank_rec, spectra)
-
-
-# ---------------------------------------------------------------------------
-# dispatcher
-# ---------------------------------------------------------------------------
 
 def aggregate(method: str, clients: Sequence[Dict], weights: Sequence[float],
               *, tau: float = 0.9, A_init: Optional[Dict] = None,
               client_ranks: Optional[Sequence[int]] = None,
               zero_padding: bool = False, svd_method: str = "svd",
               max_rank: int = 0) -> AggResult:
-    if method == "fedit":
-        return aggregate_fedit(clients, weights, zero_padding)
-    if method == "ffa":
-        assert A_init is not None
-        return aggregate_ffa(clients, weights, A_init, zero_padding)
-    if method == "flora":
-        return aggregate_flora(clients, weights)
-    if method == "flexlora":
-        assert client_ranks is not None
-        return aggregate_flexlora(clients, weights, client_ranks)
-    if method == "florist":
-        return aggregate_florist(clients, weights, tau, svd_method, max_rank)
-    raise ValueError(f"unknown method {method!r} (choose from {METHODS})")
+    """One-shot aggregation: build the registered strategy for ``method``
+    and stream the client list through it.  Each method picks the knobs it
+    understands from the shared kwarg union (τ, the frozen FFA init, ...)."""
+    cfg = accepted_config(method, dict(
+        tau=tau, A_init=A_init, zero_padding=zero_padding,
+        svd_method=svd_method, max_rank=max_rank))
+    agg = make_aggregator(method, **cfg)
+    return agg.aggregate(clients, weights, client_ranks=client_ranks)

@@ -1,0 +1,35 @@
+"""Pluggable server-side aggregation strategies.
+
+Importing this package registers the five paper methods (``florist``,
+``fedit``, ``ffa``, ``flora``, ``flexlora``); additional strategies
+register themselves with :func:`register_aggregator` (e.g. the sharded
+multi-pod FLoRIST backend in :mod:`repro.core.distributed`).
+"""
+from repro.core.aggregators.base import (AggResult, Aggregator,
+                                         accepted_config,
+                                         adapter_leaf_paths,
+                                         available_aggregators, fold_scale,
+                                         fresh_client_adapters,
+                                         get_aggregator_class, get_path,
+                                         leaf_dims, leaf_rank,
+                                         make_aggregator, ones_scale,
+                                         per_layer, register_aggregator,
+                                         set_path)
+from repro.core.aggregators.fedit import FedItAggregator
+from repro.core.aggregators.ffa import FfaAggregator
+from repro.core.aggregators.flexlora import FlexLoRAAggregator
+from repro.core.aggregators.flora import FloraAggregator
+from repro.core.aggregators.florist import FloristAggregator
+
+#: the paper's five methods, in the paper's comparison order
+METHODS = ("florist", "fedit", "ffa", "flora", "flexlora")
+
+__all__ = [
+    "AggResult", "Aggregator", "METHODS", "accepted_config",
+    "adapter_leaf_paths", "available_aggregators", "fold_scale",
+    "fresh_client_adapters", "get_aggregator_class", "get_path",
+    "leaf_dims", "leaf_rank",
+    "make_aggregator", "ones_scale", "per_layer", "register_aggregator",
+    "set_path", "FedItAggregator", "FfaAggregator", "FlexLoRAAggregator",
+    "FloraAggregator", "FloristAggregator",
+]

@@ -1,0 +1,105 @@
+"""FlexLoRA: form the dense ΔW = Σ w_k B_k A_k per layer, full SVD, then
+cut per-client adapters at each client's own rank."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregators.base import (AggResult, Aggregator,
+                                         adapter_leaf_paths, fold_scale,
+                                         get_path, per_layer,
+                                         register_aggregator, set_path)
+from repro.core.svd import thin_svd
+
+
+@register_aggregator("flexlora")
+class FlexLoRAAggregator(Aggregator):
+    """Streaming dense accumulation: one running ΔW sum per (leaf, layer) —
+    O(L·m·n) per leaf but O(1) in the client count; the SVD + per-client
+    truncation happen once at finalize."""
+
+    def _accumulate(self, update: Dict, weight: float, rank: int) -> None:
+        for path in adapter_leaf_paths(update):
+            Bk, Ak = fold_scale(get_path(update, path))
+            stacked = Ak.ndim == 3
+            L = Ak.shape[0] if stacked else 1
+            acc = self._state.setdefault(
+                path, {"stacked": stacked, "dw": [None] * L})
+            for l in range(L):
+                Bl = per_layer(Bk, l, stacked)
+                Al = per_layer(Ak, l, stacked)
+                term = weight * (Bl.astype(jnp.float32) @ Al.astype(jnp.float32))
+                acc["dw"][l] = term if acc["dw"][l] is None \
+                    else acc["dw"][l] + term
+
+    def _finalize(self) -> AggResult:
+        per_client: List[Dict] = [{} for _ in range(self.num_clients)]
+        glob: Dict = {}
+        rank_rec: Dict[Tuple, List[int]] = {}
+        spectra: Dict[Tuple, List[np.ndarray]] = {}
+        Rmax = max(self.client_ranks)
+        for path, acc in self._state.items():
+            stacked = acc["stacked"]
+            ub_l, sp_l, vt_l = [], [], []
+            for dw in acc["dw"]:
+                u, s, vt = thin_svd(dw, "svd")
+                ub_l.append(u)
+                sp_l.append(s)
+                vt_l.append(vt)
+            spectra[path] = [np.asarray(s) for s in sp_l]
+            rank_rec[path] = [min(Rmax, int(s.shape[0])) for s in sp_l]
+            # global (exact) adapters at full rank — used for server-side eval
+            r_full = sp_l[0].shape[0]
+            Bg = jnp.stack([u * s[None, :] for u, s in zip(ub_l, sp_l)]) \
+                if stacked else ub_l[0] * sp_l[0][None, :]
+            Ag = jnp.stack(vt_l) if stacked else vt_l[0]
+            ref = self._ref_scales[path]
+            set_path(glob, path, {"A": Ag, "B": Bg, "scale": ref})
+            # per-client truncations
+            for ci, rk in enumerate(self.client_ranks):
+                rr = min(rk, r_full)
+                if stacked:
+                    Bc = jnp.stack([u[:, :rr] * s[None, :rr]
+                                    for u, s in zip(ub_l, sp_l)])
+                    Ac = jnp.stack([vt[:rr] for vt in vt_l])
+                else:
+                    Bc = ub_l[0][:, :rr] * sp_l[0][None, :rr]
+                    Ac = vt_l[0][:rr]
+                if rr < rk:   # pad up to the client's rank
+                    padB = [(0, 0)] * Bc.ndim
+                    padB[-1] = (0, rk - rr)
+                    padA = [(0, 0)] * Ac.ndim
+                    padA[-2] = (0, rk - rr)
+                    Bc, Ac = jnp.pad(Bc, padB), jnp.pad(Ac, padA)
+                set_path(per_client[ci], path,
+                         {"A": Ac, "B": Bc, "scale": ref})
+        return AggResult(self.name, glob, per_client, rank_rec, spectra)
+
+    # -- cost model ----------------------------------------------------------
+    def download_params(self, agg: AggResult, dims: Dict, num_clients: int,
+                        client_ranks) -> int:
+        # each client gets its own rank-r_k adapters
+        total = 0
+        for rk in client_ranks:
+            for path, (L, n, m) in dims.items():
+                total += L * rk * (n + m)
+        return total
+
+    def server_flops(self, dims, client_ranks, agg_ranks=None) -> int:
+        from repro.core.costs import SVD_CONST
+
+        r = sum(client_ranks)                       # stacked rank
+        total = 0
+        for path, (L, n, m) in dims.items():
+            p = min(m, n)
+            total += L * (2 * m * n * r               # form ΔW
+                          + SVD_CONST * m * n * p     # dense SVD
+                          + 2 * (m * p * p + p * p * n))  # partition/rescale
+        return total
+
+    def efficiency(self, agg: AggResult, client_ranks=(), dims=None) -> float:
+        # each client downloads its own rank-r_k adapters -> mean over clients
+        L_total = sum(L for (L, _, _) in dims.values()) if dims else 1
+        return 1.0 / max(1.0, L_total * float(np.mean(client_ranks)))

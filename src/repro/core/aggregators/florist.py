@@ -1,0 +1,90 @@
+"""FLoRIST (Algorithm 1, server block): stacked thin-SVDs + r×r core SVD +
+per-layer energy thresholding — the singular values of ΔW without ever
+forming ΔW."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregators.base import (AggResult, Aggregator,
+                                         adapter_leaf_paths, fold_scale,
+                                         get_path, register_aggregator,
+                                         set_path)
+from repro.core.svd import florist_core_stacked
+
+
+@register_aggregator("florist")
+class FloristAggregator(Aggregator):
+    """Streaming stacker + thresholded core SVD at finalize.
+
+    ``add_client`` appends each client's scale-folded B block and weighted A
+    block per leaf — O(Σ r_k) columns per leaf, never K full trees — and
+    ``finalize`` runs the per-layer stacked-SVD pipeline on the completed
+    stacks.  Ragged per-layer ranks are zero-padded to the per-leaf max so
+    the global tree stays scan-compatible; the true ranks are recorded for
+    communication accounting.
+    """
+
+    def __init__(self, tau=0.9, svd_method: str = "svd", max_rank: int = 0):
+        self.tau = tau
+        self.svd_method = svd_method
+        self.max_rank = max_rank
+        super().__init__()
+
+    def _accumulate(self, update: Dict, weight: float, rank: int) -> None:
+        for path in adapter_leaf_paths(update):
+            Bk, Ak = fold_scale(get_path(update, path))
+            acc = self._state.setdefault(
+                path, {"stacked": Ak.ndim == 3, "A": [], "B": []})
+            acc["B"].append(Bk)
+            acc["A"].append(weight * Ak)
+
+    def _finalize(self) -> AggResult:
+        out: Dict = {}
+        rank_rec: Dict[Tuple, List[int]] = {}
+        spectra: Dict[Tuple, List[np.ndarray]] = {}
+        for path, acc in self._state.items():
+            stacked = acc["stacked"]
+            B_stack = jnp.concatenate(acc["B"], axis=-1)   # (L, m, Σr)
+            A_stack = jnp.concatenate(acc["A"], axis=-2)   # (L, Σr, n)
+            L = B_stack.shape[0] if stacked else 1
+            Bg_l, Ag_l, ps = [], [], []
+            spectra[path] = []
+            for l in range(L):
+                res = florist_core_stacked(
+                    B_stack[l] if stacked else B_stack,
+                    A_stack[l] if stacked else A_stack,
+                    self.tau, self.svd_method, self.max_rank)
+                Bg_l.append(res.B_g)
+                Ag_l.append(res.A_g)
+                ps.append(res.p)
+                spectra[path].append(np.asarray(res.spectrum))
+            p_max = max(ps)
+            if stacked:
+                Bg = jnp.stack([jnp.pad(b, ((0, 0), (0, p_max - b.shape[1])))
+                                for b in Bg_l])
+                Ag = jnp.stack([jnp.pad(a, ((0, p_max - a.shape[0]), (0, 0)))
+                                for a in Ag_l])
+            else:
+                Bg, Ag = Bg_l[0], Ag_l[0]
+            set_path(out, path, {"A": Ag, "B": Bg,
+                                 "scale": self._ref_scales[path]})
+            rank_rec[path] = ps
+        return AggResult(self.name, out, None, rank_rec, spectra)
+
+    def server_flops(self, dims, client_ranks, agg_ranks=None) -> int:
+        from repro.core.costs import SVD_CONST
+
+        r = sum(client_ranks)                        # stacked rank
+        total = 0
+        for path, (L, n, m) in dims.items():
+            for l in range(L):
+                total += SVD_CONST * (m * r * r + n * r * r)  # thin SVDs
+                total += 2 * r ** 3                            # Q = V_Bᵀ U_A
+                total += 2 * r * r                             # P diag scaling
+                total += SVD_CONST * r ** 3                    # SVD(P)
+                p_l = agg_ranks[path][l] if agg_ranks else r
+                total += 2 * (m * r * p_l + p_l * r * n)       # build B_g, A_g
+        return total

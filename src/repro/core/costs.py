@@ -6,6 +6,12 @@ params × 2 / 1024²).  ``efficiency`` is the paper's proxy
 1 / total-download-rank.  Server FLOPs are computed analytically from the
 linear-algebra op counts (mult-add = 2 FLOPs); the benchmark additionally
 *measures* compiled FLOPs of each aggregation via XLA cost analysis.
+
+The per-method formulas live on the registered
+:class:`~repro.core.aggregators.Aggregator` classes (``upload_params`` /
+``download_params`` / ``server_flops`` / ``efficiency``); the module-level
+functions here keep the original ``f(method, ...)`` call shape by
+delegating to the registry.
 """
 from __future__ import annotations
 
@@ -13,23 +19,25 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.aggregation import AggResult, adapter_leaf_paths, get_path
+from repro.core.aggregators import (AggResult, adapter_leaf_paths,
+                                    get_aggregator_class, get_path, leaf_dims)
+
+__all__ = ["AggResult", "BYTES_FP16", "SVD_CONST", "adapter_leaf_paths",
+           "download_params", "efficiency", "full_ft_params", "get_path",
+           "leaf_dims", "mb", "server_flops", "total_download_rank",
+           "upload_params"]
 
 BYTES_FP16 = 2
 
+SVD_CONST = 4  # FLOPs ≈ SVD_CONST · m · n · min(m,n) for dense SVD
 
-def leaf_dims(client_tree: Dict) -> Dict[Tuple, Tuple[int, int, int]]:
-    """{leaf path: (L, n_in, m_out)} from one client's adapter tree.
-    Note: A: (L, r, n_in), B: (L, m_out, r)."""
-    dims = {}
-    for path in adapter_leaf_paths(client_tree):
-        leaf = get_path(client_tree, path)
-        A, B = leaf["A"], leaf["B"]
-        if A.ndim == 3:
-            dims[path] = (A.shape[0], A.shape[2], B.shape[1])
-        else:
-            dims[path] = (1, A.shape[1], B.shape[0])
-    return dims
+
+def _cost_model(method: str):
+    """An instance of ``method``'s class usable for its (state-free) cost
+    methods — constructed without config so this also works for strategies
+    with required constructor args or expensive setup (meshes)."""
+    cls = get_aggregator_class(method)
+    return cls.__new__(cls)
 
 
 # ---------------------------------------------------------------------------
@@ -38,44 +46,23 @@ def leaf_dims(client_tree: Dict) -> Dict[Tuple, Tuple[int, int, int]]:
 
 def upload_params(method: str, client_trees: Sequence[Dict]) -> int:
     """Total parameters uploaded by the sampled clients this round."""
-    total = 0
-    for tree in client_trees:
-        for path in adapter_leaf_paths(tree):
-            leaf = get_path(tree, path)
-            if method == "ffa":
-                total += leaf["B"].size            # A frozen, never sent
-            else:
-                total += leaf["A"].size + leaf["B"].size
-    return total
+    return _cost_model(method).upload_params(client_trees)
 
 
 def download_params(method: str, agg: AggResult, dims: Dict,
                     num_clients: int, client_ranks: Sequence[int]) -> int:
     """Total parameters sent server -> clients this round."""
-    total = 0
-    if method == "flexlora":
-        # each client gets its own rank-r_k adapters
-        for rk in client_ranks:
-            for path, (L, n, m) in dims.items():
-                total += L * rk * (n + m)
-        return total
-    for path, (L, n, m) in dims.items():
-        ranks = agg.ranks[path]
-        for r_l in ranks:
-            if method == "ffa":
-                total += num_clients * r_l * m      # only B broadcast
-            else:
-                total += num_clients * r_l * (n + m)
-    return total
+    return _cost_model(method).download_params(agg, dims, num_clients,
+                                               client_ranks)
 
 
 def total_download_rank(agg: AggResult, half_for_ffa: bool = True) -> float:
     """The paper's efficiency denominator: Σ over layers of the broadcast
-    rank (FFA counts rank/2 — only one of the two matrices travels)."""
-    tr = agg.total_download_rank()
-    if agg.method == "ffa" and half_for_ffa:
-        return tr / 2.0
-    return float(tr)
+    rank, weighted by the method's ``download_rank_factor`` (FFA counts
+    rank/2 — only one of the two matrices travels)."""
+    factor = get_aggregator_class(agg.method).download_rank_factor \
+        if half_for_ffa else 1.0
+    return float(agg.total_download_rank()) * factor
 
 
 def efficiency(agg: AggResult, client_ranks: Sequence[int] = (),
@@ -87,10 +74,7 @@ def efficiency(agg: AggResult, client_ranks: Sequence[int] = (),
     TinyLlama: 22 layers × 2 proj × rank 16 = 704 → 14.2e-4).  FlexLoRA sends
     each client its own rank-r_k adapters → mean over clients.
     """
-    if agg.method == "flexlora":
-        L_total = sum(L for (L, _, _) in dims.values()) if dims else 1
-        return 1.0 / max(1.0, L_total * float(np.mean(client_ranks)))
-    return 1.0 / max(1.0, total_download_rank(agg))
+    return _cost_model(agg.method).efficiency(agg, client_ranks, dims)
 
 
 def mb(params: int) -> float:
@@ -105,33 +89,7 @@ def full_ft_params(model_param_count: int, num_clients: int) -> int:
 # server FLOPs (analytic; Table 4 / Table 5)
 # ---------------------------------------------------------------------------
 
-SVD_CONST = 4  # FLOPs ≈ SVD_CONST · m · n · min(m,n) for dense SVD
-
-
 def server_flops(method: str, dims: Dict, client_ranks: Sequence[int],
                  agg_ranks: Dict[Tuple, List[int]] = None) -> int:
     """Analytic per-round server cost. mult-add = 2 FLOPs."""
-    K = len(client_ranks)
-    r = sum(client_ranks)                  # stacked rank
-    total = 0
-    for path, (L, n, m) in dims.items():
-        for l in range(L):
-            if method == "fedit":
-                total += 2 * K * max(client_ranks) * (m + n)
-            elif method == "ffa":
-                total += 2 * K * max(client_ranks) * m
-            elif method == "flora":
-                total += 0                  # pure concatenation
-            elif method == "flexlora":
-                total += 2 * m * n * r                       # form ΔW
-                total += SVD_CONST * m * n * min(m, n)       # dense SVD
-                p = min(m, n)
-                total += 2 * (m * p * p + p * p * n)         # partition/rescale
-            elif method == "florist":
-                total += SVD_CONST * (m * r * r + n * r * r)  # thin SVDs
-                total += 2 * r ** 3                            # Q = V_Bᵀ U_A
-                total += 2 * r * r                             # P diag scaling
-                total += SVD_CONST * r ** 3                    # SVD(P)
-                p_l = agg_ranks[path][l] if agg_ranks else r
-                total += 2 * (m * r * p_l + p_l * r * n)       # build B_g, A_g
-    return total
+    return _cost_model(method).server_flops(dims, client_ranks, agg_ranks)

@@ -1,20 +1,23 @@
 """Federated fine-tuning orchestration (paper §4.1 setup).
 
 Simulates the full loop: 100 clients with Dirichlet(0.5) non-IID data, 10
-sampled per round, local LoRA fine-tuning, server aggregation by any of the
-five methods, global-model evaluation and per-round communication accounting.
+sampled per round, local LoRA fine-tuning, server aggregation through a
+pluggable :class:`~repro.core.aggregators.Aggregator` strategy, global-model
+evaluation and per-round communication accounting.
 
-Per-method client/semantics (faithful to the paper):
-  * fedit / florist : clients resume from the global adapters matched to
-    their local rank (truncate / zero-pad, Alg. 1);
-  * ffa             : A frozen at the shared init, only B trained/averaged;
-  * flora           : the stacked global adapters are merged into the frozen
-    base and clients re-init fresh adapters each round;
-  * flexlora        : each client starts from its own rank-r_k SVD cut.
+The server side is **streaming**: each trained client update is folded into
+the aggregator's running accumulators (``add_client``) and dropped before
+the next client trains, so peak server memory per round is one client's
+adapters plus the O(Σ r_k) per-leaf accumulators — never all K sampled
+adapter trees at once.  Method semantics (client re-init, frozen-A
+composition, base merging, per-client truncation, cost formulas) live on
+the aggregator classes, not here; pass ``aggregator=`` to plug in a custom
+strategy, otherwise one is built from ``fed.method`` via the registry.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -23,12 +26,29 @@ import numpy as np
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core import costs as C
-from repro.core.aggregation import AggResult, aggregate
+from repro.core.aggregators import (AggResult, Aggregator, accepted_config,
+                                    make_aggregator)
 from repro.data.synthetic import ClientDataset, make_eval_data, make_federated_data
 from repro.models import transformer as T
 from repro.optim.adamw import adamw_init
-from repro.peft.lora import init_lora, match_rank, merge_lora
+from repro.peft.lora import init_lora, merge_lora
 from repro.train.step import make_eval_step, make_train_step
+
+
+# jit'd step factories shared across trainer instances: configs are frozen
+# (hashable) dataclasses, and jax.jit re-specializes per input shape, so a
+# sweep over τ / methods / seeds compiles each (config, shapes) program once
+# instead of once per FederatedTrainer.
+@functools.lru_cache(maxsize=None)
+def _cached_train_step(cfg: ModelConfig, optim: OptimConfig, loss_chunk: int,
+                       b_only: bool):
+    return jax.jit(make_train_step(cfg, optim, remat=False,
+                                   loss_chunk=loss_chunk, b_only=b_only))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_eval_step(cfg: ModelConfig, loss_chunk: int):
+    return jax.jit(make_eval_step(cfg, loss_chunk=loss_chunk))
 
 
 @dataclasses.dataclass
@@ -48,7 +68,8 @@ class FederatedTrainer:
                  eval_data: Optional[Dict] = None, batch_size: int = 8,
                  local_steps: int = 4, seq_len: int = 64, svd_method: str = "svd",
                  targets: Optional[tuple] = None,
-                 dp_clip: float = 0.0, dp_sigma: float = 0.0):
+                 dp_clip: float = 0.0, dp_sigma: float = 0.0,
+                 aggregator: Optional[Aggregator] = None):
         self.cfg, self.fed, self.lora, self.optim = cfg, fed, lora, optim
         self.batch_size, self.local_steps = batch_size, local_steps
         self.svd_method = svd_method
@@ -64,6 +85,13 @@ class FederatedTrainer:
         # one shared init at max rank; client k uses its first r_k rows
         self.A_init_full = init_lora(self.params, self.targets, self.max_rank,
                                      float(self.max_rank), ka)
+        self.aggregator = aggregator if aggregator is not None else \
+            make_aggregator(fed.method, **accepted_config(fed.method, dict(
+                tau=fed.tau, svd_method=svd_method,
+                zero_padding=fed.zero_padding)))
+        # FFA-style strategies read the frozen shared init at finalize
+        if getattr(self.aggregator, "A_init", False) is None:
+            self.aggregator.A_init = self.A_init_full
         self.global_state: Optional[AggResult] = None
         self.clients = clients if clients is not None else make_federated_data(
             num_clients=fed.num_clients, seq_len=seq_len,
@@ -71,58 +99,31 @@ class FederatedTrainer:
         ev = eval_data if eval_data is not None else make_eval_data(
             seq_len=seq_len, vocab=cfg.vocab_size)
         self.eval_batch = {k: jnp.asarray(v) for k, v in ev.items()}
-        self._step_cache: Dict = {}
-        self._eval = jax.jit(make_eval_step(cfg, loss_chunk=seq_len))
+        self._eval = _cached_eval_step(cfg, seq_len)
         self.history: List[RoundRecord] = []
 
     # -- helpers -------------------------------------------------------------
     def _train_step(self, rank: int):
-        key = (rank, self.fed.method == "ffa")
-        if key not in self._step_cache:
-            self._step_cache[key] = jax.jit(make_train_step(
-                self.cfg, self.optim, remat=False, loss_chunk=64,
-                b_only=(self.fed.method == "ffa")))
-        return self._step_cache[key]
+        # rank only affects adapter shapes; jit re-specializes on those, so
+        # all ranks share one cached wrapper per (cfg, optim, b_only)
+        return _cached_train_step(self.cfg, self.optim, 64,
+                                  self.aggregator.trains_b_only)
 
     def _client_init(self, k: int) -> Dict:
-        """Build client k's starting adapters for this round."""
-        rk = self.client_ranks[k]
-        a_init = match_rank(self.A_init_full, rk)
-
-        if self.global_state is None or self.fed.method == "flora":
-            # round 1 (all methods) / every round (flora — base was merged,
-            # adapters restart): B = 0, A = shared init
-            def mk(path, leaf):
-                last = getattr(path[-1], "key", None)
-                return jnp.zeros_like(leaf) if last == "B" else leaf
-            return jax.tree_util.tree_map_with_path(mk, a_init)
-
-        # fedit / florist / flexlora: truncate-or-pad the global adapters to
-        # the client's rank (Alg. 1).  For FlexLoRA the global tree holds the
-        # full SVD sorted by σ, so match_rank == the paper's per-client cut.
-        g = match_rank(self.global_state.global_adapters, rk)
-        if self.fed.method == "ffa":
-            g = self._ffa_compose(g, a_init)   # A stays at the frozen init
-        return g
-
-    def _ffa_compose(self, g: Dict, a_init: Dict) -> Dict:
-        def fix(path, gl):
-            last = getattr(path[-1], "key", None)
-            if last == "A":
-                node = a_init
-                for kk in [getattr(k, "key", getattr(k, "idx", None)) for k in path]:
-                    node = node[kk]
-                return node
-            return gl
-        return jax.tree_util.tree_map_with_path(fix, g)
+        """Build client k's starting adapters for this round (delegated to
+        the aggregation strategy's client-init semantics)."""
+        return self.aggregator.client_init(self.global_state,
+                                           self.client_ranks[k],
+                                           self.A_init_full)
 
     # -- main loop ------------------------------------------------------------
     def run_round(self, rnd: int) -> RoundRecord:
         fed = self.fed
         sampled = list(self.rng.choice(fed.num_clients, fed.clients_per_round,
                                        replace=False))
-        updates, weights, ranks = [], [], []
         n_total = sum(self.clients[k].num_samples for k in sampled)
+        ranks = [self.client_ranks[k] for k in sampled]
+        self.aggregator.begin_round()
         for k in sampled:
             rk = self.client_ranks[k]
             adapters = self._client_init(k)
@@ -143,22 +144,22 @@ class FederatedTrainer:
                 from repro.core.privacy import clip_client_adapters
                 adapters = clip_client_adapters(adapters, init_adapters,
                                                 self.dp_clip)
-            updates.append(adapters)
-            weights.append(self.clients[k].num_samples / n_total)
-            ranks.append(rk)
+            # stream the update into the server accumulators; the trained
+            # adapters go out of scope here (no K-tree round buffer)
+            self.aggregator.add_client(
+                adapters, self.clients[k].num_samples / n_total, rank=rk)
 
-        agg = aggregate(fed.method, updates, weights, tau=fed.tau,
-                        A_init=self.A_init_full, client_ranks=ranks,
-                        zero_padding=fed.zero_padding, svd_method=self.svd_method)
+        agg = self.aggregator.finalize()
         if self.dp_sigma and agg.global_adapters is not None:
             from repro.core.privacy import add_gaussian_noise
             key = jax.random.PRNGKey(10_000 + rnd)
             agg.global_adapters = add_gaussian_noise(
                 agg.global_adapters, self.dp_sigma, self.dp_clip or 1.0,
                 fed.clients_per_round, key)
-        dims = C.leaf_dims(updates[0])
-        up = C.upload_params(fed.method, updates)
-        down = C.download_params(fed.method, agg, dims, fed.clients_per_round, ranks)
+        dims = self.aggregator.dims
+        up = self.aggregator.round_upload_params
+        down = self.aggregator.download_params(agg, dims,
+                                               fed.clients_per_round, ranks)
 
         if agg.merge_into_base:      # FLoRA: fold stack into the base weights
             self.params = merge_lora(self.params, agg.global_adapters)
@@ -174,7 +175,8 @@ class FederatedTrainer:
             eval_acc=float(m["accuracy"]),
             upload_params=up,
             download_params=down,
-            download_rank=C.total_download_rank(agg),
+            download_rank=agg.total_download_rank()
+            * self.aggregator.download_rank_factor,
             global_rank_total=agg.total_download_rank(),
         )
         self.history.append(rec)
@@ -185,7 +187,8 @@ class FederatedTrainer:
         for rnd in range(num_rounds or self.fed.num_rounds):
             rec = self.run_round(rnd)
             if verbose:
-                print(f"[{self.fed.method:9s}] round {rnd:3d} "
+                print(f"[{self.aggregator.name:9s}] round {rnd:3d} "
                       f"loss={rec.eval_loss:.4f} acc={rec.eval_acc:.3f} "
                       f"down_rank={rec.download_rank:.0f}")
         return self.history
+

@@ -114,14 +114,13 @@ class FloristOut(NamedTuple):
     p: int
 
 
-def florist_core(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
-                 weights: Sequence[float], tau,
-                 svd_method: str = "svd", max_rank: int = 0) -> FloristOut:
-    """The full FLoRIST server pipeline for one weight matrix (Alg. 1,
-    server block).  Host-side: returns concretely-truncated adapters.
-    tau: float in (0,1], or "auto" for knee-point rank selection
-    (beyond-paper; paper §5 future-work (i))."""
-    B_stack, A_stack = stack_adapters(Bs, As, weights)
+def florist_core_stacked(B_stack: jnp.ndarray, A_stack: jnp.ndarray, tau,
+                         svd_method: str = "svd",
+                         max_rank: int = 0) -> FloristOut:
+    """FLoRIST server pipeline on pre-stacked blocks (B_stack (m, r),
+    A_stack (r, n) with weights already folded into A_stack) — the entry
+    point for the streaming aggregator, which accumulates the stacks
+    incrementally as clients arrive."""
     f32 = jnp.float32
     B_stack, A_stack = B_stack.astype(f32), A_stack.astype(f32)
     ub, sb, vbt = thin_svd(B_stack, svd_method)
@@ -135,6 +134,17 @@ def florist_core(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
     B_g = (ub @ up)[:, :p] * sp[None, :p]
     A_g = (vpt @ vat)[:p, :]
     return FloristOut(B_g, A_g, sp, p)
+
+
+def florist_core(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
+                 weights: Sequence[float], tau,
+                 svd_method: str = "svd", max_rank: int = 0) -> FloristOut:
+    """The full FLoRIST server pipeline for one weight matrix (Alg. 1,
+    server block).  Host-side: returns concretely-truncated adapters.
+    tau: float in (0,1], or "auto" for knee-point rank selection
+    (beyond-paper; paper §5 future-work (i))."""
+    B_stack, A_stack = stack_adapters(Bs, As, weights)
+    return florist_core_stacked(B_stack, A_stack, tau, svd_method, max_rank)
 
 
 def florist_core_padded(B_stack: jnp.ndarray, A_stack: jnp.ndarray, tau: float,

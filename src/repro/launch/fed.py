@@ -2,6 +2,9 @@
 
   PYTHONPATH=src python -m repro.launch.fed --method florist --rounds 10 \
       [--heter] [--tau 0.9] [--clients 100] [--sample 10]
+
+``--method`` accepts any registered aggregation strategy (including
+plugins registered via ``repro.core.aggregators.register_aggregator``).
 """
 from __future__ import annotations
 
@@ -9,13 +12,17 @@ import argparse
 import json
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
 
 
 def main(argv=None):
+    # importing repro.core.distributed registers the sharded backend too
+    import repro.core.distributed  # noqa: F401
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", default="florist",
-                    choices=["florist", "fedit", "ffa", "flora", "flexlora"])
+                    choices=available_aggregators())
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--sample", type=int, default=10)

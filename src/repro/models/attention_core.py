@@ -23,6 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.common.pjit_utils import shard_map as _pjit_shard_map
+
 NEG_INF = -1e30
 
 
@@ -165,7 +167,7 @@ def dispatch_flash(q, k, v, *, causal: bool = True, window: int = 0,
 
     qs = P(dax, "model", None, None)
     kvs = P(dax, None, None, None)
-    return jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+    return _pjit_shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
                          out_specs=qs, check_vma=False)(q, k, v)
 
 
@@ -226,7 +228,7 @@ def mla_absorbed(q_nope, q_rope, c_kv, k_rope, w_kvb, *, num_heads: int,
 
             qs = P(dax, "model", None, None)
             kvs = P(dax, None, None)
-            return jax.shard_map(
+            return _pjit_shard_map(
                 body, mesh=mesh,
                 in_specs=(qs, qs, kvs, kvs, P(None, None)),
                 out_specs=qs, check_vma=False,

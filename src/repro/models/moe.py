@@ -15,6 +15,8 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.pjit_utils import shard_map as _pjit_shard_map
+
 from repro.common.config import ModelConfig
 from repro.models.layers import dense_init, init_mlp, mlp_fwd
 
@@ -187,7 +189,7 @@ def _moe_fwd_sharded(cfg: ModelConfig, p: Params, x: jnp.ndarray, mesh):
         return out.reshape(Bl, Sl, d), aux
 
     xs = P(dax, "model", None)
-    out, aux = jax.shard_map(
+    out, aux = _pjit_shard_map(
         body, mesh=mesh,
         in_specs=(xs, P(None, None), w_spec, w_spec, w_spec),
         out_specs=(xs, P()),

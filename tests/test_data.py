@@ -1,6 +1,8 @@
 """Synthetic corpus + Dirichlet federated partitioning."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.synthetic import (BOS, SEP, dirichlet_partition, make_eval_data,

@@ -37,6 +37,7 @@ def test_heterogeneous_ranks(method):
     assert all(np.isfinite(h.eval_loss) for h in hist)
 
 
+@pytest.mark.slow
 def test_florist_download_rank_below_fedit_and_flora():
     """Rank: FLoRIST < FedIT < FLoRA on the same run (paper §3)."""
     res = {}
@@ -46,11 +47,13 @@ def test_florist_download_rank_below_fedit_and_flora():
     assert res["florist"] < res["fedit"] < res["flora"]
 
 
+@pytest.mark.slow
 def test_florist_loss_improves_over_rounds():
     hist, _ = _run("florist", rounds=4)
     assert hist[-1].eval_loss < hist[0].eval_loss + 1e-3
 
 
+@pytest.mark.slow
 def test_tau_controls_rank():
     """Fig. 5: lower τ -> lower total rank."""
     ranks = {}
@@ -76,6 +79,7 @@ def test_ffa_a_frozen():
         np.testing.assert_allclose(a_g, a_0, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_deterministic_given_seed():
     h1, _ = _run("florist", rounds=2)
     h2, _ = _run("florist", rounds=2)

@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.svd import (eckart_young_bound, energy_rank, florist_core,

@@ -1,5 +1,9 @@
 """System-level integration: the full paper pipeline end to end, plus the
-headline comparative claims on one shared run."""
+headline comparative claims on one shared run.
+
+Everything here is marked ``slow`` (multi-method multi-round federated
+loops) and excluded from the default tier-1 run; select with
+``pytest -m slow``."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,8 +13,10 @@ from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core import costs as C
 from repro.core.federated import FederatedTrainer
 
-CFG = ModelConfig(name="sys-tiny", family="dense", num_layers=3, d_model=96,
-                  num_heads=4, num_kv_heads=2, head_dim=24, d_ff=192,
+pytestmark = pytest.mark.slow
+
+CFG = ModelConfig(name="sys-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
                   vocab_size=256, dtype="float32")
 
 
