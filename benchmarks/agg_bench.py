@@ -1,0 +1,119 @@
+"""Per-round aggregation wall-clock: legacy per-layer loop vs the batched
+vmapped server pipeline, on both thin-SVD routes (LAPACK ``svd`` / Gram
+``gram``).
+
+The FLoRIST pitch is that server-side decomposition is cheap; this measures
+what the *dispatch* around it costs.  The legacy loop runs one eager
+``florist_core_stacked`` per (leaf, layer) — re-tracing and host-syncing on
+every iteration — while the batched pipeline compiles one vmapped call per
+bucket of equal-shaped leaves and transfers spectra/ranks once.
+
+Config: 3 leaves × L layers, heterogeneous client ranks (4/8/16), the
+3-leaf × 8-layer shape from the issue.  Emits JSON for CI artifacts::
+
+    PYTHONPATH=src python benchmarks/agg_bench.py --smoke --json agg.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.core.aggregators import make_aggregator
+
+HETERO_RANKS = (4, 8, 16)
+
+
+def make_clients(rng, *, layers: int, leaves: int, m: int, n: int):
+    trees, weights = [], []
+    for r in HETERO_RANKS:
+        t = {}
+        for i in range(leaves):
+            t[f"leaf{i}"] = {
+                "A": np.asarray(rng.normal(size=(layers, r, n)), np.float32),
+                "B": np.asarray(rng.normal(size=(layers, m, r)), np.float32),
+                "scale": np.ones((layers,), np.float32),
+            }
+        trees.append(t)
+    weights = list(rng.dirichlet([1.0] * len(HETERO_RANKS)))
+    return trees, weights
+
+
+def time_round(agg, trees, weights, *, warmup: int, iters: int) -> float:
+    """Median wall-clock (ms) of one full streaming round (add_client ×K +
+    finalize, blocking on all outputs)."""
+
+    def once():
+        agg.begin_round()
+        for t, w in zip(trees, weights):
+            agg.add_client(t, w)
+        res = agg.finalize()
+        jax.block_until_ready(
+            jax.tree.leaves(res.global_adapters))
+        return res
+
+    for _ in range(warmup):
+        once()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        once()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return float(statistics.median(ts))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config + few iters (CI)")
+    ap.add_argument("--json", default="", help="write results to this path")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=0)
+    args = ap.parse_args()
+
+    layers = args.layers or 8
+    leaves = 3
+    m, n = (64, 48) if args.smoke else (256, 192)
+    iters = args.iters or (3 if args.smoke else 5)
+    tau = 0.9
+
+    rng = np.random.default_rng(0)
+    trees, weights = make_clients(rng, layers=layers, leaves=leaves, m=m, n=n)
+
+    results = []
+    for pipeline in ("loop", "batched"):
+        for svd_method in ("svd", "gram"):
+            agg = make_aggregator("florist", tau=tau, svd_method=svd_method,
+                                  pipeline=pipeline)
+            ms = time_round(agg, trees, weights, warmup=1, iters=iters)
+            results.append({"pipeline": pipeline, "svd_method": svd_method,
+                            "ms_per_round": round(ms, 3)})
+            print(f"{pipeline:8s} {svd_method:5s} {ms:9.2f} ms/round")
+
+    def best(pipeline):
+        return min(r["ms_per_round"] for r in results
+                   if r["pipeline"] == pipeline)
+
+    speedup = best("loop") / best("batched")
+    print(f"speedup (batched vs loop, best route): {speedup:.2f}x")
+
+    report = {
+        "config": {"layers": layers, "leaves": leaves, "m": m, "n": n,
+                   "client_ranks": list(HETERO_RANKS), "tau": tau,
+                   "iters": iters, "smoke": bool(args.smoke),
+                   "backend": jax.default_backend()},
+        "results": results,
+        "speedup_batched_vs_loop": round(speedup, 2),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

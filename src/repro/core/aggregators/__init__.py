@@ -8,7 +8,8 @@ multi-pod FLoRIST backend in :mod:`repro.core.distributed`).
 from repro.core.aggregators.base import (AggResult, Aggregator,
                                          accepted_config,
                                          adapter_leaf_paths,
-                                         available_aggregators, fold_scale,
+                                         available_aggregators,
+                                         bucket_by_shape, fold_scale,
                                          fresh_client_adapters,
                                          get_aggregator_class, get_path,
                                          leaf_dims, leaf_rank,
@@ -26,7 +27,8 @@ METHODS = ("florist", "fedit", "ffa", "flora", "flexlora")
 
 __all__ = [
     "AggResult", "Aggregator", "METHODS", "accepted_config",
-    "adapter_leaf_paths", "available_aggregators", "fold_scale",
+    "adapter_leaf_paths", "available_aggregators", "bucket_by_shape",
+    "fold_scale",
     "fresh_client_adapters", "get_aggregator_class", "get_path",
     "leaf_dims", "leaf_rank",
     "make_aggregator", "ones_scale", "per_layer", "register_aggregator",

@@ -91,6 +91,22 @@ def ones_scale(ref_scale):
     return jnp.ones_like(ref_scale)
 
 
+def bucket_by_shape(stacks: Dict[Tuple, Sequence[jnp.ndarray]]
+                    ) -> List[List[Tuple]]:
+    """Group leaf paths whose stacked blocks share shapes.
+
+    Equal-shaped leaves (e.g. all the q/k/v/o projections of a layer stack)
+    can be concatenated along the batch axis and pushed through ONE compiled
+    vmapped call by the batched server pipelines; ``stacks`` maps each leaf
+    path to its tuple of arrays and the result lists the path groups in
+    insertion order.
+    """
+    buckets: Dict[Tuple, List[Tuple]] = {}
+    for path, arrs in stacks.items():
+        buckets.setdefault(tuple(a.shape for a in arrs), []).append(path)
+    return list(buckets.values())
+
+
 def leaf_dims(client_tree: Dict) -> Dict[Tuple, Tuple[int, int, int]]:
     """{leaf path: (L, n_in, m_out)} from one client's adapter tree.
     Note: A: (L, r, n_in), B: (L, m_out, r)."""

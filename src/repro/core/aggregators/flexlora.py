@@ -7,32 +7,35 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.core.aggregators.base import (AggResult, Aggregator,
                                          adapter_leaf_paths, fold_scale,
-                                         get_path, per_layer,
-                                         register_aggregator, set_path)
-from repro.core.svd import thin_svd
+                                         get_path, register_aggregator,
+                                         set_path)
+from repro.core.svd import thin_svd_batched
 
 
 @register_aggregator("flexlora")
 class FlexLoRAAggregator(Aggregator):
-    """Streaming dense accumulation: one running ΔW sum per (leaf, layer) —
-    O(L·m·n) per leaf but O(1) in the client count; the SVD + per-client
-    truncation happen once at finalize."""
+    """Streaming dense accumulation: one running ΔW sum per leaf, held as a
+    single (L, m, n) array — O(L·m·n) per leaf but O(1) in the client
+    count.  Finalize runs ONE compiled vmapped SVD over all layers of a
+    leaf (no per-layer Python loop) and one device→host transfer for the
+    spectra; the per-client truncation happens on the device arrays."""
 
     def _accumulate(self, update: Dict, weight: float, rank: int) -> None:
         for path in adapter_leaf_paths(update):
             Bk, Ak = fold_scale(get_path(update, path))
             stacked = Ak.ndim == 3
-            L = Ak.shape[0] if stacked else 1
-            acc = self._state.setdefault(
-                path, {"stacked": stacked, "dw": [None] * L})
-            for l in range(L):
-                Bl = per_layer(Bk, l, stacked)
-                Al = per_layer(Ak, l, stacked)
-                term = weight * (Bl.astype(jnp.float32) @ Al.astype(jnp.float32))
-                acc["dw"][l] = term if acc["dw"][l] is None \
-                    else acc["dw"][l] + term
+            if not stacked:
+                Bk, Ak = Bk[None], Ak[None]
+            term = weight * jnp.einsum("lmr,lrn->lmn",
+                                       Bk.astype(jnp.float32),
+                                       Ak.astype(jnp.float32))
+            acc = self._state.setdefault(path, {"stacked": stacked,
+                                                "dw": None})
+            acc["dw"] = term if acc["dw"] is None else acc["dw"] + term
 
     def _finalize(self) -> AggResult:
         per_client: List[Dict] = [{} for _ in range(self.num_clients)]
@@ -40,33 +43,31 @@ class FlexLoRAAggregator(Aggregator):
         rank_rec: Dict[Tuple, List[int]] = {}
         spectra: Dict[Tuple, List[np.ndarray]] = {}
         Rmax = max(self.client_ranks)
+        device: Dict[Tuple, Tuple] = {}
         for path, acc in self._state.items():
-            stacked = acc["stacked"]
-            ub_l, sp_l, vt_l = [], [], []
-            for dw in acc["dw"]:
-                u, s, vt = thin_svd(dw, "svd")
-                ub_l.append(u)
-                sp_l.append(s)
-                vt_l.append(vt)
-            spectra[path] = [np.asarray(s) for s in sp_l]
-            rank_rec[path] = [min(Rmax, int(s.shape[0])) for s in sp_l]
+            # all L layer SVDs of the leaf in one compiled call
+            device[path] = thin_svd_batched(acc["dw"], "svd")   # (L,m,k) ...
+        host = jax.device_get({p: v.s for p, v in device.items()})
+        for path, (ub, sp, vt) in device.items():
+            stacked = self._state[path]["stacked"]
+            sp_host = host[path]                                # (L, k)
+            spectra[path] = [np.asarray(s) for s in sp_host]
+            r_full = int(sp_host.shape[1])
+            rank_rec[path] = [min(Rmax, r_full)] * sp_host.shape[0]
             # global (exact) adapters at full rank — used for server-side eval
-            r_full = sp_l[0].shape[0]
-            Bg = jnp.stack([u * s[None, :] for u, s in zip(ub_l, sp_l)]) \
-                if stacked else ub_l[0] * sp_l[0][None, :]
-            Ag = jnp.stack(vt_l) if stacked else vt_l[0]
+            Bg = ub * sp[:, None, :]
+            Ag = vt
+            if not stacked:
+                Bg, Ag = Bg[0], Ag[0]
             ref = self._ref_scales[path]
             set_path(glob, path, {"A": Ag, "B": Bg, "scale": ref})
             # per-client truncations
             for ci, rk in enumerate(self.client_ranks):
                 rr = min(rk, r_full)
-                if stacked:
-                    Bc = jnp.stack([u[:, :rr] * s[None, :rr]
-                                    for u, s in zip(ub_l, sp_l)])
-                    Ac = jnp.stack([vt[:rr] for vt in vt_l])
-                else:
-                    Bc = ub_l[0][:, :rr] * sp_l[0][None, :rr]
-                    Ac = vt_l[0][:rr]
+                Bc = ub[:, :, :rr] * sp[:, None, :rr]
+                Ac = vt[:, :rr, :]
+                if not stacked:
+                    Bc, Ac = Bc[0], Ac[0]
                 if rr < rk:   # pad up to the client's rank
                     padB = [(0, 0)] * Bc.ndim
                     padB[-1] = (0, rk - rr)

@@ -8,11 +8,13 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.core.aggregators.base import (AggResult, Aggregator,
-                                         adapter_leaf_paths, fold_scale,
-                                         get_path, register_aggregator,
-                                         set_path)
-from repro.core.svd import florist_core_stacked
+                                         adapter_leaf_paths, bucket_by_shape,
+                                         fold_scale, get_path,
+                                         register_aggregator, set_path)
+from repro.core.svd import florist_core_batched, florist_core_stacked
 
 
 @register_aggregator("florist")
@@ -21,16 +23,29 @@ class FloristAggregator(Aggregator):
 
     ``add_client`` appends each client's scale-folded B block and weighted A
     block per leaf — O(Σ r_k) columns per leaf, never K full trees — and
-    ``finalize`` runs the per-layer stacked-SVD pipeline on the completed
-    stacks.  Ragged per-layer ranks are zero-padded to the per-leaf max so
-    the global tree stays scan-compatible; the true ranks are recorded for
-    communication accounting.
+    ``finalize`` runs the batched server pipeline on the completed stacks:
+    leaves with identical stack shapes are batched together and every layer
+    of a bucket goes through ONE compiled vmapped call
+    (:func:`~repro.core.svd.florist_core_batched`); spectra and concrete
+    per-layer ranks are materialized with a single device→host transfer at
+    the end, where the zero-padded outputs are truncated.  Ragged per-layer
+    ranks are zero-padded to the per-leaf max so the global tree stays
+    scan-compatible; the true ranks are recorded for communication
+    accounting.
+
+    ``pipeline="loop"`` keeps the legacy per-(leaf, layer) Python loop
+    (one eager ``florist_core_stacked`` + host sync per layer) as a
+    reference for equivalence tests and the ``agg_bench`` baseline.
     """
 
-    def __init__(self, tau=0.9, svd_method: str = "svd", max_rank: int = 0):
+    def __init__(self, tau=0.9, svd_method: str = "svd", max_rank: int = 0,
+                 pipeline: str = "batched"):
+        if pipeline not in ("batched", "loop"):
+            raise ValueError(pipeline)
         self.tau = tau
         self.svd_method = svd_method
         self.max_rank = max_rank
+        self.pipeline = pipeline
         super().__init__()
 
     def _accumulate(self, update: Dict, weight: float, rank: int) -> None:
@@ -41,7 +56,58 @@ class FloristAggregator(Aggregator):
             acc["B"].append(Bk)
             acc["A"].append(weight * Ak)
 
+    def _leaf_stacks(self) -> Dict[Tuple, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """{path: (B_stack (L,m,Σr), A_stack (L,Σr,n))} — un-stacked leaves
+        get a singleton layer axis so every leaf is 3-D."""
+        stacks = {}
+        for path, acc in self._state.items():
+            B_stack = jnp.concatenate(acc["B"], axis=-1)
+            A_stack = jnp.concatenate(acc["A"], axis=-2)
+            if not acc["stacked"]:
+                B_stack, A_stack = B_stack[None], A_stack[None]
+            stacks[path] = (B_stack, A_stack)
+        return stacks
+
     def _finalize(self) -> AggResult:
+        if self.pipeline == "loop":
+            return self._finalize_loop()
+        out: Dict = {}
+        rank_rec: Dict[Tuple, List[int]] = {}
+        spectra: Dict[Tuple, List[np.ndarray]] = {}
+        stacks = self._leaf_stacks()
+        # bucket leaves by stack shape: equal-shaped leaves (e.g. all the
+        # q/k/v/o projections) share one compiled call over G·L layers
+        device: Dict[Tuple, Tuple] = {}
+        for paths in bucket_by_shape(stacks):
+            Bb = jnp.concatenate([stacks[p][0] for p in paths], axis=0)
+            Ab = jnp.concatenate([stacks[p][1] for p in paths], axis=0)
+            Bg, Ag, sp, pr = florist_core_batched(
+                Bb, Ab, self.tau, self.svd_method, self.max_rank)
+            L = stacks[paths[0]][0].shape[0]
+            for i, path in enumerate(paths):
+                sl = slice(i * L, (i + 1) * L)
+                device[path] = (Bg[sl], Ag[sl], sp[sl], pr[sl])
+        # exactly ONE device→host transfer: the spectra and concrete ranks
+        # needed for truncation and accounting
+        host = jax.device_get({p: (v[2], v[3]) for p, v in device.items()})
+        for path, (Bg, Ag, _, _) in device.items():
+            sp_h, p_h = host[path]
+            ps = [int(x) for x in p_h]
+            p_max = max(ps)
+            # columns beyond each layer's p_l are zeroed on device, so
+            # truncating to the per-leaf max is exact (same ΔW)
+            Bg, Ag = Bg[:, :, :p_max], Ag[:, :p_max, :]
+            if not self._state[path]["stacked"]:
+                Bg, Ag = Bg[0], Ag[0]
+            set_path(out, path, {"A": Ag, "B": Bg,
+                                 "scale": self._ref_scales[path]})
+            rank_rec[path] = ps
+            spectra[path] = [np.asarray(s) for s in sp_h]
+        return AggResult(self.name, out, None, rank_rec, spectra)
+
+    def _finalize_loop(self) -> AggResult:
+        """Legacy per-(leaf, layer) eager loop — kept verbatim as the
+        equivalence oracle and benchmark baseline."""
         out: Dict = {}
         rank_rec: Dict[Tuple, List[int]] = {}
         spectra: Dict[Tuple, List[np.ndarray]] = {}

@@ -30,14 +30,18 @@ from repro.core.svd import florist_core_padded
 
 
 def florist_aggregate_batched(B_stacks: jnp.ndarray, A_stacks: jnp.ndarray,
-                              tau: float, svd_method: str = "svd"):
-    """vmapped padded FLoRIST core over a layer axis.
+                              tau, svd_method: str = "svd",
+                              max_rank: int = 0):
+    """vmapped padded FLoRIST core over a layer axis (the same core the
+    host-side batched pipeline jits via ``florist_core_batched``; un-jitted
+    here because ``shard_map`` wraps it).
 
     B_stacks: (L, m, r), A_stacks: (L, r, n) — already weighted/stacked.
     Returns (B_g (L,m,r) zero-padded beyond p_l, A_g (L,r,n), spectra (L,r),
     ranks (L,) int32).
     """
-    fn = partial(florist_core_padded, tau=tau, svd_method=svd_method)
+    fn = partial(florist_core_padded, tau=tau, svd_method=svd_method,
+                 max_rank=max_rank)
     return jax.vmap(lambda b, a: fn(b, a))(B_stacks, A_stacks)
 
 
@@ -49,17 +53,23 @@ def pad_layers(x: jnp.ndarray, mult: int) -> Tuple[jnp.ndarray, int]:
     return x, L
 
 
-def make_sharded_florist(mesh: Mesh, tau: float, svd_method: str = "gram"):
+def make_sharded_florist(mesh: Mesh, tau, svd_method: str = "gram",
+                         max_rank: int = 0):
     """jit'd sharded aggregation: layers sharded over the 'model' axis.
 
     Returns fn(B_stacks (L,m,r), A_stacks (L,r,n)) ->
     (B_g, A_g, spectra, ranks) with L padded to the axis size internally.
+    ``tau`` / ``max_rank`` semantics match the host pipeline exactly
+    (including ``tau="auto"`` and the rank cap, applied inside the traced
+    core so the kept columns are the capped truncation, not a post-hoc
+    clamp).
     """
     n_shard = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
 
     def local(bs, as_):
         # bs: (L/n, m, r) local slice
-        bg, ag, sp, p = florist_aggregate_batched(bs, as_, tau, svd_method)
+        bg, ag, sp, p = florist_aggregate_batched(bs, as_, tau, svd_method,
+                                                  max_rank)
         return bg, ag, sp, p
 
     sharded = _shard_map(
@@ -93,7 +103,7 @@ class ShardedFloristAggregator(FloristAggregator):
     accounting (both are inherited).
     """
 
-    def __init__(self, tau: float = 0.9, svd_method: str = "gram",
+    def __init__(self, tau=0.9, svd_method: str = "gram",
                  mesh: Optional[Mesh] = None, max_rank: int = 0):
         if mesh is None:
             mesh = Mesh(np.asarray(jax.devices()), ("model",))
@@ -107,26 +117,25 @@ class ShardedFloristAggregator(FloristAggregator):
         spectra: Dict[Tuple, List[np.ndarray]] = {}
         if "fn" not in self._fn_cache:
             self._fn_cache["fn"] = make_sharded_florist(
-                self.mesh, tau=self.tau, svd_method=self.svd_method)
+                self.mesh, tau=self.tau, svd_method=self.svd_method,
+                max_rank=self.max_rank)
         fn = self._fn_cache["fn"]
-        for path, acc in self._state.items():
-            stacked = acc["stacked"]
-            B_stack = jnp.concatenate(acc["B"], axis=-1)
-            A_stack = jnp.concatenate(acc["A"], axis=-2)
-            if not stacked:
-                B_stack, A_stack = B_stack[None], A_stack[None]
-            Bg, Ag, sp, p = fn(B_stack, A_stack)
-            ps = [int(x) for x in np.asarray(p)]
-            if self.max_rank:
-                ps = [min(x, self.max_rank) for x in ps]
+        device: Dict[Tuple, Tuple] = {}
+        for path, (B_stack, A_stack) in self._leaf_stacks().items():
+            device[path] = fn(B_stack, A_stack)
+        # one device→host transfer for all leaves' spectra + ranks
+        host = jax.device_get({p: (v[2], v[3]) for p, v in device.items()})
+        for path, (Bg, Ag, _, _) in device.items():
+            sp_h, p_h = host[path]
+            ps = [int(x) for x in p_h]
             p_max = max(ps)
             # zeroed columns beyond each layer's p_l make truncation to the
             # per-leaf max exact (same ΔW, scan-compatible tree)
             Bg, Ag = Bg[:, :, :p_max], Ag[:, :p_max, :]
-            if not stacked:
+            if not self._state[path]["stacked"]:
                 Bg, Ag = Bg[0], Ag[0]
             set_path(out, path, {"A": Ag, "B": Bg,
                                  "scale": self._ref_scales[path]})
             rank_rec[path] = ps
-            spectra[path] = [np.asarray(s) for s in sp]
+            spectra[path] = [np.asarray(s) for s in sp_h]
         return AggResult(self.name, out, None, rank_rec, spectra)

@@ -23,6 +23,8 @@ Two thin-SVD backends:
 """
 from __future__ import annotations
 
+import functools
+
 from typing import Dict, List, NamedTuple, Sequence, Tuple
 
 import jax
@@ -45,6 +47,30 @@ def thin_svd(x: jnp.ndarray, method: str = "svd") -> SVDResult:
     raise ValueError(method)
 
 
+@functools.lru_cache(maxsize=None)
+def _batched_thin_svd_fn(method: str):
+    return jax.jit(jax.vmap(lambda x: tuple(thin_svd(x, method))))
+
+
+def thin_svd_batched(x: jnp.ndarray, method: str = "svd") -> SVDResult:
+    """Thin SVD over a stack of equal-shaped matrices x (L, m, n) in ONE
+    compiled call — the building block of the batched server pipeline."""
+    u, s, vt = _batched_thin_svd_fn(method)(x)
+    return SVDResult(u, s, vt)
+
+
+def _gram_matrix(x: jnp.ndarray) -> jnp.ndarray:
+    """xᵀx in fp32.  On TPU this is the streaming Pallas ``adapter_gram``
+    kernel (m-panels through VMEM, r×r accumulator resident); on CPU /
+    under interpret the plain-XLA reference is both the oracle and the
+    faster choice, so we fall back to it."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ops import adapter_gram
+        return adapter_gram(x)
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf
+
+
 def gram_svd(x: jnp.ndarray) -> SVDResult:
     """Thin SVD via the Gram trick (TPU route).
 
@@ -52,51 +78,68 @@ def gram_svd(x: jnp.ndarray) -> SVDResult:
     For wide x: transpose, recurse, swap.  Numerically fine for LoRA-scale
     conditioning (σ_max/σ_min ≪ 1/√eps in fp32); exactness is asserted
     against the LAPACK route in tests.
+
+    Rank-deficient stacks (e.g. duplicated clients) produce near-null
+    eigenvalues whose U columns would otherwise be garbage-magnitude noise
+    (x·v ≈ 0 divided by s ≈ 0): columns with σ below a scaled tolerance
+    (σ_max·√(n·eps), the Gram route's resolution limit) are zeroed, which
+    leaves U S Vᵀ unchanged to within the tolerance.
     """
     m, n = x.shape
     if m < n:
         r = gram_svd(x.T)
         return SVDResult(r.vt.T, r.s, r.u.T)
-    g = x.T @ x                                   # (n, n)
+    g = _gram_matrix(x)                            # (n, n)
     w, v = jnp.linalg.eigh(g)                      # ascending
     w = w[::-1]
     v = v[:, ::-1]
     s = jnp.sqrt(jnp.clip(w, 0.0))
-    u = (x @ v) / jnp.maximum(s, 1e-20)[None, :]
+    eps = jnp.finfo(s.dtype).eps
+    tol = s[0] * jnp.sqrt(eps * n)
+    u = jnp.where(s[None, :] > tol,
+                  (x @ v) / jnp.maximum(s, tol)[None, :], 0.0)
     return SVDResult(u, s, v.T)
 
 
-def energy_rank(s: jnp.ndarray, tau: float) -> int:
-    """Smallest p with Σ_{i≤p} σ_i² / Σ σ_i² ≥ τ (concrete int, host side)."""
-    e = jnp.cumsum(s.astype(jnp.float64) ** 2) if s.dtype == jnp.float64 \
-        else jnp.cumsum(s.astype(jnp.float32) ** 2)
-    total = e[-1]
-    frac = e / jnp.maximum(total, 1e-30)
-    p = int(jnp.searchsorted(frac, tau, side="left")) + 1
-    return min(p, int(s.shape[0]))
-
-
 def energy_rank_traced(s: jnp.ndarray, tau: float) -> jnp.ndarray:
-    """Traced (jit-safe) version: returns p as an int32 scalar."""
+    """Smallest p with Σ_{i≤p} σ_i² / Σ σ_i² ≥ τ, as a traced int32 scalar.
+
+    This is the single source of truth for energy-rank semantics: fp32
+    cumulative energy and an fp32 τ comparison, identical under jit and on
+    host (``energy_rank`` is a thin ``int()`` wrapper), so the padded /
+    batched / sharded paths pick the same p as the host loop at τ
+    boundaries.
+    """
     e = jnp.cumsum(s.astype(jnp.float32) ** 2)
     frac = e / jnp.maximum(e[-1], 1e-30)
-    return jnp.minimum(jnp.searchsorted(frac, tau, side="left") + 1, s.shape[0]).astype(jnp.int32)
+    p = jnp.searchsorted(frac, jnp.float32(tau), side="left") + 1
+    return jnp.minimum(p, s.shape[0]).astype(jnp.int32)
+
+
+def energy_rank(s: jnp.ndarray, tau: float) -> int:
+    """Host-side energy rank (concrete int) — same fp32 semantics as
+    :func:`energy_rank_traced` by construction."""
+    return int(energy_rank_traced(s, tau))
+
+
+def knee_rank_traced(s: jnp.ndarray) -> jnp.ndarray:
+    """Traced knee-point rank: max distance of the cumulative-energy curve
+    from the chord between (0, 0) and (r, 1).  int32 scalar in [1, r]."""
+    e = jnp.cumsum(s.astype(jnp.float32) ** 2)
+    frac = e / jnp.maximum(e[-1], 1e-30)               # (r,)
+    r = s.shape[0]
+    x = (jnp.arange(1, r + 1, dtype=jnp.float32)) / r
+    # distance from the chord y = x (both endpoints normalized)
+    p = jnp.argmax(frac - x) + 1
+    return jnp.clip(p, 1, r).astype(jnp.int32)
 
 
 def knee_rank(s: jnp.ndarray) -> int:
     """BEYOND-PAPER (paper §5 future work (i)): automatic per-layer rank
-    selection by knee-point detection on the cumulative-energy curve —
-    the point of maximum distance from the chord between (0, 0) and
-    (r, 1).  No tunable τ; adapts to each layer's spectrum shape."""
-    e = jnp.cumsum(s.astype(jnp.float32) ** 2)
-    total = jnp.maximum(e[-1], 1e-30)
-    frac = e / total                                   # (r,)
-    r = s.shape[0]
-    x = (jnp.arange(1, r + 1, dtype=jnp.float32)) / r
-    # distance from the chord y = x (both endpoints normalized)
-    dist = frac - x
-    p = int(jnp.argmax(dist)) + 1
-    return max(1, min(p, r))
+    selection by knee-point detection on the cumulative-energy curve.
+    No tunable τ; adapts to each layer's spectrum shape.  Host wrapper of
+    :func:`knee_rank_traced` (same semantics traced and concrete)."""
+    return int(knee_rank_traced(s))
 
 
 def stack_adapters(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
@@ -147,11 +190,15 @@ def florist_core(Bs: Sequence[jnp.ndarray], As: Sequence[jnp.ndarray],
     return florist_core_stacked(B_stack, A_stack, tau, svd_method, max_rank)
 
 
-def florist_core_padded(B_stack: jnp.ndarray, A_stack: jnp.ndarray, tau: float,
-                        svd_method: str = "svd"):
+def florist_core_padded(B_stack: jnp.ndarray, A_stack: jnp.ndarray, tau,
+                        svd_method: str = "svd", max_rank: int = 0):
     """Jit-safe variant: full-rank outputs with columns ≥ p zeroed (same ΔW).
 
-    Used by the sharded multi-pod aggregation where shapes must be static.
+    Used by the sharded multi-pod aggregation and the batched (vmapped)
+    server pipeline, where shapes must be static.  Honors the same knobs as
+    the host path: ``tau`` is a float threshold or ``"auto"`` (knee-point),
+    and ``max_rank`` caps the kept rank — so sharded/batched backends
+    produce the same ΔW as host ``florist`` under any configuration.
     Returns (B_g_full (m,r), A_g_full (r,n), spectrum (r,), p int32).
     """
     f32 = jnp.float32
@@ -161,12 +208,39 @@ def florist_core_padded(B_stack: jnp.ndarray, A_stack: jnp.ndarray, tau: float,
     q = vbt @ ua
     p_core = (sb[:, None] * q) * sa[None, :]
     up, sp, vpt = thin_svd(p_core, "svd")
-    p = energy_rank_traced(sp, tau)
+    p = knee_rank_traced(sp) if tau == "auto" else energy_rank_traced(sp, tau)
+    if max_rank:
+        p = jnp.minimum(p, max_rank)
     r = sp.shape[0]
     keep = (jnp.arange(r) < p)
     B_g = (ub @ up) * jnp.where(keep, sp, 0.0)[None, :]
     A_g = (vpt @ vat) * keep[:, None]
     return B_g, A_g, sp, p
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_core_fn(tau, svd_method: str, max_rank: int):
+    fn = functools.partial(florist_core_padded, tau=tau,
+                           svd_method=svd_method, max_rank=max_rank)
+    return jax.jit(jax.vmap(fn))
+
+
+def florist_core_batched(B_stacks: jnp.ndarray, A_stacks: jnp.ndarray, tau,
+                         svd_method: str = "svd", max_rank: int = 0):
+    """Batched FLoRIST server pipeline: ONE compiled call for a whole stack
+    of layers (or a bucket of equal-shaped leaves × layers).
+
+    ``jax.vmap`` of :func:`florist_core_padded` over axis 0, jitted and
+    cached per (τ, backend, cap) — all thin SVDs for all layers run in a
+    single XLA computation with no per-layer retrace or host sync.  The
+    caller materializes spectra/ranks with one device→host transfer at the
+    end and truncates the zero-padded outputs there.
+
+    B_stacks: (L, m, r), A_stacks: (L, r, n), weights already folded in.
+    Returns (B_g (L,m,r) zero-padded beyond each layer's p_l, A_g (L,r,n),
+    spectra (L,r), ranks (L,) int32).
+    """
+    return _batched_core_fn(tau, svd_method, int(max_rank))(B_stacks, A_stacks)
 
 
 def reconstruction_error(Bs, As, weights, B_g, A_g) -> float:

@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, o_ref, acc_scr, *, nm: int):
+def _kernel(x_ref, o_ref, acc_scr, *, nm: int, m: int, bm: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -25,6 +25,11 @@ def _kernel(x_ref, o_ref, acc_scr, *, nm: int):
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     x = x_ref[...]
+    if m % bm:
+        # tail panel: rows past m are out-of-bounds garbage — zero them so
+        # callers never pay a host-side padding copy on the hot path
+        rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        x = jnp.where(rows < m, x, jnp.zeros_like(x))
     acc_scr[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
 
     @pl.when(i == nm - 1)
@@ -34,13 +39,12 @@ def _kernel(x_ref, o_ref, acc_scr, *, nm: int):
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def adapter_gram_kernel(x, bm: int = 512, interpret: bool = False):
-    """x: (m, r) -> xᵀx (r, r) fp32."""
+    """x: (m, r) -> xᵀx (r, r) fp32.  Any m — the last panel is masked."""
     m, r = x.shape
     bm = min(bm, m)
-    assert m % bm == 0, (m, bm)
-    nm = m // bm
+    nm = pl.cdiv(m, bm)
     return pl.pallas_call(
-        functools.partial(_kernel, nm=nm),
+        functools.partial(_kernel, nm=nm, m=m, bm=bm),
         grid=(nm,),
         in_specs=[pl.BlockSpec((bm, r), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((r, r), lambda i: (0, 0)),

@@ -66,5 +66,6 @@ def wkv6(r, k, v, w, u, chunk: int = 256):
 
 
 def adapter_gram(x, bm: int = 512):
-    x, m = _pad_to(x, 0, min(bm, x.shape[0]))
-    return adapter_gram_kernel(x, bm=min(bm, x.shape[0]), interpret=_interpret())
+    """xᵀx (r, r) fp32 for any (m, r) — tail masking inside the kernel."""
+    return adapter_gram_kernel(x, bm=min(bm, x.shape[0]),
+                               interpret=_interpret())

@@ -109,6 +109,10 @@ class ServeEngine:
                 self.slots[i] = req
                 # prompt tokens are fed through the decode path (cache fill)
                 self._prefill_left[i] = list(req.prompt)
+                if not req.prompt:
+                    # empty prompt: seed generation from token 0 rather than
+                    # whatever token the slot's previous occupant left behind
+                    self._last_tokens[i, 0] = 0
 
     def _engine_step(self, results: Dict[int, List[int]]):
         toks = self._last_tokens.copy()

@@ -234,6 +234,104 @@ class TestCostModelParity:
         assert C.total_download_rank(agg) == agg.total_download_rank() / 2.0
 
 
+class TestBatchedPipeline:
+    """The batched finalize (one compiled vmapped call per bucket of
+    equal-shaped leaves, one device→host transfer) must match the legacy
+    per-(leaf, layer) loop."""
+
+    def _hetero_trees(self, rng, spread=2.0):
+        """Heterogeneous ranks with a per-layer energy spread so layers of
+        the same leaf select different p_l."""
+        trees = []
+        for r in HETER:
+            t = _client_tree(rng, L=3, m=40, n=32, r=r, scale=1.0)
+            leaf = get_path(t, adapter_leaf_paths(t)[0])
+            sc = jnp.asarray(spread ** np.arange(3), jnp.float32)
+            leaf["B"] = leaf["B"] * sc[:, None, None]
+            trees.append(t)
+        return trees, [0.5, 0.3, 0.2]
+
+    @pytest.mark.parametrize("svd_method", ["svd", "gram"])
+    @pytest.mark.parametrize("tau,max_rank", [(0.9, 0), (0.9, 5), ("auto", 0)])
+    def test_matches_loop(self, rng, svd_method, tau, max_rank):
+        trees, w = self._hetero_trees(rng)
+        loop = make_aggregator("florist", tau=tau, svd_method=svd_method,
+                               max_rank=max_rank, pipeline="loop"
+                               ).aggregate(trees, w, client_ranks=HETER)
+        bat = make_aggregator("florist", tau=tau, svd_method=svd_method,
+                              max_rank=max_rank
+                              ).aggregate(trees, w, client_ranks=HETER)
+        assert bat.ranks == loop.ranks
+        for p in loop.spectra:
+            for s1, s2 in zip(loop.spectra[p], bat.spectra[p]):
+                np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+        for p in adapter_leaf_paths(loop.global_adapters):
+            l, b = (get_path(loop.global_adapters, p),
+                    get_path(bat.global_adapters, p))
+            assert l["B"].shape == b["B"].shape
+            for layer in range(3):
+                np.testing.assert_allclose(
+                    np.asarray(l["B"][layer] @ l["A"][layer]),
+                    np.asarray(b["B"][layer] @ b["A"][layer]),
+                    rtol=1e-4, atol=1e-4)
+
+    def test_layers_pick_different_ranks(self, rng):
+        trees, w = self._hetero_trees(rng, spread=4.0)
+        bat = make_aggregator("florist", tau=0.9).aggregate(
+            trees, w, client_ranks=HETER)
+        ps = next(iter(bat.ranks.values()))
+        assert len(set(ps)) > 1        # the vmapped threshold is per-layer
+
+    def test_equal_shaped_leaves_bucketed_one_call(self, rng, monkeypatch):
+        """All equal-shaped leaves must go through a single compiled call."""
+        import repro.core.aggregators.florist as F
+        trees = []
+        for r in HETER:
+            t = _client_tree(rng, L=2, m=40, n=32, r=r)
+            blk = t["blocks"][0]["attn"]
+            blk["wk"] = {k: jnp.array(v) for k, v in blk["wq"].items()}
+            trees.append(t)
+        calls = []
+        real = F.florist_core_batched
+
+        def spy(*a, **kw):
+            calls.append(a[0].shape)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(F, "florist_core_batched", spy)
+        res = make_aggregator("florist", tau=0.9).aggregate(
+            trees, [0.5, 0.3, 0.2], client_ranks=HETER)
+        assert len(calls) == 1                 # 2 leaves × 2 layers batched
+        assert calls[0][0] == 4
+        assert len(res.ranks) == 2
+
+    def test_invalid_pipeline_rejected(self):
+        with pytest.raises(ValueError):
+            make_aggregator("florist", pipeline="nope")
+
+
+def test_sharded_florist_max_rank_matches_host(rng):
+    """Satellite regression: florist_sharded must produce the same ΔW as
+    host florist under a rank cap (the padded core used to ignore it)."""
+    from repro.core.distributed import ShardedFloristAggregator  # registers
+
+    trees, w = _make_clients(rng, HETER)
+    for tau, cap in ((0.95, 4), ("auto", 3)):
+        host = make_aggregator("florist", tau=tau,
+                               max_rank=cap).aggregate(trees, w)
+        shard = make_aggregator("florist_sharded", tau=tau, svd_method="svd",
+                                max_rank=cap).aggregate(trees, w)
+        assert shard.ranks == host.ranks
+        assert all(r <= cap for ps in shard.ranks.values() for r in ps)
+        path = adapter_leaf_paths(trees[0])[0]
+        h = get_path(host.global_adapters, path)
+        s = get_path(shard.global_adapters, path)
+        for l in range(2):
+            np.testing.assert_allclose(
+                np.asarray(h["B"][l] @ h["A"][l]),
+                np.asarray(s["B"][l] @ s["A"][l]), rtol=1e-3, atol=1e-3)
+
+
 def test_sharded_florist_backend_matches_host_deltaw(rng):
     """The registered multi-pod backend (florist_sharded) reconstructs the
     same ΔW as the host-side strategy at τ=1 on a single-device mesh."""

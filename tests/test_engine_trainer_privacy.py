@@ -48,6 +48,32 @@ class TestServeEngine:
             outs.append(tuple(eng.run()[uid]))
         assert outs[0] == outs[1]
 
+    def test_empty_prompt_seeds_token_zero(self, engine_setup):
+        """An empty-prompt request must not sample its first token from the
+        stale ``_last_tokens`` slot value of a previous occupant — defined
+        behavior is to seed generation from token 0."""
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+        # first request leaves a stale last-token behind in slot 0
+        first = eng.submit([5, 6], SamplingParams(max_tokens=3))
+        out1 = eng.run()
+        assert eng._last_tokens[0, 0] == out1[first][-1]
+        eng._last_tokens[0, 0] = 17   # make the staleness unambiguous
+        fed = []
+        orig = eng._step
+
+        def spy(p, a, cache, batch):
+            fed.append(int(np.asarray(batch["tokens"])[0, 0]))
+            return orig(p, a, cache, batch)
+
+        eng._step = spy
+        uid = eng.submit([], SamplingParams(max_tokens=4))
+        out2 = eng.run()
+        assert fed[0] == 0                    # seeded, not the stale token
+        assert len(out2[uid]) == 4
+        assert all(0 <= t < cfg.vocab_size for t in out2[uid])
+
     def test_sampling_respects_top_k(self):
         from repro.serve.engine import SamplingParams, sample_logits
         logits = jnp.asarray([10.0, 9.0, -5.0, -5.0])

@@ -111,6 +111,16 @@ class TestAdapterGram:
         np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
                                    rtol=1e-4, atol=1e-3)
 
+    @pytest.mark.parametrize("m", [100, 129, 257])
+    def test_tail_panel_masked(self, rng, m):
+        """m not a multiple of bm: the kernel masks the tail panel instead
+        of requiring a host-side padding copy."""
+        x = _arr(rng, (m, 24), jnp.float32)
+        g = ops.adapter_gram(x, bm=128)
+        gr = ref.adapter_gram_ref(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                                   rtol=1e-4, atol=1e-3)
+
     def test_bf16_input_fp32_accum(self, rng):
         x = _arr(rng, (512, 32), jnp.bfloat16)
         g = ops.adapter_gram(x, bm=128)

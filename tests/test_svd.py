@@ -6,9 +6,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.svd import (eckart_young_bound, energy_rank, florist_core,
-                            florist_core_padded, gram_svd, reconstruction_error,
-                            stack_adapters, thin_svd)
+from repro.core.svd import (eckart_young_bound, energy_rank,
+                            energy_rank_traced, florist_core,
+                            florist_core_batched, florist_core_padded,
+                            florist_core_stacked, gram_svd,
+                            reconstruction_error, stack_adapters, thin_svd,
+                            thin_svd_batched)
 
 
 def _clients(rng, m, n, ranks):
@@ -82,6 +85,31 @@ class TestEnergyRank:
         assert ps == sorted(ps)
         assert ps[-1] <= 32
 
+    def test_host_matches_traced_at_tau_boundaries(self, rng):
+        """Regression: the host path used to take a float64 branch that
+        could pick a different p than the traced float32 path exactly at a
+        cumulative-energy boundary.  Both must share fp32 semantics."""
+        # equal singular values put τ = k/r exactly on a boundary
+        s_eq = jnp.ones((8,), jnp.float32)
+        for tau in (0.125, 0.25, 0.5, 0.625, 0.875, 1.0):
+            assert energy_rank(s_eq, tau) == int(energy_rank_traced(s_eq, tau))
+        # τ values that are not fp32-representable (0.9, 0.99, ...) on a
+        # spectrum whose cumulative fractions land arbitrarily close
+        for _ in range(20):
+            s = jnp.asarray(np.sort(rng.gamma(2, 2, size=17))[::-1].copy(),
+                            jnp.float32)
+            frac = np.cumsum(np.asarray(s, np.float32) ** 2)
+            frac = frac / frac[-1]
+            for tau in (0.9, 0.99, float(frac[3]), float(frac[9])):
+                assert energy_rank(s, tau) == int(energy_rank_traced(s, tau))
+
+    @given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=64),
+           st.floats(0.05, 1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_host_traced_parity_property(self, sigmas, tau):
+        s = jnp.asarray(sorted(sigmas, reverse=True), jnp.float32)
+        assert energy_rank(s, tau) == int(energy_rank_traced(s, tau))
+
 
 class TestBackends:
     @pytest.mark.parametrize("shape", [(128, 16), (16, 128), (64, 64)])
@@ -104,6 +132,110 @@ class TestBackends:
         np.testing.assert_allclose(np.asarray(bg @ ag),
                                    np.asarray(out.B_g @ out.A_g),
                                    rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("tau,max_rank", [(0.9, 3), (1.0, 5),
+                                              ("auto", 0), ("auto", 2)])
+    def test_padded_honors_max_rank_and_auto(self, rng, tau, max_rank):
+        """Regression: the jit-safe padded variant used to ignore max_rank
+        and reject tau='auto', diverging from the host path (and hence
+        florist_sharded from florist)."""
+        Bs, As, w = _clients(rng, 48, 40, [4, 8, 8])
+        B_stack, A_stack = stack_adapters(Bs, As, w)
+        bg, ag, sp, p = florist_core_padded(B_stack, A_stack, tau=tau,
+                                            max_rank=max_rank)
+        out = florist_core(Bs, As, w, tau=tau, max_rank=max_rank)
+        assert int(p) == out.p
+        if max_rank:
+            assert int(p) <= max_rank
+        np.testing.assert_allclose(np.asarray(bg @ ag),
+                                   np.asarray(out.B_g @ out.A_g),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gram_svd_rank_deficient_duplicated_clients(self, rng):
+        """Two identical clients stacked → the stack's true rank is half its
+        columns.  The Gram route must not emit garbage-magnitude U columns
+        in the null directions (old behavior: x·v ≈ 0 divided by s ≈ 0)."""
+        b = jnp.asarray(rng.normal(size=(96, 8)), jnp.float32)
+        x = jnp.concatenate([b, b], axis=1)            # (96, 16), rank 8
+        g = gram_svd(x)
+        u = np.asarray(g.u)
+        assert np.isfinite(u).all()
+        # every column is either (near-)unit or exactly zeroed — nothing huge
+        norms = np.linalg.norm(u, axis=0)
+        assert norms.max() < 1.0 + 1e-3
+        assert (norms[8:] < 1e-2).all()                # null directions zeroed
+        # reconstruction still matches on the true range
+        np.testing.assert_allclose(np.asarray(g.u @ jnp.diag(g.s) @ g.vt),
+                                   np.asarray(x), rtol=2e-2, atol=2e-2)
+
+    def test_gram_svd_rank_deficient_wide(self, rng):
+        a = jnp.asarray(rng.normal(size=(6, 64)), jnp.float32)
+        x = jnp.concatenate([a, 2.0 * a], axis=0)      # (12, 64), rank 6
+        g = gram_svd(x)
+        assert np.isfinite(np.asarray(g.u)).all()
+        assert np.isfinite(np.asarray(g.vt)).all()
+        assert np.linalg.norm(np.asarray(g.vt), axis=1).max() < 1.0 + 1e-3
+        np.testing.assert_allclose(np.asarray(g.u @ jnp.diag(g.s) @ g.vt),
+                                   np.asarray(x), rtol=2e-2, atol=2e-2)
+
+
+class TestBatchedCore:
+    """The batched (vmapped, single-compile) server pipeline must agree
+    with the per-layer host loop."""
+
+    def _layer_stacks(self, rng, L, m, n, ranks, spread=1.0):
+        Bs = [jnp.asarray(rng.normal(size=(L, m, r)), jnp.float32)
+              for r in ranks]
+        As = [jnp.asarray(rng.normal(size=(L, r, n)), jnp.float32)
+              for r in ranks]
+        if spread != 1.0:   # make layers select different p_l
+            scale = jnp.asarray(spread ** np.arange(L), jnp.float32)
+            Bs = [B * scale[:, None, None] for B in Bs]
+        w = rng.dirichlet([1.0] * len(ranks)).tolist()
+        B_stacks = jnp.concatenate(Bs, axis=-1)
+        A_stacks = jnp.concatenate([wi * A for wi, A in zip(w, As)], axis=-2)
+        return B_stacks, A_stacks
+
+    @pytest.mark.parametrize("svd_method", ["svd", "gram"])
+    @pytest.mark.parametrize("tau,max_rank", [(0.9, 0), (0.9, 4), ("auto", 0)])
+    def test_matches_per_layer_loop(self, rng, svd_method, tau, max_rank):
+        L = 4
+        B_stacks, A_stacks = self._layer_stacks(rng, L, 48, 40, [4, 8, 8])
+        bg, ag, sp, p = florist_core_batched(B_stacks, A_stacks, tau,
+                                             svd_method, max_rank)
+        for l in range(L):
+            ref = florist_core_stacked(B_stacks[l], A_stacks[l], tau,
+                                       svd_method, max_rank)
+            assert int(p[l]) == ref.p
+            np.testing.assert_allclose(np.asarray(sp[l]),
+                                       np.asarray(ref.spectrum),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(
+                np.asarray(bg[l] @ ag[l]),
+                np.asarray(ref.B_g @ ref.A_g), rtol=1e-4, atol=1e-4)
+
+    def test_layers_select_different_ranks(self, rng):
+        B_stacks, A_stacks = self._layer_stacks(rng, 6, 48, 40, [2, 4],
+                                                spread=3.0)
+        # per-layer spectra differ in shape → the traced threshold must be
+        # applied per layer, not shared across the vmap axis
+        _, _, _, p = florist_core_batched(B_stacks, A_stacks, 0.9)
+        ps = [int(x) for x in np.asarray(p)]
+        for l, pl in enumerate(ps):
+            ref = florist_core_stacked(B_stacks[l], A_stacks[l], 0.9)
+            assert pl == ref.p
+
+    def test_thin_svd_batched_matches_loop(self, rng):
+        x = jnp.asarray(rng.normal(size=(5, 32, 24)), jnp.float32)
+        u, s, vt = thin_svd_batched(x, "svd")
+        for l in range(5):
+            ref = thin_svd(x[l], "svd")
+            np.testing.assert_allclose(np.asarray(s[l]), np.asarray(ref.s),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(u[l] * s[l][None, :] @ vt[l]),
+                np.asarray(ref.u * ref.s[None, :] @ ref.vt),
+                rtol=1e-4, atol=1e-4)
 
 
 class TestKneeRank:
