@@ -1,0 +1,118 @@
+"""Per-round federated runtime wall-clock: client runners × round schedulers.
+
+The cohort runner is the client-side analogue of the batched server
+pipeline: instead of K·steps jitted train-step dispatches per round (one
+per client per batch, each with its own host→device transfer), every
+equal-rank cohort trains in ONE compiled ``vmap``-of-``scan`` call.  This
+measures what that dispatch collapse buys on the CPU smoke config, across
+the sync and async schedulers.
+
+Emits JSON for CI artifacts (the ``BENCH_fed.json`` trajectory)::
+
+    PYTHONPATH=src python benchmarks/fed_bench.py --smoke --json BENCH_fed.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.federated import FederatedTrainer
+from repro.data.synthetic import make_eval_data
+
+SMOKE_MODEL = ModelConfig(name="fedbench-tiny", family="dense", num_layers=2,
+                          d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                          d_ff=64, vocab_size=128, dtype="float32")
+FULL_MODEL = ModelConfig(name="fedbench-small", family="dense", num_layers=4,
+                         d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                         d_ff=256, vocab_size=512, dtype="float32")
+
+
+def make_trainer(cfg: ModelConfig, runner: str, scheduler: str, *,
+                 clients: int, sample: int, local_steps: int,
+                 batch_size: int, seq_len: int) -> FederatedTrainer:
+    fed = FedConfig(num_clients=clients, clients_per_round=sample,
+                    method="florist", tau=0.9, homogeneous_rank=8, seed=0)
+    return FederatedTrainer(cfg, fed, LoRAConfig(rank=8, alpha=8.0),
+                            OptimConfig(lr=3e-3), batch_size=batch_size,
+                            local_steps=local_steps, seq_len=seq_len,
+                            eval_data=make_eval_data(num_samples=32,
+                                                     seq_len=seq_len,
+                                                     vocab=cfg.vocab_size),
+                            runner=runner, scheduler=scheduler)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config + few iters (CI)")
+    ap.add_argument("--json", default="", help="write results to this path")
+    ap.add_argument("--iters", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = SMOKE_MODEL if args.smoke else FULL_MODEL
+    clients, sample = (32, 16)
+    # smoke: dispatch-dominated shapes — per-step compute is tiny, so the
+    # sequential runner's 192 per-batch dispatches dominate and the cohort
+    # collapse of them into one call per round shows its full effect
+    local_steps = 12 if args.smoke else 8
+    batch_size, seq_len = (2, 16) if args.smoke else (8, 32)
+    iters = args.iters or 5
+    warmup = 2          # round 1 compiles, round 2 hits any late shapes
+
+    combos = [(runner, scheduler)
+              for runner in ("sequential", "cohort")
+              for scheduler in ("sync", "async")]
+    trainers = {c: make_trainer(cfg, *c, clients=clients, sample=sample,
+                                local_steps=local_steps,
+                                batch_size=batch_size, seq_len=seq_len)
+                for c in combos}
+    rounds = {c: 0 for c in combos}
+    for c in combos:
+        for _ in range(warmup):
+            trainers[c].run_round(rounds[c])
+            rounds[c] += 1
+    # interleave the combos round-robin so slow drift of the host (CI
+    # machines throttle) hits every arm equally instead of biasing one
+    samples = {c: [] for c in combos}
+    for _ in range(iters):
+        for c in combos:
+            t0 = time.perf_counter()
+            trainers[c].run_round(rounds[c])
+            rounds[c] += 1
+            samples[c].append((time.perf_counter() - t0) * 1e3)
+
+    results = []
+    for (runner, scheduler) in combos:
+        ms = float(statistics.median(samples[(runner, scheduler)]))
+        results.append({"runner": runner, "scheduler": scheduler,
+                        "ms_per_round": round(ms, 3)})
+        print(f"{runner:10s} {scheduler:7s} {ms:9.2f} ms/round")
+
+    def best(runner):
+        return min(r["ms_per_round"] for r in results
+                   if r["runner"] == runner and r["scheduler"] == "sync")
+
+    speedup = best("sequential") / best("cohort")
+    print(f"speedup (cohort vs sequential, sync): {speedup:.2f}x")
+
+    report = {
+        "config": {"model": cfg.name, "num_clients": clients,
+                   "clients_per_round": sample, "local_steps": local_steps,
+                   "iters": iters, "smoke": bool(args.smoke),
+                   "backend": jax.default_backend()},
+        "results": results,
+        "speedup_cohort_vs_sequential": round(speedup, 2),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

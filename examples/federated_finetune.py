@@ -2,11 +2,15 @@
 methods on a configurable model, several hundred local steps total.
 
   PYTHONPATH=src python examples/federated_finetune.py \
-      [--method florist] [--rounds 20] [--tau 0.9] [--heter] [--model 100m]
+      [--method florist] [--rounds 20] [--tau 0.9] [--heter] [--model 100m] \
+      [--runner cohort] [--scheduler async] [--codec bf16]
 
 ``--model 100m`` builds a ~100M-parameter decoder (12L × 768) — the
 paper-style end-to-end run (slow on CPU; the default 'tiny' profile runs in
-a couple of minutes).
+a couple of minutes).  ``--runner cohort`` trains each equal-rank cohort in
+one vmapped call; ``--scheduler`` swaps the participation semantics;
+``--codec`` picks the wire serialization whose measured bytes are printed
+per round (see :mod:`repro.core.runtime`).
 """
 import argparse
 import time
@@ -15,6 +19,8 @@ from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 import repro.core.distributed  # noqa: F401  (registers florist_sharded)
 from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
+from repro.core.runtime import (available_codecs, available_runners,
+                                available_schedulers)
 
 PROFILES = {
     "tiny": ModelConfig(name="fed-tiny", family="dense", num_layers=4,
@@ -39,6 +45,11 @@ def main():
     ap.add_argument("--tau", type=float, default=0.9)
     ap.add_argument("--heter", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--runner", default="sequential",
+                    choices=available_runners())
+    ap.add_argument("--scheduler", default="sync",
+                    choices=available_schedulers())
+    ap.add_argument("--codec", default="fp32", choices=available_codecs())
     args = ap.parse_args()
 
     cfg = PROFILES[args.model]
@@ -50,18 +61,23 @@ def main():
                     seed=args.seed)
     trainer = FederatedTrainer(cfg, fed, LoRAConfig(rank=16, alpha=16.0),
                                OptimConfig(lr=3e-4), batch_size=8,
-                               local_steps=args.local_steps, seq_len=64)
+                               local_steps=args.local_steps, seq_len=64,
+                               runner=args.runner, scheduler=args.scheduler,
+                               transport=args.codec)
     total_steps = args.rounds * fed.clients_per_round * args.local_steps
     print(f"== federated fine-tune: {cfg.name} ({cfg.param_count():,} params), "
-          f"method={args.method}, {args.rounds} rounds "
-          f"(~{total_steps} local steps total) ==")
+          f"method={args.method}, runner={args.runner}, "
+          f"scheduler={args.scheduler}, codec={args.codec}, "
+          f"{args.rounds} rounds (~{total_steps} local steps total) ==")
     t0 = time.time()
     for rnd in range(args.rounds):
         rec = trainer.run_round(rnd)
         print(f"[{time.time()-t0:7.1f}s] round {rnd:3d} "
               f"loss={rec.eval_loss:.4f} acc={rec.eval_acc:.3f} "
               f"down_rank={rec.download_rank:.0f} "
-              f"down_MB={rec.download_params * 2 / 2**20:.2f}")
+              f"wire_up_MB={rec.upload_bytes / 2**20:.2f} "
+              f"wire_down_MB={rec.download_bytes / 2**20:.2f} "
+              f"({rec.wall_secs:.2f}s/round)")
     print("done.")
 
 

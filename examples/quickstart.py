@@ -39,9 +39,16 @@ def main():
     print("\nper-layer kept ranks (energy threshold τ=0.9):")
     for path, ranks in agg.ranks.items():
         print(f"  {'/'.join(map(str, path))}: {ranks}")
+    last = trainer.history[-1]
     print(f"\ndownload cost this round: "
-          f"{C.mb(trainer.history[-1].download_params):.3f} MB "
-          f"(upload {C.mb(trainer.history[-1].upload_params):.3f} MB)")
+          f"{C.mb(last.download_params):.3f} MB "
+          f"(upload {C.mb(last.upload_params):.3f} MB) — analytic FP16")
+    # the runtime also *measures* serialized bytes on the wire (fp32 codec
+    # here; swap transport="bf16"/"int8" on the trainer to compress)
+    print(f"measured on the wire:     "
+          f"{C.wire_mb(last.download_bytes):.3f} MB down / "
+          f"{C.wire_mb(last.upload_bytes):.3f} MB up "
+          f"({last.wall_secs:.2f}s/round)")
 
 
 if __name__ == "__main__":

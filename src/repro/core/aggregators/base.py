@@ -91,6 +91,14 @@ def ones_scale(ref_scale):
     return jnp.ones_like(ref_scale)
 
 
+def default_wire_arrays(leaf: Dict) -> Dict[str, Any]:
+    """The default wire set of one LoRA leaf: A and B travel, ``scale``
+    stays home.  Single source of truth for both the aggregator hook
+    (:meth:`Aggregator.wire_arrays`) and the transport's fallback for
+    duck-typed strategies."""
+    return {"A": leaf["A"], "B": leaf["B"]}
+
+
 def bucket_by_shape(stacks: Dict[Tuple, Sequence[jnp.ndarray]]
                     ) -> List[List[Tuple]]:
     """Group leaf paths whose stacked blocks share shapes.
@@ -177,6 +185,10 @@ class Aggregator:
     name: str = "?"
     #: FFA-style methods train only B locally (A frozen).
     trains_b_only: bool = False
+    #: set True by strategies that must be handed the frozen shared init
+    #: (``A_init``) before finalize — the trainer injects it explicitly
+    #: instead of probing for an ``A_init`` attribute.
+    needs_a_init: bool = False
     #: weight of this method's broadcast rank in the paper's efficiency
     #: denominator (FFA sends one of the two matrices → 0.5).
     download_rank_factor: float = 1.0
@@ -260,6 +272,14 @@ class Aggregator:
         if global_state is None:
             return fresh_client_adapters(a_init_full, rank)
         return match_rank(global_state.global_adapters, rank)
+
+    # -- wire semantics ------------------------------------------------------
+    def wire_arrays(self, leaf: Dict) -> Dict[str, Any]:
+        """The tensors of one LoRA leaf that actually travel on the wire
+        (both directions) — the measured-bytes counterpart of the analytic
+        cost model below.  Default: A and B (``scale`` is an O(L) header
+        re-derived locally; FFA overrides to send only B)."""
+        return default_wire_arrays(leaf)
 
     # -- cost model ----------------------------------------------------------
     # NOTE: cost methods must not depend on constructor config or per-round

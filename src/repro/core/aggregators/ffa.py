@@ -18,6 +18,7 @@ class FfaAggregator(Aggregator):
     travels — the server re-reads it from the frozen shared init)."""
 
     trains_b_only = True
+    needs_a_init = True
     # only one of the two matrices is broadcast -> rank counts half in the
     # paper's efficiency denominator
     download_rank_factor = 0.5
@@ -31,6 +32,9 @@ class FfaAggregator(Aggregator):
     def _reset(self) -> None:
         super()._reset()
         self._seen_ranks: Dict[Tuple, set] = {}
+
+    def wire_arrays(self, leaf: Dict):
+        return {"B": leaf["B"]}          # A frozen, never on the wire
 
     def client_upload_params(self, leaf: Dict) -> int:
         return leaf["B"].size            # A frozen, never sent

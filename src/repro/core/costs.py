@@ -25,7 +25,8 @@ from repro.core.aggregators import (AggResult, adapter_leaf_paths,
 __all__ = ["AggResult", "BYTES_FP16", "SVD_CONST", "adapter_leaf_paths",
            "download_params", "efficiency", "full_ft_params", "get_path",
            "leaf_dims", "mb", "server_flops", "total_download_rank",
-           "upload_params"]
+           "upload_params", "wire_download_bytes", "wire_mb",
+           "wire_upload_bytes"]
 
 BYTES_FP16 = 2
 
@@ -79,6 +80,34 @@ def efficiency(agg: AggResult, client_ranks: Sequence[int] = (),
 
 def mb(params: int) -> float:
     return params * BYTES_FP16 / (1024 ** 2)
+
+
+def wire_mb(num_bytes: int) -> float:
+    """MB of a *measured* serialized payload (see :mod:`repro.core.runtime.
+    transport`), for cross-checking the analytic FP16 figures above."""
+    return num_bytes / (1024 ** 2)
+
+
+def wire_upload_bytes(method: str, client_trees: Sequence[Dict],
+                      codec: str = "bf16") -> int:
+    """Measured serialized uplink bytes for the sampled client trees —
+    the real-bytes counterpart of :func:`upload_params` (with the ``bf16``
+    codec, exactly ``BYTES_FP16 × upload_params``)."""
+    from repro.core.runtime.transport import AdapterPayload, make_codec
+    model, c = _cost_model(method), make_codec(codec)
+    return sum(AdapterPayload.pack(t, c, model.wire_arrays).num_bytes
+               for t in client_trees)
+
+
+def wire_download_bytes(method: str, agg: AggResult, num_clients: int,
+                        codec: str = "bf16") -> int:
+    """Measured serialized downlink bytes for one round's result — the
+    real-bytes counterpart of :func:`download_params` (per-layer ranks are
+    honoured: zero padding is never serialized)."""
+    from repro.core.runtime.transport import Transport, make_codec
+    _, nbytes = Transport(make_codec(codec)).server_to_clients(
+        agg, _cost_model(method), num_clients)
+    return nbytes
 
 
 def full_ft_params(model_param_count: int, num_clients: int) -> int:

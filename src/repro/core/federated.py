@@ -1,23 +1,37 @@
 """Federated fine-tuning orchestration (paper §4.1 setup).
 
 Simulates the full loop: 100 clients with Dirichlet(0.5) non-IID data, 10
-sampled per round, local LoRA fine-tuning, server aggregation through a
-pluggable :class:`~repro.core.aggregators.Aggregator` strategy, global-model
-evaluation and per-round communication accounting.
+sampled per round, local LoRA fine-tuning, server aggregation and
+global-model evaluation — composed from four pluggable seams
+(:mod:`repro.core.runtime`):
 
-The server side is **streaming**: each trained client update is folded into
-the aggregator's running accumulators (``add_client``) and dropped before
-the next client trains, so peak server memory per round is one client's
+* a **RoundScheduler** decides who participates (``scheduler=``: ``sync``
+  reproduces the paper's sample-K-wait-for-all semantics bit-for-bit;
+  ``partial`` injects dropouts/stragglers with per-client step budgets;
+  ``async`` buffers staleness-discounted arrivals);
+* a **ClientRunner** executes local fine-tuning (``runner=``:
+  ``sequential`` is the legacy one-client-at-a-time loop; ``cohort``
+  trains each equal-rank cohort in one jitted vmapped train-step call);
+* a **Transport** puts every exchanged adapter tree on a measured wire
+  (``transport=`` codec: ``fp32`` exact / ``bf16`` / ``int8``), so each
+  :class:`RoundRecord` carries real serialized ``upload_bytes`` /
+  ``download_bytes`` next to the analytic parameter counts;
+* an **Aggregator** owns the method semantics (client re-init, frozen-A
+  composition, base merging, truncation, cost formulas) — pass
+  ``aggregator=`` for a custom strategy, otherwise one is built from
+  ``fed.method`` via the registry.
+
+The server side is **streaming**: each delivered client update is folded
+into the aggregator's running accumulators (``add_client``) and dropped
+before the next arrives, so peak server memory per round is one client's
 adapters plus the O(Σ r_k) per-leaf accumulators — never all K sampled
-adapter trees at once.  Method semantics (client re-init, frozen-A
-composition, base merging, per-client truncation, cost formulas) live on
-the aggregator classes, not here; pass ``aggregator=`` to plug in a custom
-strategy, otherwise one is built from ``fed.method`` via the registry.
+adapter trees at once.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -25,12 +39,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
-from repro.core import costs as C
 from repro.core.aggregators import (AggResult, Aggregator, accepted_config,
                                     make_aggregator)
+from repro.core.runtime import (ClientRunner, RoundScheduler, Transport,
+                                make_runner, make_scheduler, make_transport)
 from repro.data.synthetic import ClientDataset, make_eval_data, make_federated_data
 from repro.models import transformer as T
-from repro.optim.adamw import adamw_init
 from repro.peft.lora import init_lora, merge_lora
 from repro.train.step import make_eval_step, make_train_step
 
@@ -60,16 +74,30 @@ class RoundRecord:
     download_params: int
     download_rank: float
     global_rank_total: int
+    upload_bytes: int = 0        # measured serialized uplink (all clients)
+    download_bytes: int = 0      # measured serialized downlink (all clients)
+    wall_secs: float = 0.0       # wall-clock of the whole round
 
 
 class FederatedTrainer:
+    """Thin composition of runner + scheduler + aggregator + transport.
+
+    ``runner`` / ``scheduler`` / ``transport`` accept either a registered
+    name (``"sequential"``, ``"sync"``, codec ``"fp32"``, ...) or an
+    instance, so behaviours can be configured or injected.  The defaults
+    reproduce the pre-runtime ``run_round`` bit-for-bit.
+    """
+
     def __init__(self, cfg: ModelConfig, fed: FedConfig, lora: LoRAConfig,
                  optim: OptimConfig, clients: Optional[List[ClientDataset]] = None,
                  eval_data: Optional[Dict] = None, batch_size: int = 8,
                  local_steps: int = 4, seq_len: int = 64, svd_method: str = "svd",
                  targets: Optional[tuple] = None,
                  dp_clip: float = 0.0, dp_sigma: float = 0.0,
-                 aggregator: Optional[Aggregator] = None):
+                 aggregator: Optional[Aggregator] = None,
+                 runner: Any = "sequential",
+                 scheduler: Any = "sync",
+                 transport: Any = "fp32"):
         self.cfg, self.fed, self.lora, self.optim = cfg, fed, lora, optim
         self.batch_size, self.local_steps = batch_size, local_steps
         self.svd_method = svd_method
@@ -89,9 +117,14 @@ class FederatedTrainer:
             make_aggregator(fed.method, **accepted_config(fed.method, dict(
                 tau=fed.tau, svd_method=svd_method,
                 zero_padding=fed.zero_padding)))
-        # FFA-style strategies read the frozen shared init at finalize
-        if getattr(self.aggregator, "A_init", False) is None:
+        # strategies that declare needs_a_init (FFA-style) are handed the
+        # frozen shared init explicitly; everything else is left untouched
+        if getattr(self.aggregator, "needs_a_init", False) \
+                and getattr(self.aggregator, "A_init", None) is None:
             self.aggregator.A_init = self.A_init_full
+        self.runner: ClientRunner = make_runner(runner)
+        self.scheduler: RoundScheduler = make_scheduler(scheduler)
+        self.transport: Transport = make_transport(transport)
         self.global_state: Optional[AggResult] = None
         self.clients = clients if clients is not None else make_federated_data(
             num_clients=fed.num_clients, seq_len=seq_len,
@@ -103,7 +136,7 @@ class FederatedTrainer:
         self.history: List[RoundRecord] = []
 
     # -- helpers -------------------------------------------------------------
-    def _train_step(self, rank: int):
+    def _train_step(self):
         # rank only affects adapter shapes; jit re-specializes on those, so
         # all ranks share one cached wrapper per (cfg, optim, b_only)
         return _cached_train_step(self.cfg, self.optim, 64,
@@ -118,54 +151,52 @@ class FederatedTrainer:
 
     # -- main loop ------------------------------------------------------------
     def run_round(self, rnd: int) -> RoundRecord:
-        fed = self.fed
-        sampled = list(self.rng.choice(fed.num_clients, fed.clients_per_round,
-                                       replace=False))
-        n_total = sum(self.clients[k].num_samples for k in sampled)
-        ranks = [self.client_ranks[k] for k in sampled]
+        t0 = time.perf_counter()
+        plan = self.scheduler.plan(rnd, self)
+        ranks = [t.rank for t in plan.tasks]
         self.aggregator.begin_round()
-        for k in sampled:
-            rk = self.client_ranks[k]
-            adapters = self._client_init(k)
-            init_adapters = adapters
-            opt_state = adamw_init(adapters)
-            step = self._train_step(rk)
-            data = self.clients[k]
-            brng = np.random.default_rng(1000 * rnd + k)
-            steps_done = 0
-            while steps_done < self.local_steps:
-                for batch in data.batches(min(self.batch_size, data.num_samples), brng):
-                    jb = {kk: jnp.asarray(v) for kk, v in batch.items()}
-                    adapters, opt_state, _ = step(self.params, adapters, opt_state, jb)
-                    steps_done += 1
-                    if steps_done >= self.local_steps:
-                        break
-            if self.dp_clip:
-                from repro.core.privacy import clip_client_adapters
-                adapters = clip_client_adapters(adapters, init_adapters,
-                                                self.dp_clip)
-            # stream the update into the server accumulators; the trained
-            # adapters go out of scope here (no K-tree round buffer)
-            self.aggregator.add_client(
-                adapters, self.clients[k].num_samples / n_total, rank=rk)
+        upload_bytes = 0
 
+        def deliver(task, adapters):
+            # uplink through the measured wire, then stream into the server
+            # accumulators; the trained adapters go out of scope here (no
+            # K-tree round buffer)
+            nonlocal upload_bytes
+            adapters, nbytes = self.transport.client_to_server(
+                adapters, self.aggregator)
+            upload_bytes += nbytes
+            self.aggregator.add_client(adapters, task.weight, rank=task.rank)
+
+        self.runner.run(self, plan, deliver)
         agg = self.aggregator.finalize()
         if self.dp_sigma and agg.global_adapters is not None:
             from repro.core.privacy import add_gaussian_noise
             key = jax.random.PRNGKey(10_000 + rnd)
             agg.global_adapters = add_gaussian_noise(
                 agg.global_adapters, self.dp_sigma, self.dp_clip or 1.0,
-                fed.clients_per_round, key)
+                len(plan.tasks), key)
         dims = self.aggregator.dims
         up = self.aggregator.round_upload_params
-        down = self.aggregator.download_params(agg, dims,
-                                               fed.clients_per_round, ranks)
+        down = self.aggregator.download_params(agg, dims, len(plan.tasks),
+                                               ranks)
 
-        if agg.merge_into_base:      # FLoRA: fold stack into the base weights
+        # downlink through the measured wire: what the clients resume from
+        # next round is the decoded broadcast (identity under fp32)
+        bcast, download_bytes = self.transport.server_to_clients(
+            agg, self.aggregator, len(plan.tasks))
+        if agg.merge_into_base:
+            # FLoRA: every *client* folds the broadcast stack into its base,
+            # so the merge consumes the decoded wire tensors, codec included
+            if bcast is not None:
+                agg.global_adapters = bcast
             self.params = merge_lora(self.params, agg.global_adapters)
             eval_params = self.params
         else:
+            # broadcast methods: the server evals its exact aggregate;
+            # clients resume from the decoded broadcast
             eval_params = merge_lora(self.params, agg.global_adapters)
+            if bcast is not None:
+                agg.global_adapters = bcast
         self.global_state = agg
 
         m = self._eval(eval_params, None, self.eval_batch)
@@ -178,6 +209,9 @@ class FederatedTrainer:
             download_rank=agg.total_download_rank()
             * self.aggregator.download_rank_factor,
             global_rank_total=agg.total_download_rank(),
+            upload_bytes=upload_bytes,
+            download_bytes=download_bytes,
+            wall_secs=time.perf_counter() - t0,
         )
         self.history.append(rec)
         return rec
@@ -189,6 +223,8 @@ class FederatedTrainer:
             if verbose:
                 print(f"[{self.aggregator.name:9s}] round {rnd:3d} "
                       f"loss={rec.eval_loss:.4f} acc={rec.eval_acc:.3f} "
-                      f"down_rank={rec.download_rank:.0f}")
+                      f"down_rank={rec.download_rank:.0f} "
+                      f"up={rec.upload_bytes / 2**20:.2f}MB "
+                      f"down={rec.download_bytes / 2**20:.2f}MB "
+                      f"{rec.wall_secs:.2f}s")
         return self.history
-

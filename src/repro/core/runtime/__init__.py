@@ -1,0 +1,41 @@
+"""Federated round runtime: pluggable client runners, round schedulers and
+measured wire transport.
+
+The :class:`~repro.core.federated.FederatedTrainer` is a thin composition
+of four seams, each independently swappable:
+
+====================  ====================================================
+seam                  registry / built-ins
+====================  ====================================================
+``ClientRunner``      ``make_runner``: ``sequential`` (legacy loop,
+                      bit-for-bit) · ``cohort`` (equal-rank cohorts in one
+                      jitted vmapped train call)
+``RoundScheduler``    ``make_scheduler``: ``sync`` · ``partial``
+                      (dropouts/stragglers) · ``async`` (buffered,
+                      staleness-discounted)
+``Transport``         ``make_codec``: ``fp32`` · ``bf16`` · ``int8`` —
+                      measured bytes per round, cross-checkable against the
+                      analytic counts in :mod:`repro.core.costs`
+``Aggregator``        :mod:`repro.core.aggregators` (PR 1/2)
+====================  ====================================================
+"""
+from repro.core.runtime.runners import (ClientRunner, CohortRunner,
+                                        SequentialRunner, available_runners,
+                                        make_runner, register_runner)
+from repro.core.runtime.schedulers import (AsyncScheduler, ClientTask,
+                                           PartialScheduler, RoundPlan,
+                                           RoundScheduler, SyncScheduler,
+                                           available_schedulers,
+                                           make_scheduler, register_scheduler)
+from repro.core.runtime.transport import (AdapterPayload, Codec, Transport,
+                                          available_codecs, make_codec,
+                                          make_transport, register_codec)
+
+__all__ = [
+    "AdapterPayload", "AsyncScheduler", "ClientRunner", "ClientTask",
+    "Codec", "CohortRunner", "PartialScheduler", "RoundPlan",
+    "RoundScheduler", "SequentialRunner", "SyncScheduler", "Transport",
+    "available_codecs", "available_runners", "available_schedulers",
+    "make_codec", "make_runner", "make_scheduler", "make_transport",
+    "register_codec", "register_runner", "register_scheduler",
+]

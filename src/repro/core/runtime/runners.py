@@ -1,0 +1,217 @@
+"""Client runners: who executes a round's local fine-tuning, and how.
+
+A :class:`ClientRunner` consumes a :class:`~repro.core.runtime.schedulers.
+RoundPlan` and trains every task against the round context ``ctx`` (the
+:class:`~repro.core.federated.FederatedTrainer`: frozen ``params``,
+``clients``, ``batch_size``, ``dp_clip``, ``_client_init``), calling
+``deliver(task, trained_adapters)`` once per finished client so the server
+can stream each update into the aggregator and drop it.
+
+* ``sequential`` — one client at a time, exactly the legacy ``run_round``
+  loop (same batch rng ``default_rng(1000·rnd + k)``, same step order):
+  bit-for-bit reproducible.
+* ``cohort`` — the client-side analogue of the batched server pipeline:
+  tasks are grouped into equal-(rank, steps) cohorts, their init adapters
+  and pre-drawn batch schedules are stacked along a client axis, and each
+  cohort trains in ONE jitted ``vmap``-of-``scan`` train-step call.  Ragged
+  batch sizes are padded with zero-masked rows (mathematically inert under
+  the masked CE), so cohort training is numerically equivalent to the
+  sequential loop up to batched-matmul reassociation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import adamw_init
+from repro.train.step import make_train_step
+
+
+class ClientRunner:
+    """Local-training executor.  Subclasses implement :meth:`run`."""
+
+    name: str = "?"
+
+    def run(self, ctx, plan, deliver: Callable) -> None:
+        """Train every task in ``plan``; call ``deliver(task, adapters)``
+        once per completed client, in a deterministic order."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Type[ClientRunner]] = {}
+
+
+def register_runner(name: str):
+    def deco(cls: Type[ClientRunner]) -> Type[ClientRunner]:
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def make_runner(spec: Any, **cfg) -> ClientRunner:
+    if isinstance(spec, ClientRunner):
+        return spec
+    try:
+        return _REGISTRY[spec](**cfg)
+    except KeyError:
+        raise ValueError(f"unknown runner {spec!r} "
+                         f"(registered: {sorted(_REGISTRY)})") from None
+
+
+def available_runners() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+
+
+def _init_getter(ctx):
+    """Per-plan client-init resolver: a task resumes from its dispatch-time
+    snapshot (async) or the aggregator's client-init for the current global
+    state.  ``Aggregator.client_init(global_state, rank, a_init)`` depends
+    only on the client's *rank*, so equal-rank clients share one computed
+    tree instead of re-running the eager truncate/pad per client."""
+    cache: Dict[int, Dict] = {}
+
+    def get(task) -> Dict:
+        if task.init_adapters is not None:
+            return task.init_adapters
+        rank = ctx.client_ranks[task.client_id]
+        if rank not in cache:
+            cache[rank] = ctx._client_init(task.client_id)
+        return cache[rank]
+
+    return get
+
+
+def _batch_schedule(ctx, rnd: int, task) -> List[Dict[str, np.ndarray]]:
+    """The exact batch sequence the legacy loop would draw for this task
+    (same rng stream, same epoch re-permutation)."""
+    data = ctx.clients[task.client_id]
+    bs = min(ctx.batch_size, data.num_samples)
+    brng = np.random.default_rng(1000 * rnd + task.client_id)
+    batches: List[Dict[str, np.ndarray]] = []
+    while len(batches) < task.steps:
+        for batch in data.batches(bs, brng):
+            batches.append(batch)
+            if len(batches) >= task.steps:
+                break
+    return batches
+
+
+def _maybe_clip(ctx, adapters: Dict, init_adapters: Dict) -> Dict:
+    if ctx.dp_clip:
+        from repro.core.privacy import clip_client_adapters
+        return clip_client_adapters(adapters, init_adapters, ctx.dp_clip)
+    return adapters
+
+
+# ---------------------------------------------------------------------------
+# sequential (legacy-equivalent)
+# ---------------------------------------------------------------------------
+
+
+@register_runner("sequential")
+class SequentialRunner(ClientRunner):
+    """One jitted train-step call per (client, batch) — the legacy loop."""
+
+    def run(self, ctx, plan, deliver: Callable) -> None:
+        step = ctx._train_step()
+        task_init = _init_getter(ctx)
+        for task in plan.tasks:
+            adapters = task_init(task)
+            init_adapters = adapters
+            opt_state = adamw_init(adapters)
+            for batch in _batch_schedule(ctx, plan.round, task):
+                jb = {kk: jnp.asarray(v) for kk, v in batch.items()}
+                adapters, opt_state, _ = step(ctx.params, adapters,
+                                              opt_state, jb)
+            deliver(task, _maybe_clip(ctx, adapters, init_adapters))
+
+
+# ---------------------------------------------------------------------------
+# cohort (vmapped)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_cohort_train(cfg, optim, loss_chunk: int, b_only: bool):
+    """Jitted cohort trainer: vmap over the client axis of a scan over the
+    local step axis.  jax.jit re-specializes per (cohort, rank, batch)
+    shape, so every equal-shaped cohort reuses one compiled program."""
+    step = make_train_step(cfg, optim, remat=False, loss_chunk=loss_chunk,
+                           b_only=b_only)
+
+    def one_client(params, adapters, batches):
+        opt_state = adamw_init(adapters)
+
+        def body(carry, batch):
+            ad, opt = carry
+            ad, opt, _ = step(params, ad, opt, batch)
+            return (ad, opt), None
+
+        (adapters, _), _ = jax.lax.scan(body, (adapters, opt_state), batches)
+        return adapters
+
+    return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))
+
+
+@register_runner("cohort")
+class CohortRunner(ClientRunner):
+    """Equal-rank cohorts train in one compiled vmapped call each.
+
+    Host-side prep replays the sequential batch draws, zero-pads ragged
+    batch sizes up to ``ctx.batch_size`` (padded rows carry
+    ``loss_mask = 0`` and contribute nothing to loss, gradient, or metric
+    denominators), stacks adapters/batches along a new client axis, and
+    dispatches one device call per (rank, steps) cohort instead of
+    K·steps calls.  The client axis is padded to the next power of two
+    with inert replicas (zero mask ⇒ zero gradients), so schedulers with
+    varying arrival counts (``async``/``partial``) hit at most
+    O(log K) compiled shapes instead of one per count.
+    """
+
+    def run(self, ctx, plan, deliver: Callable) -> None:
+        task_init = _init_getter(ctx)
+        prepared = [(task, task_init(task),
+                     _batch_schedule(ctx, plan.round, task))
+                    for task in plan.tasks]
+        cohorts: Dict[Tuple[int, int], List[int]] = {}
+        for i, (task, _, _) in enumerate(prepared):
+            cohorts.setdefault((task.rank, task.steps), []).append(i)
+        train = _cached_cohort_train(ctx.cfg, ctx.optim, 64,
+                                     ctx.aggregator.trains_b_only)
+        results: List[Dict] = [None] * len(prepared)
+        for (_, steps), idxs in cohorts.items():
+            k_c = len(idxs)
+            pad_c = 1 << (k_c - 1).bit_length()      # next power of two
+            seq_len = prepared[idxs[0]][2][0]["tokens"].shape[1]
+            bs = ctx.batch_size              # fixed batch axis: stable shape
+            toks = np.zeros((pad_c, steps, bs, seq_len), np.int32)
+            mask = np.zeros((pad_c, steps, bs, seq_len), np.float32)
+            for ci, i in enumerate(idxs):
+                for si, b in enumerate(prepared[i][2]):
+                    toks[ci, si, : b["tokens"].shape[0]] = b["tokens"]
+                    mask[ci, si, : b["tokens"].shape[0]] = b["loss_mask"]
+            inits = [prepared[i][1] for i in idxs]
+            inits += [inits[0]] * (pad_c - k_c)      # inert pad replicas
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+            out = train(ctx.params, stacked,
+                        {"tokens": jnp.asarray(toks),
+                         "loss_mask": jnp.asarray(mask)})
+            # ONE device→host transfer for the whole cohort; per-client
+            # unstacking is then free numpy views (eager per-leaf device
+            # slicing would cost a dispatch per (client, leaf))
+            host_out = jax.device_get(out)
+            for ci, i in enumerate(idxs):
+                adapters = jax.tree.map(lambda x: x[ci], host_out)
+                results[i] = _maybe_clip(ctx, adapters, prepared[i][1])
+        for (task, _, _), adapters in zip(prepared, results):
+            deliver(task, adapters)

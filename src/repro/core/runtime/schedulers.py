@@ -1,0 +1,199 @@
+"""Round schedulers: who participates in a federated round, and how.
+
+A :class:`RoundScheduler` turns "round ``rnd`` is starting" into a
+:class:`RoundPlan` — the list of :class:`ClientTask`\\ s that will deliver an
+update this round, each with its local step budget, (normalized)
+aggregation weight and, for buffered/async semantics, the staleness and the
+adapter snapshot the client was dispatched with.  The scheduler only reads
+the trainer (the *round context*: ``rng``, ``fed``, ``clients``,
+``client_ranks``, ``local_steps``, ``_client_init``); training itself is
+the :class:`~repro.core.runtime.runners.ClientRunner`'s job.
+
+Registered schedulers:
+
+* ``sync`` — the paper's loop: sample K clients, wait for all of them,
+  weight by sample counts.  Reproduces the legacy ``run_round`` bit-for-bit.
+* ``partial`` — sample K, then drop a fraction (dropouts) and cut some
+  survivors' step budgets (stragglers); weights renormalize over survivors.
+  Deterministic given the federated seed.
+* ``async`` — FedBuff/AFLoRA-style buffered aggregation: a pool of
+  in-flight clients dispatched with a *snapshot* of the global state;
+  arrivals are aggregated with staleness-discounted weights
+  ``n_k · (1 + s)^(-α)`` feeding the streaming ``add_client``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientTask:
+    """One client's assignment for a round."""
+    client_id: int
+    rank: int
+    steps: int                      # local fine-tuning step budget
+    weight: float                   # normalized aggregation weight
+    staleness: int = 0              # rounds between dispatch and arrival
+    init_adapters: Optional[Dict] = None   # dispatch-time snapshot (async)
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    round: int
+    tasks: List[ClientTask]
+
+
+class RoundScheduler:
+    """Participation policy.  Subclasses implement :meth:`plan`."""
+
+    name: str = "?"
+
+    def plan(self, rnd: int, ctx) -> RoundPlan:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Type[RoundScheduler]] = {}
+
+
+def register_scheduler(name: str):
+    def deco(cls: Type[RoundScheduler]) -> Type[RoundScheduler]:
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def make_scheduler(spec: Any, **cfg) -> RoundScheduler:
+    if isinstance(spec, RoundScheduler):
+        return spec
+    try:
+        return _REGISTRY[spec](**cfg)
+    except KeyError:
+        raise ValueError(f"unknown scheduler {spec!r} "
+                         f"(registered: {sorted(_REGISTRY)})") from None
+
+
+def available_schedulers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+
+
+@register_scheduler("sync")
+class SyncScheduler(RoundScheduler):
+    """Sample K, wait for all K — the legacy semantics, bit-for-bit (same
+    rng call, same weight arithmetic)."""
+
+    def plan(self, rnd: int, ctx) -> RoundPlan:
+        fed = ctx.fed
+        sampled = list(ctx.rng.choice(fed.num_clients, fed.clients_per_round,
+                                      replace=False))
+        n_total = sum(ctx.clients[k].num_samples for k in sampled)
+        tasks = [ClientTask(int(k), ctx.client_ranks[k], ctx.local_steps,
+                            ctx.clients[k].num_samples / n_total)
+                 for k in sampled]
+        return RoundPlan(rnd, tasks)
+
+
+@register_scheduler("partial")
+class PartialScheduler(RoundScheduler):
+    """Dropouts + stragglers over the sync sample.
+
+    Each sampled client independently drops out with ``drop_rate``;
+    surviving clients become stragglers with ``straggler_rate`` and then
+    finish only a uniform fraction of the step budget (≥ ``min_steps``).
+    The per-round decisions come from a rng derived from ``(seed, rnd)``,
+    so a fixed federated seed gives an identical dropout pattern.
+    """
+
+    def __init__(self, drop_rate: float = 0.25, straggler_rate: float = 0.25,
+                 min_steps: int = 1):
+        self.drop_rate = drop_rate
+        self.straggler_rate = straggler_rate
+        self.min_steps = min_steps
+
+    def plan(self, rnd: int, ctx) -> RoundPlan:
+        fed = ctx.fed
+        sampled = list(ctx.rng.choice(fed.num_clients, fed.clients_per_round,
+                                      replace=False))
+        prng = np.random.default_rng([fed.seed, 104729, rnd])
+        survivors: List[Tuple[int, int]] = []
+        for k in sampled:
+            if prng.random() < self.drop_rate:
+                continue
+            steps = ctx.local_steps
+            if prng.random() < self.straggler_rate:
+                steps = max(self.min_steps,
+                            int(round(ctx.local_steps * prng.uniform(0.25, 1.0))))
+            survivors.append((int(k), steps))
+        if not survivors:            # never an empty round
+            survivors = [(int(sampled[0]), ctx.local_steps)]
+        n_total = sum(ctx.clients[k].num_samples for k, _ in survivors)
+        tasks = [ClientTask(k, ctx.client_ranks[k], steps,
+                            ctx.clients[k].num_samples / n_total)
+                 for k, steps in survivors]
+        return RoundPlan(rnd, tasks)
+
+
+@register_scheduler("async")
+class AsyncScheduler(RoundScheduler):
+    """Buffered asynchronous aggregation with staleness discounting.
+
+    A pool of ``buffer_size`` (default: ``clients_per_round``) clients is
+    kept in flight; each is dispatched with a snapshot of the global
+    adapters *at dispatch time* and a completion delay of 1..``max_delay``
+    rounds.  Arrivals whose delay has elapsed deliver this round, weighted
+    ``n_k · (1 + staleness)^(-staleness_power)`` and renormalized; the pool
+    is refilled at the start of every round with the then-current state.
+    If nothing is due (e.g. round 0), the soonest cohort arrives early so
+    every round aggregates at least one update.
+    """
+
+    def __init__(self, max_delay: int = 3, staleness_power: float = 0.5,
+                 buffer_size: int = 0):
+        self.max_delay = max(1, int(max_delay))
+        self.staleness_power = staleness_power
+        self.buffer_size = buffer_size
+        self._in_flight: List[Dict] = []
+
+    def _dispatch(self, rnd: int, ctx) -> None:
+        k = int(ctx.rng.integers(ctx.fed.num_clients))
+        delay = int(ctx.rng.integers(1, self.max_delay + 1))
+        self._in_flight.append({
+            "client_id": k,
+            "dispatched": rnd,
+            "completes": rnd + delay,
+            "init": ctx._client_init(k),
+        })
+
+    def plan(self, rnd: int, ctx) -> RoundPlan:
+        cap = self.buffer_size or ctx.fed.clients_per_round
+        while len(self._in_flight) < cap:
+            self._dispatch(rnd, ctx)
+        due = [f for f in self._in_flight if f["completes"] <= rnd]
+        if not due:
+            soonest = min(f["completes"] for f in self._in_flight)
+            due = [f for f in self._in_flight if f["completes"] == soonest]
+        # remove by identity: entries hold adapter trees, so equality
+        # comparison (list.remove) would raise on array truthiness
+        self._in_flight = [f for f in self._in_flight
+                           if not any(f is d for d in due)]
+        raw, tasks = [], []
+        for f in due:
+            stale = max(0, rnd - f["dispatched"])
+            n_k = ctx.clients[f["client_id"]].num_samples
+            raw.append(n_k * (1.0 + stale) ** (-self.staleness_power))
+            tasks.append(ClientTask(f["client_id"],
+                                    ctx.client_ranks[f["client_id"]],
+                                    ctx.local_steps, 0.0, staleness=stale,
+                                    init_adapters=f["init"]))
+        total = sum(raw)
+        for t, w in zip(tasks, raw):
+            t.weight = w / total
+        return RoundPlan(rnd, tasks)

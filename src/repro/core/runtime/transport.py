@@ -1,0 +1,287 @@
+"""Measured wire transport for federated adapter exchange.
+
+The analytic cost model in :mod:`repro.core.costs` counts *parameters*; this
+module puts actual **bytes** on a (simulated) wire so the two can be
+cross-checked per round.  Three pieces:
+
+* :class:`Codec` — pluggable array serialization (``fp32`` exact cast,
+  ``bf16`` half-precision cast, ``int8`` symmetric per-tensor quantization),
+  registered via :func:`register_codec` / built via :func:`make_codec`;
+* :class:`AdapterPayload` — one serialized adapter tree: per-leaf encoded
+  blocks plus the measured total byte size.  Packing honours the
+  aggregator's *wire set* (``wire_arrays``: FFA sends only ``B``) and, for
+  downlinks, the recorded per-layer ranks (rank-``p_l`` layers ship only
+  their first ``p_l`` columns — zero padding never travels);
+* :class:`Transport` — the round-trip used by the trainer: encode → count
+  bytes → decode.  With the default ``fp32`` codec the round-trip is
+  bit-exact, so the runtime reproduces the legacy loop; lossy codecs
+  degrade exactly what a real deployment would (the wire tensors): clients
+  resume from the decoded broadcast, and merge-into-base methods (FLoRA)
+  fold the decoded stack into the base, while pure-broadcast methods still
+  evaluate the server's exact aggregate.
+
+``scale`` never travels: it is an O(L) header re-derived locally, and the
+analytic model ignores it too, which keeps ``bytes == bytes_per_param ×
+params`` an exact identity for the cast codecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Type
+
+import jax
+import numpy as np
+
+from repro.core.aggregators.base import (adapter_leaf_paths,
+                                         default_wire_arrays, get_path,
+                                         set_path)
+
+try:  # ships with jax
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - jax always depends on ml_dtypes
+    _BF16 = None
+
+#: rank axis of each wire tensor (A: rows are rank, B: columns are rank)
+_RANK_AXIS = {"A": -2, "B": -1}
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EncodedArray:
+    """One serialized tensor: raw payload + the header needed to decode."""
+    data: bytes
+    shape: Tuple[int, ...]
+    meta: Tuple[float, ...] = ()
+
+    @property
+    def num_bytes(self) -> int:
+        # meta entries (e.g. a quantization scale) travel as fp32 headers
+        return len(self.data) + 4 * len(self.meta)
+
+
+class Codec:
+    """Array serializer.  ``decode(encode(x))`` returns fp32 numpy."""
+
+    name: str = "?"
+    bytes_per_param: float = 4.0
+
+    def encode(self, arr: Any) -> EncodedArray:
+        raise NotImplementedError
+
+    def decode(self, enc: EncodedArray) -> np.ndarray:
+        raise NotImplementedError
+
+
+_CODECS: Dict[str, Type[Codec]] = {}
+
+
+def register_codec(name: str):
+    def deco(cls: Type[Codec]) -> Type[Codec]:
+        _CODECS[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def make_codec(name: str) -> Codec:
+    try:
+        return _CODECS[name]()
+    except KeyError:
+        raise ValueError(f"unknown codec {name!r} "
+                         f"(registered: {sorted(_CODECS)})") from None
+
+
+def available_codecs() -> List[str]:
+    return sorted(_CODECS)
+
+
+@register_codec("fp32")
+class Fp32Codec(Codec):
+    """Exact for fp32 inputs — the round-trip is the identity."""
+    bytes_per_param = 4.0
+
+    def encode(self, arr) -> EncodedArray:
+        a = np.asarray(arr, np.float32)
+        return EncodedArray(a.tobytes(), a.shape)
+
+    def decode(self, enc: EncodedArray) -> np.ndarray:
+        return np.frombuffer(enc.data, np.float32).reshape(enc.shape)
+
+
+@register_codec("bf16")
+class Bf16Codec(Codec):
+    """Truncate-to-bfloat16 cast (the paper's 2-byte accounting)."""
+    bytes_per_param = 2.0
+
+    def encode(self, arr) -> EncodedArray:
+        if _BF16 is None:
+            raise RuntimeError("bf16 codec requires ml_dtypes")
+        a = np.asarray(arr, np.float32).astype(_BF16)
+        return EncodedArray(a.tobytes(), a.shape)
+
+    def decode(self, enc: EncodedArray) -> np.ndarray:
+        return np.frombuffer(enc.data, _BF16).reshape(enc.shape) \
+            .astype(np.float32)
+
+
+@register_codec("int8")
+class Int8Codec(Codec):
+    """Symmetric per-tensor int8 quantization with an fp32 scale header."""
+    bytes_per_param = 1.0
+
+    def encode(self, arr) -> EncodedArray:
+        a = np.asarray(arr, np.float32)
+        amax = float(np.max(np.abs(a))) if a.size else 0.0
+        scale = amax / 127.0 if amax > 0 else 1.0
+        q = np.clip(np.rint(a / scale), -127, 127).astype(np.int8)
+        return EncodedArray(q.tobytes(), a.shape, (scale,))
+
+    def decode(self, enc: EncodedArray) -> np.ndarray:
+        q = np.frombuffer(enc.data, np.int8).reshape(enc.shape)
+        return q.astype(np.float32) * np.float32(enc.meta[0])
+
+
+# ---------------------------------------------------------------------------
+# payloads
+# ---------------------------------------------------------------------------
+
+
+def _wire_fn(aggregator) -> Any:
+    return getattr(aggregator, "wire_arrays", None) or default_wire_arrays
+
+
+@dataclasses.dataclass
+class AdapterPayload:
+    """One adapter tree as it travels: per-leaf encoded blocks + size.
+
+    ``blocks`` maps leaf path → wire-array name → per-layer
+    :class:`EncodedArray` list (a single whole-array block when no ragged
+    per-layer ranks were given).
+    """
+
+    codec: str
+    blocks: Dict[Tuple, Dict[str, List[EncodedArray]]]
+    num_bytes: int
+
+    @classmethod
+    def pack(cls, tree: Dict, codec: Codec, wire_fn=default_wire_arrays,
+             ranks: Optional[Dict[Tuple, Sequence[int]]] = None
+             ) -> "AdapterPayload":
+        """Serialize ``tree``'s wire arrays.  With ``ranks`` (per-leaf,
+        per-layer, as recorded in an :class:`AggResult`), layer ``l`` of a
+        leaf ships only its first ``r_l`` rank rows/columns.
+
+        All wire arrays leave the device in ONE ``jax.device_get`` (ragged
+        per-layer slicing happens host-side on the fetched buffers), so
+        packing costs one sync per payload, not one per tensor."""
+        items: List[Tuple[Tuple, str, Any]] = []
+        for path in adapter_leaf_paths(tree):
+            leaf = get_path(tree, path)
+            for name, arr in wire_fn(leaf).items():
+                items.append((path, name, arr))
+        host = jax.device_get([arr for (_, _, arr) in items])
+        blocks: Dict[Tuple, Dict[str, List[EncodedArray]]] = {}
+        total = 0
+        for (path, name, _), arr in zip(items, host):
+            axis = _RANK_AXIS.get(name)
+            rs = ranks.get(path) if ranks else None
+            if rs is None or axis is None:
+                encs = [codec.encode(arr)]
+            else:
+                layers = arr if arr.ndim == 3 else arr[None]
+                encs = []
+                for l, r_l in enumerate(rs):
+                    lay = layers[l]
+                    cut = lay[:r_l, :] if axis == -2 else lay[:, :r_l]
+                    encs.append(codec.encode(cut))
+            blocks.setdefault(path, {})[name] = encs
+            total += sum(e.num_bytes for e in encs)
+        return cls(codec.name, blocks, total)
+
+    def unpack_into(self, tree: Dict, codec: Codec) -> Dict:
+        """Rebuild a tree shaped like ``tree`` with every wire array
+        replaced by its decoded bytes (non-wire entries, e.g. ``scale`` or a
+        frozen ``A``, pass through from ``tree`` — they were never sent).
+        Decoded leaves are host (numpy) arrays; downstream jnp ops move
+        them to device on first use."""
+        out: Dict = {}
+        for path in adapter_leaf_paths(tree):
+            leaf = dict(get_path(tree, path))
+            for name, encs in self.blocks[path].items():
+                ref = leaf[name]
+                if len(encs) == 1 and encs[0].shape == tuple(ref.shape):
+                    leaf[name] = codec.decode(encs[0])
+                else:  # ragged per-layer blocks: zero-fill past each r_l
+                    layers = np.zeros(ref.shape if ref.ndim == 3
+                                      else (1,) + tuple(ref.shape), np.float32)
+                    axis = _RANK_AXIS[name]
+                    for l, enc in enumerate(encs):
+                        dec = codec.decode(enc)
+                        if axis == -2:
+                            layers[l, :dec.shape[0], :] = dec
+                        else:
+                            layers[l, :, :dec.shape[1]] = dec
+                    if ref.ndim != 3:
+                        layers = layers[0]
+                    leaf[name] = layers
+            set_path(out, path, leaf)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the transport
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """Measured client↔server wire: every exchanged adapter tree is
+    serialized with the configured codec, its bytes are counted, and the
+    *decoded* tree is what the receiving side actually uses."""
+
+    def __init__(self, codec: Any = "fp32"):
+        self.codec = codec if isinstance(codec, Codec) else make_codec(codec)
+
+    def client_to_server(self, adapters: Dict, aggregator) -> Tuple[Dict, int]:
+        """Uplink one trained client tree.  Returns (decoded tree, bytes)."""
+        wire = _wire_fn(aggregator)
+        payload = AdapterPayload.pack(adapters, self.codec, wire)
+        return payload.unpack_into(adapters, self.codec), payload.num_bytes
+
+    def server_to_clients(self, agg, aggregator, num_receivers: int
+                          ) -> Tuple[Optional[Dict], int]:
+        """Downlink one round's result to ``num_receivers`` clients.
+
+        Broadcast methods ship the global tree (ragged per-layer ranks —
+        zero padding stays home) once per receiver; per-client methods
+        (FlexLoRA) ship each tailored tree once.  Returns the decoded
+        global tree (what clients resume from) and total downlink bytes.
+        """
+        wire = _wire_fn(aggregator)
+        if agg.per_client is not None:
+            nbytes = sum(
+                AdapterPayload.pack(t, self.codec, wire).num_bytes
+                for t in agg.per_client)
+            if agg.global_adapters is None:
+                return None, nbytes
+            payload = AdapterPayload.pack(agg.global_adapters, self.codec,
+                                          wire)
+            return payload.unpack_into(agg.global_adapters, self.codec), nbytes
+        if agg.global_adapters is None:
+            return None, 0
+        payload = AdapterPayload.pack(agg.global_adapters, self.codec, wire,
+                                      ranks=agg.ranks)
+        decoded = payload.unpack_into(agg.global_adapters, self.codec)
+        return decoded, payload.num_bytes * num_receivers
+
+
+def make_transport(spec: Any) -> Transport:
+    """Coerce a transport spec (instance | codec name | Codec) into a
+    :class:`Transport`."""
+    if isinstance(spec, Transport):
+        return spec
+    return Transport(spec or "fp32")

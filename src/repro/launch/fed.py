@@ -1,10 +1,13 @@
 """Federated launcher: the paper's experimental loop (§4.1) as a CLI.
 
   PYTHONPATH=src python -m repro.launch.fed --method florist --rounds 10 \
-      [--heter] [--tau 0.9] [--clients 100] [--sample 10]
+      [--heter] [--tau 0.9] [--clients 100] [--sample 10] \
+      [--runner cohort] [--scheduler async] [--codec bf16]
 
 ``--method`` accepts any registered aggregation strategy (including
-plugins registered via ``repro.core.aggregators.register_aggregator``).
+plugins registered via ``repro.core.aggregators.register_aggregator``);
+``--runner`` / ``--scheduler`` / ``--codec`` select the round runtime
+seams (see :mod:`repro.core.runtime`).
 """
 from __future__ import annotations
 
@@ -14,6 +17,8 @@ import json
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
+from repro.core.runtime import (available_codecs, available_runners,
+                                available_schedulers)
 
 
 def main(argv=None):
@@ -32,6 +37,11 @@ def main(argv=None):
     ap.add_argument("--heter", action="store_true")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--svd", default="svd", choices=["svd", "gram"])
+    ap.add_argument("--runner", default="sequential",
+                    choices=available_runners())
+    ap.add_argument("--scheduler", default="sync",
+                    choices=available_schedulers())
+    ap.add_argument("--codec", default="fp32", choices=available_codecs())
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--out", default="")
@@ -52,7 +62,9 @@ def main(argv=None):
                     zero_padding=args.heter and args.method in ("fedit", "ffa"))
     tr = FederatedTrainer(cfg, fed, LoRAConfig(rank=16, alpha=16.0),
                           OptimConfig(lr=3e-4),
-                          local_steps=args.local_steps, svd_method=args.svd)
+                          local_steps=args.local_steps, svd_method=args.svd,
+                          runner=args.runner, scheduler=args.scheduler,
+                          transport=args.codec)
     hist = tr.run(args.rounds, verbose=True)
     if args.out:
         with open(args.out, "w") as f:

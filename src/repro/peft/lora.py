@@ -126,9 +126,16 @@ def merge_lora(params: Any, adapters: Dict) -> Any:
 
 def match_rank(adapters: Dict, rank: int) -> Dict:
     """Algorithm 1 client-side rank matching: truncate (p > r_k) or zero-pad
-    (p < r_k) the global adapters to the client's local rank."""
+    (p < r_k) the global adapters to the client's local rank.
+
+    Host (numpy) leaves — e.g. a decoded wire payload — stay on the host:
+    ``np.pad``/slicing produce the identical values without dispatching
+    eager device ops, whose shapes change with the global rank every round
+    and would otherwise trigger a fresh XLA compile per round."""
+    import numpy as np
 
     def fix(path, leaf):
+        xp = np if isinstance(leaf, np.ndarray) else jnp
         last = getattr(path[-1], "key", None)
         if last == "A":                       # (..., p, in)
             p = leaf.shape[-2]
@@ -138,7 +145,7 @@ def match_rank(adapters: Dict, rank: int) -> Dict:
                 return leaf[..., :rank, :]
             pad = [(0, 0)] * leaf.ndim
             pad[-2] = (0, rank - p)
-            return jnp.pad(leaf, pad)
+            return xp.pad(leaf, pad)
         if last == "B":                       # (..., out, p)
             p = leaf.shape[-1]
             if p == rank:
@@ -147,7 +154,7 @@ def match_rank(adapters: Dict, rank: int) -> Dict:
                 return leaf[..., :rank]
             pad = [(0, 0)] * leaf.ndim
             pad[-1] = (0, rank - p)
-            return jnp.pad(leaf, pad)
+            return xp.pad(leaf, pad)
         if last == "scale":
             # local training resumes at the client's own alpha/r scaling of
             # the *downloaded* update; keep scale consistent with stored B·A

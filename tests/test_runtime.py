@@ -1,0 +1,335 @@
+"""Federated round runtime: legacy-loop equivalence, cohort parity,
+scheduler determinism, measured wire transport."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.aggregators import (AggResult, Aggregator, adapter_leaf_paths,
+                                    fold_scale, get_path, set_path)
+from repro.core.federated import FederatedTrainer
+from repro.core.runtime import make_codec
+from repro.core.runtime.transport import AdapterPayload
+from repro.optim.adamw import adamw_init
+
+CFG = ModelConfig(name="rt-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=256, dtype="float32")
+LORA = LoRAConfig(rank=8, alpha=8.0)
+OPT = OptimConfig(lr=3e-3)
+
+
+def make_trainer(method, heter=False, **kw):
+    fed = FedConfig(num_clients=12, clients_per_round=4, method=method,
+                    tau=0.9, homogeneous_rank=8, heterogeneous=heter,
+                    rank_distribution=((4, 4), (8, 4), (16, 4)),
+                    zero_padding=heter, seed=0)
+    kw.setdefault("local_steps", 2)
+    return FederatedTrainer(CFG, fed, LORA, OPT, batch_size=8, seq_len=32,
+                            **kw)
+
+
+# ---------------------------------------------------------------------------
+# the pre-redesign run_round, verbatim, as the equivalence oracle
+# ---------------------------------------------------------------------------
+
+
+def legacy_run_round(self, rnd):
+    """The pre-runtime ``FederatedTrainer.run_round`` body (hard-coded
+    synchronous loop, no wire), kept as the bit-for-bit oracle."""
+    from repro.core.federated import RoundRecord
+    from repro.peft.lora import merge_lora
+
+    fed = self.fed
+    sampled = list(self.rng.choice(fed.num_clients, fed.clients_per_round,
+                                   replace=False))
+    n_total = sum(self.clients[k].num_samples for k in sampled)
+    ranks = [self.client_ranks[k] for k in sampled]
+    self.aggregator.begin_round()
+    for k in sampled:
+        rk = self.client_ranks[k]
+        adapters = self._client_init(k)
+        init_adapters = adapters
+        opt_state = adamw_init(adapters)
+        step = self._train_step()
+        data = self.clients[k]
+        brng = np.random.default_rng(1000 * rnd + k)
+        steps_done = 0
+        while steps_done < self.local_steps:
+            for batch in data.batches(min(self.batch_size, data.num_samples),
+                                      brng):
+                jb = {kk: jnp.asarray(v) for kk, v in batch.items()}
+                adapters, opt_state, _ = step(self.params, adapters,
+                                              opt_state, jb)
+                steps_done += 1
+                if steps_done >= self.local_steps:
+                    break
+        if self.dp_clip:
+            from repro.core.privacy import clip_client_adapters
+            adapters = clip_client_adapters(adapters, init_adapters,
+                                            self.dp_clip)
+        self.aggregator.add_client(
+            adapters, self.clients[k].num_samples / n_total, rank=rk)
+
+    agg = self.aggregator.finalize()
+    if self.dp_sigma and agg.global_adapters is not None:
+        from repro.core.privacy import add_gaussian_noise
+        key = jax.random.PRNGKey(10_000 + rnd)
+        agg.global_adapters = add_gaussian_noise(
+            agg.global_adapters, self.dp_sigma, self.dp_clip or 1.0,
+            fed.clients_per_round, key)
+    dims = self.aggregator.dims
+    up = self.aggregator.round_upload_params
+    down = self.aggregator.download_params(agg, dims, fed.clients_per_round,
+                                           ranks)
+    if agg.merge_into_base:
+        self.params = merge_lora(self.params, agg.global_adapters)
+        eval_params = self.params
+    else:
+        eval_params = merge_lora(self.params, agg.global_adapters)
+    self.global_state = agg
+    m = self._eval(eval_params, None, self.eval_batch)
+    rec = RoundRecord(
+        round=rnd, eval_loss=float(m["loss"]), eval_acc=float(m["accuracy"]),
+        upload_params=up, download_params=down,
+        download_rank=agg.total_download_rank()
+        * self.aggregator.download_rank_factor,
+        global_rank_total=agg.total_download_rank())
+    self.history.append(rec)
+    return rec
+
+
+def tree_arrays(tree):
+    return {path: np.asarray(leaf)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def assert_trees_bitwise_equal(a, b):
+    fa, fb = tree_arrays(a), tree_arrays(b)
+    assert fa.keys() == fb.keys()
+    for path in fa:
+        np.testing.assert_array_equal(fa[path], fb[path], err_msg=str(path))
+
+
+METHODS = ["florist", "fedit", "ffa", "flora", "flexlora"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_sync_sequential_bit_exact_vs_legacy(method):
+    """The default runtime (sync scheduler + sequential runner + fp32 wire)
+    reproduces the pre-redesign loop bit-for-bit, homogeneous ranks."""
+    new, old = make_trainer(method), make_trainer(method)
+    for rnd in range(2):
+        rn = new.run_round(rnd)
+        ro = legacy_run_round(old, rnd)
+        assert rn.eval_loss == ro.eval_loss
+        assert rn.eval_acc == ro.eval_acc
+        assert rn.upload_params == ro.upload_params
+        assert rn.download_params == ro.download_params
+        assert rn.download_rank == ro.download_rank
+        assert rn.global_rank_total == ro.global_rank_total
+    assert_trees_bitwise_equal(new.global_state.global_adapters,
+                               old.global_state.global_adapters)
+
+
+@pytest.mark.parametrize("method", ["florist", "flexlora", "flora"])
+def test_sync_sequential_bit_exact_vs_legacy_heterogeneous(method):
+    new, old = make_trainer(method, heter=True), make_trainer(method,
+                                                              heter=True)
+    for rnd in range(2):
+        rn = new.run_round(rnd)
+        ro = legacy_run_round(old, rnd)
+        assert rn.eval_loss == ro.eval_loss
+        assert rn.download_params == ro.download_params
+    assert_trees_bitwise_equal(new.global_state.global_adapters,
+                               old.global_state.global_adapters)
+
+
+# ---------------------------------------------------------------------------
+# cohort runner parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("heter", [False, True])
+def test_cohort_matches_sequential(heter):
+    seq = make_trainer("florist", heter=heter, runner="sequential")
+    coh = make_trainer("florist", heter=heter, runner="cohort")
+    for rnd in range(2):
+        rs, rc = seq.run_round(rnd), coh.run_round(rnd)
+        assert rc.eval_loss == pytest.approx(rs.eval_loss, abs=1e-4)
+        assert rc.upload_params == rs.upload_params
+    fa = tree_arrays(seq.global_state.global_adapters)
+    fb = tree_arrays(coh.global_state.global_adapters)
+    assert fa.keys() == fb.keys()
+    for path in fa:
+        np.testing.assert_allclose(fa[path], fb[path], atol=5e-4,
+                                   err_msg=str(path))
+
+
+def test_cohort_runs_all_methods():
+    for method in METHODS:
+        hist = make_trainer(method, runner="cohort").run(1)
+        assert np.isfinite(hist[-1].eval_loss)
+
+
+# ---------------------------------------------------------------------------
+# schedulers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheduler", ["partial", "async"])
+def test_scheduler_deterministic_given_seed(scheduler):
+    h1 = make_trainer("florist", scheduler=scheduler).run(3)
+    h2 = make_trainer("florist", scheduler=scheduler).run(3)
+    for a, b in zip(h1, h2):
+        assert a.eval_loss == b.eval_loss
+        assert a.upload_params == b.upload_params
+        assert a.upload_bytes == b.upload_bytes
+
+
+def test_partial_scheduler_budgets():
+    """Dropouts shrink participation; stragglers shrink step budgets."""
+    tr = make_trainer("florist", scheduler="partial", local_steps=8)
+    plans = [tr.scheduler.plan(rnd, tr) for rnd in range(8)]
+    sizes = [len(p.tasks) for p in plans]
+    steps = [t.steps for p in plans for t in p.tasks]
+    assert all(1 <= s <= tr.fed.clients_per_round for s in sizes)
+    assert any(s < tr.fed.clients_per_round for s in sizes)  # dropouts hit
+    assert any(st < 8 for st in steps)                       # stragglers hit
+    assert all(st >= 1 for st in steps)
+    for p in plans:
+        assert sum(t.weight for t in p.tasks) == pytest.approx(1.0)
+
+
+def test_async_scheduler_staleness_and_snapshots():
+    tr = make_trainer("florist", scheduler="async")
+    plans = [tr.scheduler.plan(rnd, tr) for rnd in range(6)]
+    tasks = [t for p in plans for t in p.tasks]
+    assert all(t.init_adapters is not None for t in tasks)
+    assert any(t.staleness > 0 for t in tasks)
+    for p in plans:
+        assert p.tasks                                        # never empty
+        assert sum(t.weight for t in p.tasks) == pytest.approx(1.0)
+
+
+def test_async_end_to_end_trains():
+    hist = make_trainer("florist", scheduler="async").run(3)
+    assert all(np.isfinite(h.eval_loss) for h in hist)
+    assert all(h.upload_bytes > 0 for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# transport / codecs
+# ---------------------------------------------------------------------------
+
+
+def test_fp32_codec_roundtrip_exact():
+    c = make_codec("fp32")
+    assert c.bytes_per_param == 4
+    x = np.random.default_rng(0).normal(size=(3, 5)).astype(np.float32)
+    enc = c.encode(x)
+    assert enc.num_bytes == c.bytes_per_param * x.size
+    np.testing.assert_array_equal(c.decode(enc), x)
+
+
+def test_bf16_codec_halves_bytes():
+    c = make_codec("bf16")
+    assert c.bytes_per_param == 2
+    x = np.random.default_rng(0).normal(size=(4, 8)).astype(np.float32)
+    enc = c.encode(x)
+    assert enc.num_bytes == c.bytes_per_param * x.size
+    np.testing.assert_allclose(c.decode(enc), x, rtol=1e-2)
+
+
+def test_int8_codec_quantizes():
+    c = make_codec("int8")
+    x = np.random.default_rng(0).normal(size=(16, 16)).astype(np.float32)
+    enc = c.encode(x)
+    # payload at bytes_per_param + the fp32 scale header
+    assert enc.num_bytes == c.bytes_per_param * x.size + 4
+    np.testing.assert_allclose(c.decode(enc), x, atol=2 * np.abs(x).max() / 127)
+
+
+def test_payload_ragged_ranks_skip_padding():
+    """Per-layer ranks: only the first r_l columns travel, zero padding is
+    reconstructed for free on the receiving side."""
+    A = np.zeros((2, 4, 6), np.float32)
+    B = np.zeros((2, 5, 4), np.float32)
+    A[0, :2], A[1, :3] = 1.0, 2.0
+    B[0, :, :2], B[1, :, :3] = 3.0, 4.0
+    tree = {"leaf": {"A": A, "B": B, "scale": np.ones((2,), np.float32)}}
+    codec = make_codec("fp32")
+    payload = AdapterPayload.pack(tree, codec,
+                                  ranks={("leaf",): [2, 3]})
+    assert payload.num_bytes == 4 * (2 * 6 + 3 * 6 + 5 * 2 + 5 * 3)
+    out = payload.unpack_into(tree, codec)
+    np.testing.assert_array_equal(out["leaf"]["A"], A)
+    np.testing.assert_array_equal(out["leaf"]["B"], B)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_measured_bytes_match_analytic(method):
+    """fp32 wire bytes are exactly 4 × the analytic parameter counts —
+    the cross-check between costs.py and the measured transport."""
+    hist = make_trainer(method).run(2)
+    for rec in hist:
+        assert rec.upload_bytes == 4 * rec.upload_params
+        assert rec.download_bytes == 4 * rec.download_params
+        assert rec.wall_secs > 0
+
+
+def test_lossy_codec_still_trains():
+    hist = make_trainer("florist", transport="int8").run(2)
+    assert all(np.isfinite(h.eval_loss) for h in hist)
+    assert hist[-1].upload_bytes < 4 * hist[-1].upload_params
+
+
+# ---------------------------------------------------------------------------
+# aggregator A_init contract (regression for the getattr probe)
+# ---------------------------------------------------------------------------
+
+
+class MeanAggregator(Aggregator):
+    """Minimal custom strategy with no A_init attribute at all."""
+
+    name = "custom-mean"
+
+    def _accumulate(self, update, weight, rank):
+        for path in adapter_leaf_paths(update):
+            Bk, Ak = fold_scale(get_path(update, path))
+            acc = self._state.get(path)
+            if acc is None:
+                self._state[path] = {"A": weight * Ak, "B": weight * Bk}
+            else:
+                acc["A"] = acc["A"] + weight * Ak
+                acc["B"] = acc["B"] + weight * Bk
+
+    def _finalize(self):
+        out, rank_rec = {}, {}
+        for path, acc in self._state.items():
+            set_path(out, path, {"A": acc["A"], "B": acc["B"],
+                                 "scale": self._ref_scales[path]})
+            L = acc["A"].shape[0] if acc["A"].ndim == 3 else 1
+            rank_rec[path] = [acc["A"].shape[-2]] * L
+        return AggResult(self.name, out, None, rank_rec, {})
+
+
+def test_custom_aggregator_without_a_init_runs():
+    """A strategy that never heard of A_init must run untouched: the
+    trainer keys the injection on the explicit ``needs_a_init`` flag
+    instead of probing for an ``A_init`` attribute."""
+    agg = MeanAggregator()
+    tr = make_trainer("florist", aggregator=agg)
+    hist = tr.run(2)
+    assert all(np.isfinite(h.eval_loss) for h in hist)
+    assert not hasattr(agg, "A_init")
+
+
+def test_needs_a_init_flags():
+    from repro.core.aggregators.ffa import FfaAggregator
+    assert FfaAggregator.needs_a_init
+    assert not Aggregator.needs_a_init
+    # the trainer injects the shared init exactly for ffa
+    tr = make_trainer("ffa")
+    assert tr.aggregator.A_init is tr.A_init_full
