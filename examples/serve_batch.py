@@ -1,9 +1,14 @@
-"""Batched serving of a fine-tuned (base + global LoRA) model: prefill via
-full forward, then greedy batched decode against the KV cache — the
+"""Batched serving of a fine-tuned (base + global LoRA) model: chunked
+prefill through the cached sequence path, then greedy batched decode — the
 inference path the decode_32k / long_500k dry-run shapes exercise.
 
+The KV cache carries **per-slot** positions, so prefill feeds whole prompt
+chunks (``--prefill-chunk`` tokens per jitted call) instead of one token per
+step, and heterogeneous batch rows could ride different ring offsets.
+
   PYTHONPATH=src python examples/serve_batch.py [--arch qwen2-0.5b] \
-      [--batch 4] [--prompt-len 16] [--gen 24] [--window 0]
+      [--batch 4] [--prompt-len 16] [--gen 24] [--window 0] \
+      [--prefill-chunk 8] [--int8-cache]
 """
 import argparse
 import time
@@ -26,6 +31,8 @@ def main():
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window size (0 = full attention)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens fed per jitted prefill call")
     ap.add_argument("--int8-cache", action="store_true")
     args = ap.parse_args()
 
@@ -42,18 +49,23 @@ def main():
 
     serve = jax.jit(make_serve_step(cfg))
     kv_dtype = jnp.int8 if args.int8_cache else jnp.dtype(cfg.dtype)
+    C = max(1, min(args.prefill_chunk, args.prompt_len))
     cache = T.init_cache(cfg, B, capacity=args.prompt_len + args.gen,
-                         kv_dtype=kv_dtype)
-
+                         kv_dtype=kv_dtype, prefill_chunk=C)
     print(f"== serving {cfg.name}: batch={B}, prompt={args.prompt_len}, "
           f"gen={args.gen}, window={args.window or 'full'}, "
-          f"cache={kv_dtype} ==")
-    # prefill by stepping the decode path over the prompt (cache-filling)
+          f"cache={kv_dtype}, prefill_chunk={C} ==")
+    # chunked prefill: whole prompt chunks through the cached sequence path
     t0 = time.time()
-    tok = None
-    for t in range(args.prompt_len):
-        logits, cache = serve(params, adapters, cache, {"tokens": prompts[:, t:t+1]})
-    print(f"prefill: {args.prompt_len} steps in {time.time()-t0:.2f}s")
+    n_calls = 0
+    for t in range(0, args.prompt_len, C):
+        chunk = prompts[:, t: t + C]
+        n = jnp.full((B,), chunk.shape[1], jnp.int32)
+        logits, cache = serve(params, adapters, cache,
+                              {"tokens": chunk, "n_tokens": n})
+        n_calls += 1
+    print(f"prefill: {args.prompt_len} tokens in {n_calls} calls, "
+          f"{time.time()-t0:.2f}s")
 
     generated = []
     tok = jnp.argmax(logits, -1)[:, None]

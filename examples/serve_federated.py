@@ -1,0 +1,62 @@
+"""FLoRIST end to end: federate a tiny model, then SERVE the global adapter.
+
+This is the deployment flow the paper's output feeds: `launch/fed.py` (or
+`FederatedTrainer` directly) produces ONE pair of global low-rank adapters
+shared by all clients; `ServeEngine` mounts them next to the frozen base and
+serves a continuous batch of requests — per-slot KV positions, chunked
+prefill, jitted decode step.
+
+  PYTHONPATH=src python examples/serve_federated.py [--rounds 2] \
+      [--requests 6] [--batch-slots 2] [--temperature 0.0]
+"""
+import argparse
+
+import numpy as np
+
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.federated import FederatedTrainer
+from repro.serve.engine import SamplingParams, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch-slots", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="serve-fed-tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=256, dtype="float32")
+    fed = FedConfig(num_clients=8, clients_per_round=4, method="florist",
+                    tau=0.9, homogeneous_rank=8, seed=0)
+    trainer = FederatedTrainer(cfg, fed, LoRAConfig(rank=8, alpha=8.0),
+                               OptimConfig(lr=3e-3), batch_size=8,
+                               local_steps=2, seq_len=32)
+    print(f"== federating {cfg.name} for {args.rounds} rounds ==")
+    for rnd in range(args.rounds):
+        rec = trainer.run_round(rnd)
+        print(f"round {rnd}: eval_loss={rec.eval_loss:.4f} "
+              f"download_rank={rec.download_rank:.0f}")
+
+    # the aggregation result IS the deployable artifact: one global adapter
+    global_adapters = trainer.global_state.global_adapters
+    print("\n== serving base + global FLoRIST adapter ==")
+    eng = ServeEngine(cfg, trainer.params, global_adapters,
+                      batch_slots=args.batch_slots, capacity=64, seed=0)
+    rng = np.random.default_rng(0)
+    sp = SamplingParams(temperature=args.temperature, top_k=8,
+                        max_tokens=args.max_tokens)
+    uids = [eng.submit(rng.integers(1, cfg.vocab_size, rng.integers(3, 9)).tolist(), sp)
+            for _ in range(args.requests)]
+    out = eng.run()
+    for uid in uids:
+        print(f"  req {uid}: {out[uid]}")
+    print(f"served {len(out)} requests over {args.batch_slots} slots "
+          f"(jitted step traces: {eng.trace_counts})")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,40 @@ def _chunk_mask(qpos, kpos, causal: bool, window: int):
     return m
 
 
+def ring_slot_positions(pos, length, cap: int):
+    """Absolute token position held by each ring-buffer slot, per batch row.
+
+    pos/length: (B,) per-slot cache state AFTER the current write.  Returns
+    (p_abs, resident), both (B, cap): ``p_abs[b, s]`` is the absolute
+    position of the newest token ever written to slot ``s`` of row ``b``
+    (negative if never written) and ``resident[b, s]`` marks slots whose
+    token is still live (not yet evicted by the ring).
+    """
+    s = jnp.arange(cap)[None, :]
+    last = pos[:, None] - 1                       # newest absolute position
+    p_abs = last - jnp.mod(last - s, cap)         # (B, cap)
+    resident = p_abs >= (pos - length)[:, None]
+    return p_abs, resident
+
+
+def ring_attend_mask(pos, length, cap: int, qpos, window: int = 0):
+    """Decode attention mask over a per-slot ring-buffer cache.
+
+    pos/length: (B,) cache state AFTER the query chunk was written;
+    qpos: (B, C) absolute positions of the query tokens.  Returns a
+    (B, C, cap) bool mask: row ``b``'s query ``t`` attends cache slot ``s``
+    iff the slot is resident for THAT row, causally visible
+    (``p_abs <= qpos``), and inside the sliding window when one is set.
+    Masking is per-row, so batch slots at different positions (continuous
+    batching) never see each other's — or a previous occupant's — keys.
+    """
+    p_abs, resident = ring_slot_positions(pos, length, cap)
+    m = resident[:, None, :] & (p_abs[:, None, :] <= qpos[:, :, None])
+    if window:
+        m &= p_abs[:, None, :] > (qpos[:, :, None] - window)
+    return m
+
+
 def flash_jax(q, k, v, *, causal: bool = True, window: int = 0,
               scale: Optional[float] = None, q_chunk: int = 512,
               kv_chunk: int = 1024, unroll: Optional[bool] = None,

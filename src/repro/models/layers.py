@@ -174,29 +174,34 @@ def attention_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None,
     return lora_proj(o, p["wo"], a.get("wo"))
 
 
-def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None):
-    """Single-token decode with KV cache.
+def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
+                     n_tokens=None):
+    """Chunked cached decode with per-slot positions.
 
-    x: (B,1,d). cache: {"k": (B,T,K,hd), "v": (B,T,K,hd), "pos": ()} where T
-    is the cache capacity (= context length, or window size when sliding).
-    Returns (out, new_cache).
+    x: (B,C,d) — one token (C=1) or a prefill chunk.  cache:
+    {"k": (B,T,K,hd), "v": (B,T,K,hd), "pos": (B,), "length": (B,)} where T
+    is the cache capacity (= context length, or window size when sliding);
+    every batch slot rides its own ring offset.  ``n_tokens: (B,)``
+    optionally marks how many of the C tokens are real per row (masked
+    continuous batching; rows with 0 leave their cache untouched).
+    Returns (out (B,C,d), new_cache).
     """
+    from repro.models.attention_core import ring_attend_mask
     from repro.serve.kvcache import cache_update, cache_kv
-    B, S, _ = x.shape
-    assert S == 1
-    pos = cache["pos"]
-    q, k, v = _qkv(cfg, p, x, adapters, pos[None])
-    cache = cache_update(cfg, cache, k, v)
+    B, C, _ = x.shape
+    qpos = cache["pos"][:, None] + jnp.arange(C)[None, :]     # (B,C) absolute
+    q, k, v = _qkv(cfg, p, x, adapters, qpos)
+    cache = cache_update(cfg, cache, k, v, n_tokens)
     kc, vc = cache_kv(cfg, cache)
     T = kc.shape[1]
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    s = gqa_scores_einsum(q, kc) * scale            # (B,H,1,T)
-    # valid positions: slots < number written (ring buffer handles window)
-    valid = (jnp.arange(T) < cache["length"])[None, None, None, :]
-    s = jnp.where(valid, s, -1e30)
+    s = gqa_scores_einsum(q, kc) * scale            # (B,H,C,T)
+    mask = ring_attend_mask(cache["pos"], cache["length"], T, qpos,
+                            cfg.sliding_window)     # (B,C,T) per-row
+    s = jnp.where(mask[:, None], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     o = gqa_out_einsum(w, vc)
-    o = o.reshape(B, 1, cfg.num_heads * cfg.head_dim).astype(x.dtype)
+    o = o.reshape(B, C, cfg.num_heads * cfg.head_dim).astype(x.dtype)
     a = adapters or {}
     return lora_proj(o, p["wo"], a.get("wo")), cache
 
@@ -290,21 +295,24 @@ def mla_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None):
     return lora_proj(o, p["wo"], a.get("wo"))
 
 
-def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None):
-    """MLA decode — *absorbed* formulation: attention runs directly against
-    the compressed latent cache (the paper-faithful MLA memory saving); the
-    per-head K/V expansion ((B,T,H,·) — 17 GB/layer at 32k×128h) is never
-    materialized.  Scores: q_latᵀc_kv + q_ropeᵀk_rope; values: latent then
-    per-head V-projection after the softmax."""
+def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
+               n_tokens=None):
+    """MLA chunked decode — *absorbed* formulation: attention runs directly
+    against the compressed latent cache (the paper-faithful MLA memory
+    saving); the per-head K/V expansion ((B,T,H,·) — 17 GB/layer at
+    32k×128h) is never materialized.  Scores: q_latᵀc_kv + q_ropeᵀk_rope;
+    values: latent then per-head V-projection after the softmax.  x: (B,C,d)
+    with per-slot cache positions; ``n_tokens: (B,)`` masks padded rows as in
+    :func:`attention_decode`."""
+    from repro.models.attention_core import ring_attend_mask
     from repro.serve.kvcache import mla_cache_update
-    B, S, _ = x.shape
-    assert S == 1
+    B, C, _ = x.shape
     H = cfg.num_heads
     nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    pos = cache["pos"]
-    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(cfg, p, x, adapters, pos[None])
-    cache = mla_cache_update(cache, c_kv_t, k_rope_t)
+    qpos = cache["pos"][:, None] + jnp.arange(C)[None, :]     # (B,C)
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(cfg, p, x, adapters, qpos)
+    cache = mla_cache_update(cache, c_kv_t, k_rope_t, n_tokens)
     c_kv, k_rope = cache["c_kv"], cache["k_rope"]
     if c_kv.dtype == jnp.int8:
         from repro.serve.kvcache import dequant
@@ -327,12 +335,13 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None):
     s = (jnp.einsum("bshk,btk->bhst", q_lat, c_kv)
          + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), k_rope)) * scale
     T = s.shape[-1]
-    valid = (jnp.arange(T) < cache["length"])[None, None, None, :]
-    s = jnp.where(valid, s, -1e30)
+    mask = ring_attend_mask(cache["pos"], cache["length"], T, qpos,
+                            cfg.sliding_window)                # (B,C,T)
+    s = jnp.where(mask[:, None], s, -1e30)
     wts = jax.nn.softmax(s, axis=-1)
-    out_lat = jnp.einsum("bhst,btk->bshk", wts, c_kv)          # (B,1,H,kvr)
+    out_lat = jnp.einsum("bhst,btk->bshk", wts, c_kv)          # (B,C,H,kvr)
     o = jnp.einsum("bshk,khv->bshv", out_lat, w_v)
-    o = o.reshape(B, 1, H * vd).astype(x.dtype)
+    o = o.reshape(B, C, H * vd).astype(x.dtype)
     return lora_proj(o, p["wo"], a.get("wo")), cache
 
 

@@ -12,8 +12,9 @@ Public API:
     init(cfg, key)                        -> params
     forward(cfg, params, batch, ...)      -> (hidden, aux)   [train / prefill]
     logits(cfg, params, hidden)           -> (B, S, V)
-    init_cache(cfg, batch, capacity, ...) -> cache pytree
-    decode(cfg, params, cache, batch, ..) -> (logits, cache) [one token]
+    init_cache(cfg, batch, capacity, ...) -> cache pytree (per-slot pos)
+    decode(cfg, params, cache, batch, ..) -> (logits, cache) [token chunk]
+    reset_cache_slots(cache, mask)        -> cache with masked slots wiped
 """
 from __future__ import annotations
 
@@ -224,13 +225,18 @@ def _stack_zeros(tree, n: int):
 
 
 def init_cache(cfg: ModelConfig, batch: int, capacity: int,
-               kv_dtype=jnp.bfloat16) -> Tuple:
+               kv_dtype=jnp.bfloat16, prefill_chunk: int = 1) -> Tuple:
     """Cache pytree mirroring the segment plan.
 
     capacity: context length (or window size when cfg.sliding_window > 0).
+    prefill_chunk: widest token chunk a single decode() call will write —
+    sliding-window rings keep ``chunk - 1`` extra slots so a chunk's own
+    writes never evict tokens its earliest in-chunk query still attends
+    (the window mask in :func:`ring_attend_mask` trims the surplus).
     """
     if cfg.sliding_window:
-        capacity = min(capacity, cfg.sliding_window)
+        capacity = min(capacity,
+                       cfg.sliding_window + max(prefill_chunk, 1) - 1)
     caches = []
     for kind, count in layer_plan(cfg):
         if kind == "shared":
@@ -246,15 +252,30 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
     return tuple(caches)
 
 
-def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict):
-    """One layer, one token. Returns (x, new_cache)."""
+def _mask_state_rows(new_cache, old_cache, n_tokens):
+    """Keep the old recurrent state for rows with n_tokens == 0 (the
+    documented n_tokens contract: masked rows leave their cache untouched)."""
+    if n_tokens is None:
+        return new_cache
+    keep = n_tokens > 0
+    return jax.tree.map(
+        lambda nw, old: jnp.where(keep.reshape((-1,) + (1,) * (nw.ndim - 1)),
+                                  nw, old), new_cache, old_cache)
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict,
+                  n_tokens=None):
+    """One layer, one token chunk. Returns (x, new_cache)."""
     a = a or {}
     if kind == "mamba":
-        h, cache = Ssm.mamba2_decode(cfg, p["mixer"],
-                                     Lyr.rmsnorm(x, p["ln"], cfg.norm_eps),
-                                     cache, a.get("mixer"))
-        return x + h, cache
+        assert x.shape[1] == 1, "SSM decode is a single-token recurrence"
+        h, new = Ssm.mamba2_decode(cfg, p["mixer"],
+                                   Lyr.rmsnorm(x, p["ln"], cfg.norm_eps),
+                                   cache, a.get("mixer"))
+        return x + h, _mask_state_rows(new, cache, n_tokens)
     if kind == "rwkv":
+        assert x.shape[1] == 1, "RWKV decode is a single-token recurrence"
+        old = cache
         h, st = Rwkv.time_mix(cfg, p["mix"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps),
                               a.get("mix"), state=cache)
         x = x + h
@@ -262,10 +283,10 @@ def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict):
         h, st = Rwkv.channel_mix(cfg, p["mix"], Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps),
                                  a.get("mix"), state=cache)
         cache = {**cache, **st}
-        return x + h, cache
+        return x + h, _mask_state_rows(cache, old, n_tokens)
     dec_fn = Lyr.mla_decode if kind.startswith("mla") else Lyr.attention_decode
     h, cache = dec_fn(cfg, p["attn"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps),
-                      cache, a.get("attn"))
+                      cache, a.get("attn"), n_tokens=n_tokens)
     x = x + h
     xn = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
     if kind in ("moe", "mla_moe"):
@@ -276,9 +297,15 @@ def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict):
 
 
 def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
-           adapters: Optional[Dict] = None) -> Tuple[jnp.ndarray, Tuple]:
-    """One decode step. batch: {"tokens": (B,1)} (or frame/patch embeds).
-    Returns (logits (B,1,V), new_cache)."""
+           adapters: Optional[Dict] = None,
+           n_tokens: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Tuple]:
+    """One decode step over a token chunk. batch: {"tokens": (B,C)} (or
+    frame/patch embeds); C=1 is classic single-token decode, C>1 feeds a
+    whole prefill chunk through the cached path in one call.  Caches carry
+    per-slot ``pos``/``length`` so every batch row rides its own ring
+    offset.  ``n_tokens: (B,)`` optionally gives the real token count per
+    row (None = all C; rows with 0 leave their cache untouched — inactive
+    continuous-batching slots).  Returns (logits (B,C,V), new_cache)."""
     x = embed_inputs(cfg, params, batch)
     a_blocks = (adapters or {}).get("blocks", ())
     new_caches = []
@@ -287,7 +314,8 @@ def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
     for ci, (kind, count) in enumerate(plan):
         if kind == "shared":
             sa = (adapters or {}).get("shared_blk", {})
-            x, c = _block_decode(cfg, "shared", params["shared_blk"], x, cache[ci], sa)
+            x, c = _block_decode(cfg, "shared", params["shared_blk"], x, cache[ci],
+                                 sa, n_tokens)
             new_caches.append(c)
             continue
         seg_a = a_blocks[seg_i] if seg_i < len(a_blocks) and a_blocks[seg_i] else {}
@@ -295,7 +323,7 @@ def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
         def body(carry, xs, kind=kind):
             xc = carry
             p_l, a_l, c_l = xs
-            xc, c_l = _block_decode(cfg, kind, p_l, xc, c_l, a_l)
+            xc, c_l = _block_decode(cfg, kind, p_l, xc, c_l, a_l, n_tokens)
             return xc, c_l
 
         from repro.common import flags
@@ -305,3 +333,10 @@ def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
         seg_i += 1
     x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return logits(cfg, params, x), tuple(new_caches)
+
+
+def reset_cache_slots(cache: Tuple, mask) -> Tuple:
+    """Zero the per-slot state of every cache row where ``mask: (B,)`` is
+    True — ring positions, KV rows, and SSM/RWKV recurrent states alike —
+    so a freed continuous-batching slot hands its successor a fresh cache."""
+    return Kv.reset_slots(cache, mask)

@@ -1,17 +1,34 @@
-"""Batched serving engine: slot-based continuous batching over the decode
-step, with sampling strategies (greedy / temperature / top-k / top-p) and
-per-sequence stop conditions.
+"""Jit-compiled continuous-batching serving engine.
 
-The engine owns a fixed batch of B slots against one KV cache.  Requests
-are admitted into free slots; every engine step decodes one token for every
-active slot (inactive slots decode into a scratch position and are masked).
-This is the single-host serving loop the decode_32k dry-run shape lowers —
-here runnable end-to-end on CPU with the smoke configs.
+The engine owns a fixed batch of B slots against one KV cache with
+**per-slot** ring positions (:mod:`repro.serve.kvcache`).  Requests are
+admitted into free slots (the slot's cache rows are wiped on admission);
+every engine step is ONE jitted on-device call that
+
+  * feeds each active slot either a whole prompt chunk (chunked prefill,
+    ``prefill_chunk`` tokens through the cached sequence path) or its last
+    sampled token,
+  * masks inactive slots (``n_tokens = 0`` — their cache rows never move),
+  * samples the next token for every row that finished its prompt with
+    branch-free masked math (greedy / temperature / top-k / top-p as
+    ``where``-combined thresholds, no ``lax.cond``),
+  * draws randomness from per-request PRNG streams keyed by
+    ``fold_in(seed, uid)`` — outputs are invariant to slot placement and
+    admission interleaving,
+  * applies stop/max-token completion (the stop token is **excluded** from
+    the emitted text) and scatters emitted tokens into an on-device output
+    buffer.
+
+The host loop only admits requests, picks the step shape (chunked while any
+slot is prefilling, otherwise a ``lax.scan`` burst of width-1 steps — a
+fixed set of compiled executables, no per-step retraces), and polls
+completion flags once per burst.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from functools import partial
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +36,7 @@ import numpy as np
 
 from repro.common.config import ModelConfig
 from repro.models import transformer as T
-from repro.train.step import make_serve_step
+from repro.serve import kvcache as Kv
 
 
 @dataclasses.dataclass
@@ -40,103 +57,362 @@ class Request:
     done: bool = False
 
 
+def sample_token(logits: jnp.ndarray, key: jax.Array, temperature,
+                 top_k, top_p) -> jnp.ndarray:
+    """logits: (V,) -> token id.  Branch-free masked sampling: greedy,
+    temperature, top-k and top-p all compile as one program (``temperature``
+    etc. may be traced per-slot values) — vmap-able across batch rows."""
+    V = logits.shape[0]
+    lf = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lf)
+    lt = lf / jnp.maximum(temperature, 1e-6)
+    sorted_lt = jnp.sort(lt)[::-1]
+    # top-k: keep logits >= k-th largest (inactive when top_k == 0)
+    kth = sorted_lt[jnp.clip(top_k - 1, 0, V - 1)]
+    kth = jnp.where(top_k > 0, kth, -jnp.inf)
+    # top-p on the top-k-FILTERED, renormalized distribution (filtering a
+    # sorted array by a value threshold keeps it sorted): smallest prefix
+    # with mass >= top_p
+    sorted_f = jnp.where(sorted_lt < kth, -jnp.inf, sorted_lt)
+    probs = jax.nn.softmax(sorted_f)
+    cut = jnp.searchsorted(jnp.cumsum(probs), top_p, side="left")
+    pth = sorted_f[jnp.minimum(cut, V - 1)]
+    pth = jnp.where(top_p < 1.0, pth, -jnp.inf)
+    masked = jnp.where(lt < jnp.maximum(kth, pth), -jnp.inf, lt)
+    sampled = jax.random.categorical(key, masked)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled).astype(jnp.int32)
+
+
 def sample_logits(logits: jnp.ndarray, params: SamplingParams,
                   key: jax.Array) -> jnp.ndarray:
-    """logits: (V,) -> token id. Pure-JAX single-sequence sampler."""
-    if params.temperature <= 0.0:
-        return jnp.argmax(logits)
-    logits = logits / params.temperature
-    if params.top_k:
-        kth = jax.lax.top_k(logits, params.top_k)[0][-1]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    if params.top_p < 1.0:
-        sorted_logits = jnp.sort(logits)[::-1]
-        probs = jax.nn.softmax(sorted_logits)
-        cum = jnp.cumsum(probs)
-        # smallest set with cumulative prob >= top_p
-        cutoff_idx = jnp.searchsorted(cum, params.top_p, side="left")
-        cutoff = sorted_logits[jnp.minimum(cutoff_idx, logits.shape[0] - 1)]
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits)
+    """Back-compat wrapper: sample one token with host-side SamplingParams."""
+    return sample_token(logits, key, params.temperature, params.top_k,
+                        params.top_p)
+
+
+def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
+                       trace_counter: Optional[Dict[Any, int]] = None):
+    """Pure engine step of fixed token ``width``: (params, adapters, cache,
+    state) -> (cache, state, finished (B,) bool).  Jit this once per
+    (width, stochastic).  ``stochastic=False`` compiles the greedy-only
+    variant — plain argmax, no sort/softmax/categorical or key splitting —
+    used whenever no outstanding request samples.  (Greedy rows' outputs
+    never depend on their keys, and a sampled request keeps the engine in
+    the stochastic variant for its whole lifetime, so mode switches cannot
+    perturb sampled streams.)"""
+    C = width
+
+    def step(params, adapters, cache, state):
+        if trace_counter is not None:       # python side effect: counts traces
+            key = (C, "sampled" if stochastic else "greedy")
+            trace_counter[key] = trace_counter.get(key, 0) + 1
+        active = state["active"]
+        t = jnp.arange(C)[None, :]
+        consumed, plen = state["consumed"], state["prompt_len"]
+        remaining = jnp.maximum(plen - consumed, 0)
+        prefilling = active & (remaining > 0)
+        n_pre = jnp.minimum(remaining, C)
+        pcap = state["prompt_buf"].shape[1]
+        gidx = jnp.clip(consumed[:, None] + t, 0, pcap - 1)
+        pre_toks = jnp.take_along_axis(state["prompt_buf"], gidx, axis=1)
+        dec_toks = jnp.pad(state["last_token"][:, None], ((0, 0), (0, C - 1)))
+        toks = jnp.where(prefilling[:, None], pre_toks, dec_toks)
+        n_tok = jnp.where(prefilling, n_pre,
+                          jnp.where(active, 1, 0)).astype(jnp.int32)
+
+        lg, cache = T.decode(cfg, params, cache, {"tokens": toks}, adapters,
+                             n_tokens=n_tok)
+        last = jnp.clip(n_tok - 1, 0, C - 1)
+        logits = jnp.take_along_axis(lg, last[:, None, None], axis=1)[:, 0]
+
+        consumed = consumed + jnp.where(prefilling, n_pre, 0)
+        # a row samples once its whole prompt is in the cache (covers plain
+        # decode rows and the step that consumed the final prompt chunk)
+        do_sample = active & (consumed >= plen)
+
+        if stochastic:
+            split = jax.vmap(partial(jax.random.split, num=2))(state["keys"])
+            keys = jnp.where(do_sample[:, None], split[:, 0], state["keys"])
+            tok = jax.vmap(sample_token)(logits, split[:, 1],
+                                         state["temperature"],
+                                         state["top_k"], state["top_p"])
+        else:
+            keys = state["keys"]
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        hit_stop = tok == state["stop_token"]
+        emit = do_sample & ~hit_stop            # stop token is never emitted
+        gc = state["gen_count"]
+        ocap = state["out_buf"].shape[1]
+        sel = ((jnp.arange(ocap)[None, :] == jnp.clip(gc, 0, ocap - 1)[:, None])
+               & emit[:, None])
+        out_buf = jnp.where(sel, tok[:, None], state["out_buf"])
+        gc = gc + emit.astype(jnp.int32)
+        finished = do_sample & (hit_stop | (gc >= state["max_tokens"]))
+
+        new_state = dict(state,
+                         active=active & ~finished,
+                         last_token=jnp.where(emit, tok, state["last_token"]),
+                         consumed=consumed,
+                         gen_count=gc,
+                         out_buf=out_buf,
+                         keys=keys)
+        return cache, new_state, finished
+
+    return step
+
+
+def _build_engine_burst(cfg: ModelConfig, steps: int, stochastic: bool = True,
+                        trace_counter: Optional[Dict[Any, int]] = None):
+    """``steps`` width-1 engine steps as ONE jitted ``lax.scan`` — the
+    decode hot loop with a single dispatch per burst.  Finished/inactive
+    rows no-op inside the scan (n_tokens = 0), so a fixed burst length is
+    safe even when a slot completes mid-burst."""
+    step = _build_engine_step(cfg, 1, stochastic)
+
+    def burst(params, adapters, cache, state):
+        if trace_counter is not None:
+            key = (f"burst{steps}", "sampled" if stochastic else "greedy")
+            trace_counter[key] = trace_counter.get(key, 0) + 1
+
+        def body(carry, _):
+            cache, state = carry
+            cache, state, _ = step(params, adapters, cache, state)
+            return (cache, state), None
+
+        (cache, state), _ = jax.lax.scan(body, (cache, state), None,
+                                         length=steps)
+        return cache, state
+
+    return burst
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, adapters: Any = None,
                  batch_slots: int = 4, capacity: int = 256,
-                 kv_dtype=None, seed: int = 0):
+                 kv_dtype=None, seed: int = 0, prefill_chunk: int = 8,
+                 max_tokens_cap: int = 1024):
         self.cfg = cfg
         self.params = params
         self.adapters = adapters
         self.B = batch_slots
         self.capacity = capacity
-        self.key = jax.random.PRNGKey(seed)
         kv_dtype = kv_dtype or jnp.dtype(cfg.dtype)
-        self.cache = T.init_cache(cfg, batch_slots, capacity, kv_dtype)
-        self._step = jax.jit(make_serve_step(cfg))
+        # SSM/RWKV recurrences step one token at a time; attention families
+        # take whole chunks through the cached sequence path
+        ring_cap = min(capacity, cfg.sliding_window or capacity)
+        self.chunk = (1 if cfg.family in ("ssm", "hybrid")
+                      else max(1, min(prefill_chunk, ring_cap)))
+        self.cache = T.init_cache(cfg, batch_slots, capacity, kv_dtype,
+                                  prefill_chunk=self.chunk)
+        self._base_key = jax.random.PRNGKey(seed)
+        B = batch_slots
+        self._state: Dict[str, jnp.ndarray] = {
+            "active": jnp.zeros((B,), bool),
+            "last_token": jnp.zeros((B,), jnp.int32),
+            "consumed": jnp.zeros((B,), jnp.int32),
+            "prompt_len": jnp.zeros((B,), jnp.int32),
+            "prompt_buf": jnp.zeros((B, max(capacity, 1)), jnp.int32),
+            "gen_count": jnp.zeros((B,), jnp.int32),
+            "out_buf": jnp.zeros((B, max(max_tokens_cap, 1)), jnp.int32),
+            "temperature": jnp.zeros((B,), jnp.float32),
+            "top_k": jnp.zeros((B,), jnp.int32),
+            "top_p": jnp.ones((B,), jnp.float32),
+            "max_tokens": jnp.zeros((B,), jnp.int32),
+            "stop_token": jnp.full((B,), -1, jnp.int32),
+            "keys": jnp.zeros((B, 2), jnp.uint32),
+        }
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self._pending: List[Request] = []
         self._uid = 0
-        self._last_tokens = np.zeros((batch_slots, 1), np.int32)
-        self._prefill_left: Dict[int, List[int]] = {}
+        self._host_left: Dict[int, int] = {}       # slot -> prompt tokens left
+        self._step_fns: Dict[int, Any] = {}
+        # (width, mode) / ("burstN", mode) -> #traces (bench + retrace tests)
+        self.trace_counts: Dict[Any, int] = {}
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: List[int],
                params: Optional[SamplingParams] = None) -> int:
+        params = params or SamplingParams()
+        if len(prompt) > int(self._state["prompt_buf"].shape[1]):
+            raise ValueError(f"prompt of {len(prompt)} tokens exceeds the "
+                             f"engine prompt capacity {self.capacity}")
+        if params.max_tokens < 1:
+            raise ValueError(f"max_tokens={params.max_tokens} must be >= 1")
+        if params.max_tokens > int(self._state["out_buf"].shape[1]):
+            raise ValueError(f"max_tokens={params.max_tokens} exceeds "
+                             f"max_tokens_cap={self._state['out_buf'].shape[1]}")
         self._uid += 1
-        self._pending.append(Request(self._uid, list(prompt),
-                                     params or SamplingParams()))
+        self._pending.append(Request(self._uid, list(prompt), params))
         return self._uid
 
-    def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
-        """Run until all submitted requests complete. Returns uid->tokens."""
+    def run(self, max_steps: int = 1000,
+            poll_every: int = 8) -> Dict[int, List[int]]:
+        """Run until all submitted requests complete (or ``max_steps``
+        engine steps elapse).  Returns uid -> generated tokens.  Requests
+        still occupying a slot when the step budget runs out are reported
+        with their partial output, marked done, and freed — a subsequent
+        ``run()`` never re-decodes or double-reports them.
+
+        ``poll_every`` bounds how many decode steps run back-to-back before
+        the host syncs completion flags: pure-decode phases run whole
+        ``poll_every``-step bursts as one dispatch (the device queue
+        pipelines them) and poll only at burst boundaries, so a slot that
+        finishes mid-burst — ``max_tokens`` exhaustion or an early
+        stop-token exit — idles on-device for up to ``poll_every - 1``
+        steps before the host collects it and re-admits from the queue
+        (throughput over single-request latency)."""
         results: Dict[int, List[int]] = {}
-        for _ in range(max_steps):
+        steps = 0
+        while steps < max_steps:
             self._admit()
             if all(s is None for s in self.slots) and not self._pending:
                 break
-            self._engine_step(results)
-        # drain stragglers
-        for s in self.slots:
-            if s is not None:
-                results[s.uid] = s.generated
+            prefilling = self._prefilling()
+            if not prefilling and poll_every > 1 \
+                    and max_steps - steps >= poll_every:
+                # pure-decode phase: scan poll_every steps in ONE dispatch
+                fn = self._get_burst(poll_every, self._stochastic())
+                self.cache, self._state = fn(self.params, self.adapters,
+                                             self.cache, self._state)
+                steps += poll_every
+                self._poll(results)
+            else:
+                width = self.chunk if prefilling else 1
+                could_sample = any(
+                    self.slots[i] is not None
+                    and self._host_left.get(i, 0) <= width
+                    for i in range(self.B))
+                self._engine_step(width)
+                steps += 1
+                # skip the blocking flag sync on prefill steps where no row
+                # consumed its final prompt chunk (nothing can finish)
+                if could_sample:
+                    self._poll(results)
+        self._drain(results)
         return results
 
     # -- internals -------------------------------------------------------------
     def _admit(self):
+        admitted = []
         for i in range(self.B):
             if self.slots[i] is None and self._pending:
                 req = self._pending.pop(0)
                 self.slots[i] = req
-                # prompt tokens are fed through the decode path (cache fill)
-                self._prefill_left[i] = list(req.prompt)
-                if not req.prompt:
-                    # empty prompt: seed generation from token 0 rather than
-                    # whatever token the slot's previous occupant left behind
-                    self._last_tokens[i, 0] = 0
+                self._host_left[i] = len(req.prompt)
+                admitted.append((i, req))
+        if not admitted:
+            return
+        # one cache wipe + one update per state field for the whole cohort:
+        # per-slot pos/length restart at 0, recurrent states are zeroed, so
+        # no new occupant ever sees its predecessor's keys
+        mask = np.zeros(self.B, bool)
+        idx = np.asarray([i for i, _ in admitted])
+        mask[idx] = True
+        self.cache = Kv.reset_slots(self.cache, jnp.asarray(mask))
+        st = self._state
+        rows = np.zeros((len(admitted), st["prompt_buf"].shape[1]), np.int32)
+        for r, (_, req) in enumerate(admitted):
+            rows[r, :len(req.prompt)] = req.prompt
+        reqs = [req for _, req in admitted]
+        ix = jnp.asarray(idx)
 
-    def _engine_step(self, results: Dict[int, List[int]]):
-        toks = self._last_tokens.copy()
-        feeding = [False] * self.B
-        for i, req in enumerate(self.slots):
-            if req is None:
-                toks[i, 0] = 0
-            elif self._prefill_left.get(i):
-                toks[i, 0] = self._prefill_left[i].pop(0)
-                feeding[i] = True
-        logits, self.cache = self._step(self.params, self.adapters,
-                                        self.cache, {"tokens": jnp.asarray(toks)})
-        self.key, *keys = jax.random.split(self.key, self.B + 1)
-        for i, req in enumerate(self.slots):
+        def put(name, vals, dtype):
+            return st[name].at[ix].set(jnp.asarray(vals, dtype))
+
+        self._state = dict(
+            st,
+            active=put("active", [True] * len(reqs), bool),
+            # empty prompt: generation seeds from token 0, never from a
+            # stale token the slot's previous occupant left behind
+            last_token=put("last_token", [0] * len(reqs), jnp.int32),
+            consumed=put("consumed", [0] * len(reqs), jnp.int32),
+            prompt_len=put("prompt_len", [len(r.prompt) for r in reqs], jnp.int32),
+            prompt_buf=st["prompt_buf"].at[ix].set(jnp.asarray(rows)),
+            gen_count=put("gen_count", [0] * len(reqs), jnp.int32),
+            out_buf=st["out_buf"].at[ix].set(0),
+            temperature=put("temperature", [r.params.temperature for r in reqs],
+                            jnp.float32),
+            top_k=put("top_k", [r.params.top_k for r in reqs], jnp.int32),
+            top_p=put("top_p", [r.params.top_p for r in reqs], jnp.float32),
+            max_tokens=put("max_tokens", [r.params.max_tokens for r in reqs],
+                           jnp.int32),
+            stop_token=put("stop_token", [r.params.stop_token for r in reqs],
+                           jnp.int32),
+            # per-request PRNG streams: a function of (seed, uid) only, so
+            # sampling is invariant to slot placement
+            keys=st["keys"].at[ix].set(
+                jax.vmap(lambda u: jax.random.fold_in(self._base_key, u))(
+                    jnp.asarray([r.uid for r in reqs]))),
+        )
+
+    def _stochastic(self) -> bool:
+        """Whether any outstanding request samples (temperature > 0): if
+        none does, the greedy-only step variant runs — no sort / categorical
+        / key splitting in the hot loop."""
+        outstanding = self._pending + [s for s in self.slots if s is not None]
+        return any(r.params.temperature > 0.0 for r in outstanding)
+
+    def _get_step(self, width: int, stochastic: bool):
+        key = (width, stochastic)
+        if key not in self._step_fns:
+            self._step_fns[key] = jax.jit(_build_engine_step(
+                self.cfg, width, stochastic, self.trace_counts))
+        return self._step_fns[key]
+
+    def _get_burst(self, steps: int, stochastic: bool):
+        key = ("burst", steps, stochastic)
+        if key not in self._step_fns:
+            self._step_fns[key] = jax.jit(_build_engine_burst(
+                self.cfg, steps, stochastic, self.trace_counts))
+        return self._step_fns[key]
+
+    def _prefilling(self) -> bool:
+        """Whether any occupied slot is still consuming its prompt."""
+        return any(self.slots[i] is not None and self._host_left.get(i, 0) > 0
+                   for i in range(self.B))
+
+    def _engine_step(self, width: Optional[int] = None):
+        if width is None:
+            width = self.chunk if self._prefilling() else 1
+        step = self._get_step(width, self._stochastic())
+        self.cache, self._state, _ = step(self.params, self.adapters,
+                                          self.cache, self._state)
+        for i in range(self.B):
+            if self.slots[i] is None:
+                continue
+            if self._host_left.get(i, 0) > 0:
+                self._host_left[i] = max(0, self._host_left[i] - width)
+
+    def _poll(self, results: Dict[int, List[int]]):
+        """Sync completion flags once per burst: an occupied slot whose
+        device row went inactive has finished."""
+        active = np.asarray(self._state["active"])
+        done = [i for i, req in enumerate(self.slots)
+                if req is not None and not active[i]]
+        if done:
+            self._collect(done, results)
+
+    def _collect(self, slot_idx, results: Dict[int, List[int]]):
+        gc = np.asarray(self._state["gen_count"])
+        out = np.asarray(self._state["out_buf"])
+        for i in slot_idx:
+            i = int(i)
+            req = self.slots[i]
             if req is None:
                 continue
-            if feeding[i] and self._prefill_left.get(i):
-                continue                      # still consuming the prompt
-            tok = int(sample_logits(logits[i], req.params, keys[i]))
-            req.generated.append(tok)
-            self._last_tokens[i, 0] = tok
-            if (tok == req.params.stop_token
-                    or len(req.generated) >= req.params.max_tokens):
-                req.done = True
-                results[req.uid] = req.generated
-                self.slots[i] = None
-                self._prefill_left.pop(i, None)
+            req.generated = out[i, :gc[i]].tolist()
+            req.done = True
+            results[req.uid] = req.generated
+            self.slots[i] = None
+            self._host_left.pop(i, None)
+
+    def _drain(self, results: Dict[int, List[int]]):
+        """Timed-out slots: report partial output, mark done, free the slot
+        (and deactivate it on device) so a later run() starts clean."""
+        stragglers = [i for i, s in enumerate(self.slots) if s is not None]
+        if not stragglers:
+            return
+        self._collect(stragglers, results)
+        mask = self._state["active"].at[jnp.asarray(stragglers)].set(False)
+        self._state = dict(self._state, active=mask)

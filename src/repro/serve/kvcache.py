@@ -8,11 +8,21 @@ Supports:
     the bf16 cache exceeds HBM (qwen1.5-32b @ decode_32k),
   * MLA compressed-latent caches (DeepSeek-V3): only (c_kv, k_rope) stored.
 
-All update ops are jit/pjit-friendly (dynamic_update_slice at ``pos % cap``).
+Positions are **per batch slot**: ``pos``/``length`` have shape ``(B,)`` so
+every slot of a continuous-batching engine advances its own ring
+independently — a freed slot is re-armed with :func:`reset_slot` and the new
+occupant starts writing at its own position 0 instead of the previous
+request's global offset (the cross-request contamination bug).
+
+Update ops accept a whole token *chunk* ``(B, C, ...)`` with an optional
+per-slot valid count ``n_tokens: (B,)`` (rows with ``n_tokens[b] == 0`` are
+untouched), so chunked prefill and masked continuous batching are one jitted
+write.  All ops are jit/pjit-friendly (per-row ring scatter at
+``(pos + t) % cap``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +47,44 @@ def dequant(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# per-slot ring write
+# ---------------------------------------------------------------------------
+
+def _ring_write(buf: jnp.ndarray, val: jnp.ndarray, pos: jnp.ndarray,
+                n: jnp.ndarray) -> jnp.ndarray:
+    """Write a token chunk into a per-slot ring buffer.
+
+    buf: (B, cap, ...), val: (B, C, ...), pos/n: (B,).  Row ``b`` writes its
+    first ``n[b]`` chunk tokens at ring slots ``(pos[b] + t) % cap``; when
+    ``n[b] > cap`` only the last ``cap`` tokens land (last write wins, as in
+    sequential single-token updates).  Dtype-preserving (int8 safe).
+    """
+    B, cap = buf.shape[:2]
+    C = val.shape[1]
+    t = jnp.arange(C)[None, :]
+    wpos = (pos[:, None] + t) % cap                                # (B,C)
+    valid = (t < n[:, None]) & (t >= n[:, None] - cap)             # (B,C)
+    # O(C) per-row scatter: invalid lanes are pushed out of bounds and
+    # dropped; valid lanes hit unique slots (only the last `cap` tokens of
+    # a chunk write), so there are never duplicate scatter indices
+    idx = jnp.where(valid, wpos, cap)
+    return buf.at[jnp.arange(B)[:, None], idx].set(
+        val.astype(buf.dtype), mode="drop")
+
+
+def _advance(cache: Dict, c: Dict, n: jnp.ndarray, cap: int) -> Dict:
+    c["pos"] = cache["pos"] + n
+    c["length"] = jnp.minimum(cache["length"] + n, cap)
+    return c
+
+
+def _n_tokens(n: Optional[jnp.ndarray], B: int, C: int) -> jnp.ndarray:
+    if n is None:
+        return jnp.full((B,), C, jnp.int32)
+    return n.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # GQA attention cache
 # ---------------------------------------------------------------------------
 
@@ -47,8 +95,8 @@ def attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16) 
     c = {
         "k": jnp.zeros((batch, capacity, K, hd), store),
         "v": jnp.zeros((batch, capacity, K, hd), store),
-        "pos": jnp.zeros((), jnp.int32),       # absolute next position
-        "length": jnp.zeros((), jnp.int32),    # tokens resident (<= capacity)
+        "pos": jnp.zeros((batch,), jnp.int32),     # per-slot next position
+        "length": jnp.zeros((batch,), jnp.int32),  # per-slot tokens resident
     }
     if int8:
         c["k_scale"] = jnp.zeros((batch, capacity, K, 1), jnp.float32)
@@ -56,26 +104,29 @@ def attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16) 
     return c
 
 
-def cache_update(cfg: ModelConfig, cache: Dict, k, v) -> Dict:
-    """Insert one token's k,v (B,1,K,hd) at slot pos % capacity."""
+def cache_update(cfg: ModelConfig, cache: Dict, k, v,
+                 n_tokens: Optional[jnp.ndarray] = None) -> Dict:
+    """Insert a token chunk's k,v (B,C,K,hd) at each row's own ring offset.
+
+    ``n_tokens: (B,)`` marks how many of the C tokens are real per row
+    (None = all C); rows with 0 are left untouched (inactive slots).
+    """
     cap = cache["k"].shape[1]
-    slot = cache["pos"] % cap
+    B = k.shape[0]
+    n = _n_tokens(n_tokens, B, k.shape[1])
+    pos = cache["pos"]
     c = dict(cache)
     if cache["k"].dtype == jnp.int8:
         kq, ks = quant(k)
         vq, vs = quant(v)
-        c["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
-        c["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
-        c["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=1)
-        c["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=1)
+        c["k"] = _ring_write(cache["k"], kq, pos, n)
+        c["v"] = _ring_write(cache["v"], vq, pos, n)
+        c["k_scale"] = _ring_write(cache["k_scale"], ks, pos, n)
+        c["v_scale"] = _ring_write(cache["v_scale"], vs, pos, n)
     else:
-        c["k"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        c["v"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    c["pos"] = cache["pos"] + 1
-    c["length"] = jnp.minimum(cache["length"] + 1, cap)
-    return c
+        c["k"] = _ring_write(cache["k"], k.astype(cache["k"].dtype), pos, n)
+        c["v"] = _ring_write(cache["v"], v.astype(cache["v"].dtype), pos, n)
+    return _advance(cache, c, n, cap)
 
 
 def cache_kv(cfg: ModelConfig, cache: Dict):
@@ -97,8 +148,8 @@ def mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16) -
     c = {
         "c_kv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), store),
         "k_rope": jnp.zeros((batch, capacity, cfg.qk_rope_head_dim), store),
-        "pos": jnp.zeros((), jnp.int32),
-        "length": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
     }
     if int8:
         c["c_kv_scale"] = jnp.zeros((batch, capacity, 1), jnp.float32)
@@ -106,23 +157,70 @@ def mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16) -
     return c
 
 
-def mla_cache_update(cache: Dict, c_kv_t, k_rope_t) -> Dict:
-    """c_kv_t: (B,1,kvr), k_rope_t: (B,1,rope)."""
+def mla_cache_update(cache: Dict, c_kv_t, k_rope_t,
+                     n_tokens: Optional[jnp.ndarray] = None) -> Dict:
+    """c_kv_t: (B,C,kvr), k_rope_t: (B,C,rope); per-row ring writes."""
     cap = cache["c_kv"].shape[1]
-    slot = cache["pos"] % cap
+    B = c_kv_t.shape[0]
+    n = _n_tokens(n_tokens, B, c_kv_t.shape[1])
+    pos = cache["pos"]
     c = dict(cache)
     if cache["c_kv"].dtype == jnp.int8:
         q1, s1 = quant(c_kv_t)
         q2, s2 = quant(k_rope_t)
-        c["c_kv"] = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], q1, slot, axis=1)
-        c["k_rope"] = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], q2, slot, axis=1)
-        c["c_kv_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["c_kv_scale"], s1, slot, axis=1)
-        c["k_rope_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_rope_scale"], s2, slot, axis=1)
+        c["c_kv"] = _ring_write(cache["c_kv"], q1, pos, n)
+        c["k_rope"] = _ring_write(cache["k_rope"], q2, pos, n)
+        c["c_kv_scale"] = _ring_write(cache["c_kv_scale"], s1, pos, n)
+        c["k_rope_scale"] = _ring_write(cache["k_rope_scale"], s2, pos, n)
     else:
-        c["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), slot, axis=1)
-        c["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), slot, axis=1)
-    c["pos"] = cache["pos"] + 1
-    c["length"] = jnp.minimum(cache["length"] + 1, cap)
-    return c
+        c["c_kv"] = _ring_write(cache["c_kv"],
+                                c_kv_t.astype(cache["c_kv"].dtype), pos, n)
+        c["k_rope"] = _ring_write(cache["k_rope"],
+                                  k_rope_t.astype(cache["k_rope"].dtype), pos, n)
+    return _advance(cache, c, n, cap)
+
+
+# ---------------------------------------------------------------------------
+# slot reset (continuous batching)
+# ---------------------------------------------------------------------------
+
+# un-stacked rank of every known cache/state leaf: the batch axis of a leaf
+# sits at ``ndim - rank`` (leaves may carry leading layer-stack axes).  The
+# single source of truth — launch/sharding.py's cache_pspecs imports it too.
+CACHE_LEAF_RANKS = {
+    "k": 4, "v": 4, "k_scale": 4, "v_scale": 4,
+    "c_kv": 3, "k_rope": 3, "c_kv_scale": 3, "k_rope_scale": 3,
+    "conv": 3, "ssm": 4, "wkv": 4, "tm_x": 2, "cm_x": 2,
+    "pos": 1, "length": 1,
+}
+
+
+def _reset(cache: Any, row_mask_fn) -> Any:
+    def fix(path, leaf):
+        last = getattr(path[-1], "key", None) if path else None
+        base = CACHE_LEAF_RANKS.get(last, leaf.ndim)
+        bax = leaf.ndim - base
+        if leaf.ndim == 0 or bax < 0 or bax >= leaf.ndim:
+            return leaf
+        m = row_mask_fn(leaf.shape[bax])
+        m = m.reshape((1,) * bax + (leaf.shape[bax],) + (1,) * (leaf.ndim - bax - 1))
+        return jnp.where(m, jnp.zeros_like(leaf), leaf)
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def reset_slots(cache: Any, mask: jnp.ndarray) -> Any:
+    """Zero the cache rows of every slot where ``mask: (B,)`` is True.
+
+    Works on a single layer cache dict, a layer-stacked dict, or the whole
+    cache tuple from :func:`repro.models.transformer.init_cache` (attention
+    rings, MLA latents, SSM/RWKV recurrent states alike): per-slot
+    ``pos``/``length`` restart at 0 and every stateful row is wiped, so the
+    next occupant of the slot sees a fresh cache.
+    """
+    mask = jnp.asarray(mask, bool)
+    return _reset(cache, lambda b: mask)
+
+
+def reset_slot(cache: Any, i) -> Any:
+    """Zero batch slot ``i``'s cache rows (jit-friendly, ``i`` may be traced)."""
+    return _reset(cache, lambda b: jnp.arange(b) == i)

@@ -106,11 +106,22 @@ def make_prefill_step(cfg: ModelConfig, use_kernels: bool = False):
 
 
 def make_serve_step(cfg: ModelConfig):
-    """One-token decode against a KV cache: (params, adapters, cache, batch)
-    -> (next_token_logits (B,V), cache)."""
+    """Chunked decode against a per-slot KV cache: (params, adapters, cache,
+    batch) -> (next_token_logits (B,V), cache).
+
+    batch: {"tokens": (B,C)} plus optional {"n_tokens": (B,)} giving the
+    real token count per row (chunked prefill with ragged prompt tails).
+    Returns the logits at each row's LAST real token — the position the
+    next token is sampled from."""
     def serve_step(params, adapters, cache, batch):
-        lg, cache = T.decode(cfg, params, cache, batch, adapters)
-        return lg[:, 0], cache
+        n = batch.get("n_tokens")
+        lg, cache = T.decode(cfg, params, cache, {k: v for k, v in batch.items()
+                                                  if k != "n_tokens"},
+                             adapters, n_tokens=n)
+        if n is None:
+            return lg[:, -1], cache
+        idx = jnp.clip(n - 1, 0, lg.shape[1] - 1).astype(jnp.int32)
+        return jnp.take_along_axis(lg, idx[:, None, None], axis=1)[:, 0], cache
     return serve_step
 
 

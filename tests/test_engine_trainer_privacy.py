@@ -50,7 +50,7 @@ class TestServeEngine:
 
     def test_empty_prompt_seeds_token_zero(self, engine_setup):
         """An empty-prompt request must not sample its first token from the
-        stale ``_last_tokens`` slot value of a previous occupant — defined
+        stale last-token slot value of a previous occupant — defined
         behavior is to seed generation from token 0."""
         from repro.serve.engine import SamplingParams, ServeEngine
         cfg, params = engine_setup
@@ -58,21 +58,103 @@ class TestServeEngine:
         # first request leaves a stale last-token behind in slot 0
         first = eng.submit([5, 6], SamplingParams(max_tokens=3))
         out1 = eng.run()
-        assert eng._last_tokens[0, 0] == out1[first][-1]
-        eng._last_tokens[0, 0] = 17   # make the staleness unambiguous
-        fed = []
-        orig = eng._step
-
-        def spy(p, a, cache, batch):
-            fed.append(int(np.asarray(batch["tokens"])[0, 0]))
-            return orig(p, a, cache, batch)
-
-        eng._step = spy
+        assert int(eng._state["last_token"][0]) == out1[first][-1]
         uid = eng.submit([], SamplingParams(max_tokens=4))
+        # admission re-seeds the slot's feed token to 0
+        eng._admit()
+        assert int(eng._state["last_token"][0]) == 0
         out2 = eng.run()
-        assert fed[0] == 0                    # seeded, not the stale token
         assert len(out2[uid]) == 4
         assert all(0 <= t < cfg.vocab_size for t in out2[uid])
+        # and the output equals an empty-prompt request on a fresh engine
+        fresh = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+        fu = fresh.submit([], SamplingParams(max_tokens=4))
+        assert out2[uid] == fresh.run()[fu]
+
+    def test_stop_token_excluded_from_output(self, engine_setup):
+        """The stop token completes the request but is NOT emitted."""
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+        u = eng.submit([7, 8], SamplingParams(max_tokens=10))
+        ref = eng.run()[u]
+        stop = ref[3]
+        eng2 = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+        u2 = eng2.submit([7, 8], SamplingParams(max_tokens=10, stop_token=stop))
+        got = eng2.run()[u2]
+        assert got == ref[:3]
+        assert stop not in got
+
+    def test_straggler_drain_frees_slots(self, engine_setup):
+        """A request cut off by max_steps is reported truncated, marked
+        done, and its slot freed — a second run() neither double-reports
+        nor re-decodes it."""
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, batch_slots=1, capacity=64)
+        u1 = eng.submit([3, 4], SamplingParams(max_tokens=30))
+        r1 = eng.run(max_steps=4)
+        assert 0 < len(r1[u1]) < 30          # truncated partial output
+        assert eng.slots[0] is None          # slot freed
+        u2 = eng.submit([5], SamplingParams(max_tokens=3))
+        r2 = eng.run()
+        assert u1 not in r2                  # no double-report
+        assert len(r2[u2]) == 3
+
+    def test_sampling_invariant_to_slot_placement(self, engine_setup):
+        """Per-request PRNG streams are keyed by (seed, uid): the same
+        submissions produce bit-identical outputs whatever batch_slots (and
+        hence slot placement / batching interleave) the engine runs."""
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        prompts = [[11, 12], [13, 14, 15], [16]]
+        sp = SamplingParams(temperature=0.9, top_k=20, max_tokens=5)
+        outs = []
+        for bs in (1, 3):
+            eng = ServeEngine(cfg, params, batch_slots=bs, capacity=64, seed=7)
+            uids = [eng.submit(list(p), sp) for p in prompts]
+            out = eng.run()
+            outs.append([out[u] for u in uids])
+        assert outs[0] == outs[1]
+
+    def test_greedy_rows_unaffected_by_sampled_neighbors(self, engine_setup):
+        """Greedy and sampled requests may share a batch (the stochastic
+        step variant handles both); a greedy request's tokens must match a
+        greedy-only engine, and a sampled request's tokens must not depend
+        on the greedy neighbor."""
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        gsp = SamplingParams(max_tokens=5)
+        ssp = SamplingParams(temperature=0.9, top_k=20, max_tokens=5)
+        eng = ServeEngine(cfg, params, batch_slots=2, capacity=64, seed=3)
+        g = eng.submit([5, 6], gsp)
+        s = eng.submit([7, 8], ssp)
+        mixed = eng.run()
+        solo = ServeEngine(cfg, params, batch_slots=2, capacity=64, seed=3)
+        g2 = solo.submit([5, 6], gsp)
+        assert mixed[g] == solo.run()[g2]
+        # greedy-only engines compile the argmax-only variant
+        assert all(k[1] == "greedy" for k in solo.trace_counts)
+        assert all(k[1] == "sampled" for k in eng.trace_counts)
+
+    def test_jitted_step_no_retrace(self, engine_setup):
+        """After warmup the engine reuses a fixed set of compiled
+        executables (chunked prefill width, decode width 1, scanned decode
+        burst) across admissions, slot churn, and repeated runs — every
+        executable compiles exactly once."""
+        from repro.serve.engine import SamplingParams, ServeEngine
+        cfg, params = engine_setup
+        eng = ServeEngine(cfg, params, batch_slots=2, capacity=64)
+        for p in ([1, 2, 3], [4], [5, 6]):
+            eng.submit(p, SamplingParams(max_tokens=4))
+        eng.run()
+        counts = dict(eng.trace_counts)
+        assert all(v == 1 for v in counts.values())
+        assert len(counts) <= 3
+        for p in ([7, 8], [9]):
+            eng.submit(p, SamplingParams(max_tokens=6))
+        eng.run()
+        assert eng.trace_counts == counts       # zero retraces
 
     def test_sampling_respects_top_k(self):
         from repro.serve.engine import SamplingParams, sample_logits

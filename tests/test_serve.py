@@ -7,7 +7,8 @@ import pytest
 from repro.common.config import ModelConfig
 from repro.configs import get_smoke_config
 from repro.models import transformer as T
-from repro.serve.kvcache import attn_cache, cache_kv, cache_update, dequant, quant
+from repro.serve.kvcache import (attn_cache, cache_kv, cache_update, dequant,
+                                 quant, reset_slot, reset_slots)
 from repro.train.loss import chunked_ce
 
 
@@ -32,12 +33,165 @@ class TestRingBuffer:
         for t in range(6):
             k = jnp.full((1, 1, K, hd), float(t))
             c = cache_update(cfg, c, k, k)
-        assert int(c["pos"]) == 6
-        assert int(c["length"]) == 4
+        assert int(c["pos"][0]) == 6
+        assert int(c["length"][0]) == 4
         kc, _ = cache_kv(cfg, c)
         # slots hold tokens 4,5,2,3 (ring)
         got = sorted(float(kc[0, i, 0, 0]) for i in range(4))
         assert got == [2.0, 3.0, 4.0, 5.0]
+
+    def test_per_slot_positions_advance_independently(self):
+        """Rows write at their OWN ring offset: resetting one slot restarts
+        its ring at 0 while the other row keeps wrapping."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        c = attn_cache(cfg, batch=2, capacity=4, dtype=jnp.float32)
+        for t in range(3):
+            k = jnp.full((2, 1, K, hd), float(t))
+            c = cache_update(cfg, c, k, k)
+        c = reset_slot(c, 1)
+        np.testing.assert_array_equal(np.asarray(c["pos"]), [3, 0])
+        np.testing.assert_array_equal(np.asarray(c["length"]), [3, 0])
+        for t in range(3, 5):
+            k = jnp.full((2, 1, K, hd), float(t))
+            c = cache_update(cfg, c, k, k)
+        np.testing.assert_array_equal(np.asarray(c["pos"]), [5, 2])
+        np.testing.assert_array_equal(np.asarray(c["length"]), [4, 2])
+        kc, _ = cache_kv(cfg, c)
+        # row 0 wrapped (slot 0 overwritten by token 4); row 1 restarted at 0
+        got0 = [float(kc[0, i, 0, 0]) for i in range(4)]
+        assert got0 == [4.0, 1.0, 2.0, 3.0]
+        got1 = [float(kc[1, i, 0, 0]) for i in range(4)]
+        assert got1[:2] == [3.0, 4.0]
+
+    def test_chunk_write_matches_sequential(self, rng):
+        """One (B,C) chunk write == C single-token writes, incl. ragged
+        n_tokens rows and int8 quantized storage."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        for dtype in (jnp.float32, jnp.int8):
+            kv = jnp.asarray(rng.normal(size=(2, 3, K, hd)), jnp.float32)
+            n = jnp.asarray([2, 3])
+            chunked = cache_update(cfg, attn_cache(cfg, 2, 8, dtype),
+                                   kv, kv, n_tokens=n)
+            seq = attn_cache(cfg, 2, 8, dtype)
+            for t in range(3):
+                mask = (t < n).astype(jnp.int32)
+                seq = cache_update(cfg, seq, kv[:, t:t+1], kv[:, t:t+1],
+                                   n_tokens=mask)
+            for key in chunked:
+                np.testing.assert_array_equal(np.asarray(chunked[key]),
+                                              np.asarray(seq[key]), err_msg=key)
+
+    def test_chunk_longer_than_capacity_keeps_last_tokens(self):
+        """Writing C > cap tokens keeps only the newest cap (last write
+        wins), matching sequential ring eviction."""
+        cfg = get_smoke_config("qwen2-0.5b")
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        kv = jnp.arange(6, dtype=jnp.float32)[None, :, None, None] \
+            * jnp.ones((1, 6, K, hd))
+        c = cache_update(cfg, attn_cache(cfg, 1, 4, jnp.float32), kv, kv)
+        seq = attn_cache(cfg, 1, 4, jnp.float32)
+        for t in range(6):
+            seq = cache_update(cfg, seq, kv[:, t:t+1], kv[:, t:t+1])
+        np.testing.assert_array_equal(np.asarray(c["k"]), np.asarray(seq["k"]))
+        np.testing.assert_array_equal(np.asarray(c["pos"]), np.asarray(seq["pos"]))
+
+    def test_reset_slots_wipes_recurrent_state(self):
+        """reset_slots on a whole init_cache tuple zeroes the masked rows of
+        attention rings AND SSM/RWKV recurrent states, leaving others."""
+        cfg = get_smoke_config("rwkv6-1.6b")
+        B = 5                      # unambiguous batch-axis size
+        cache = T.init_cache(cfg, B, 8, kv_dtype=jnp.float32)
+        dirty = jax.tree.map(lambda l: l + 1, cache)
+        mask = np.zeros(B, bool)
+        mask[3] = True
+        wiped = T.reset_cache_slots(dirty, jnp.asarray(mask))
+        for leaf in jax.tree.leaves(wiped):
+            arr = np.asarray(leaf, np.float32)
+            bax = [i for i, s in enumerate(leaf.shape) if s == B][0]
+            moved = np.moveaxis(arr, bax, 0)
+            assert (moved[3] == 0).all()
+            assert (moved[0] != 0).any()
+
+
+class TestContinuousBatching:
+    """Per-slot isolation of the serving engine: a request must decode the
+    same tokens no matter which slot it lands in, who occupied that slot
+    before, or how the prompt is chunked."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        params = T.init(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def _engine(self, cfg, params, **kw):
+        from repro.serve.engine import ServeEngine
+        kw.setdefault("batch_slots", 2)
+        kw.setdefault("capacity", 64)
+        return ServeEngine(cfg, params, seed=0, **kw)
+
+    @pytest.mark.parametrize("variant", ["full", "window", "int8"])
+    def test_slot_reuse_no_contamination(self, setup, variant):
+        """The ISSUE 4 repro: serve {A, B, C} on 2 slots so C reuses A's
+        freed slot — C's greedy tokens must be bit-identical to serving C
+        alone on a fresh engine."""
+        from repro.serve.engine import SamplingParams
+        cfg, params = setup
+        kw = {}
+        if variant == "window":
+            cfg = cfg.replace(sliding_window=8)
+        if variant == "int8":
+            kw["kv_dtype"] = jnp.int8
+        eng = self._engine(cfg, params, **kw)
+        eng.submit([5, 6], SamplingParams(max_tokens=3))          # A: finishes first
+        eng.submit([9, 10, 11, 12], SamplingParams(max_tokens=12))  # B: keeps going
+        c = eng.submit([42, 43, 44], SamplingParams(max_tokens=6))  # C -> A's slot
+        batched = eng.run()[c]
+        fresh = self._engine(cfg, params, **kw)
+        alone = fresh.submit([42, 43, 44], SamplingParams(max_tokens=6))
+        assert batched == fresh.run()[alone]
+
+    def test_readmit_with_ring_wraparound(self, setup):
+        """Re-admitted slot with a capacity small enough that the ring wraps
+        during generation: per-slot pos restarts at 0 and wrap behaves as on
+        a fresh engine."""
+        from repro.serve.engine import SamplingParams
+        cfg, params = setup
+        eng = self._engine(cfg, params, capacity=8)
+        eng.submit([5, 6, 7], SamplingParams(max_tokens=4))
+        second = eng.submit([21, 22], SamplingParams(max_tokens=12))  # wraps
+        got = eng.run()[second]
+        fresh = self._engine(cfg, params, capacity=8)
+        alone = fresh.submit([21, 22], SamplingParams(max_tokens=12))
+        assert got == fresh.run()[alone]
+
+    def test_chunked_prefill_matches_tokenwise(self, setup):
+        from repro.serve.engine import SamplingParams
+        cfg, params = setup
+        outs = []
+        for chunk in (1, 4):
+            eng = self._engine(cfg, params, prefill_chunk=chunk)
+            uids = [eng.submit(p, SamplingParams(max_tokens=5))
+                    for p in ([3, 4, 5, 6, 7], [8, 9], [])]
+            out = eng.run()
+            outs.append([out[u] for u in uids])
+        assert outs[0] == outs[1]
+
+    def test_batched_equals_solo_decode(self, setup):
+        """Two requests decoded concurrently in one batch == each decoded
+        alone: per-row masking keeps rows fully independent."""
+        from repro.serve.engine import SamplingParams
+        cfg, params = setup
+        eng = self._engine(cfg, params)
+        u1 = eng.submit([3, 4, 5], SamplingParams(max_tokens=6))
+        u2 = eng.submit([6, 7], SamplingParams(max_tokens=6))
+        both = eng.run()
+        for uid, prompt in ((u1, [3, 4, 5]), (u2, [6, 7])):
+            solo = self._engine(cfg, params, batch_slots=1)
+            su = solo.submit(prompt, SamplingParams(max_tokens=6))
+            assert both[uid] == solo.run()[su]
 
 
 class TestChunkedCE:
