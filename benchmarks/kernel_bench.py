@@ -1,17 +1,46 @@
 """Kernel micro-benchmarks.
 
 On this CPU container the Pallas kernels execute in interpret mode (not
-meaningful to time), so we time the jit-compiled XLA reference paths (the
-actual CPU execution path) and report the kernels' analytic FLOPs/bytes as
-`derived` (the roofline inputs for the TPU target)."""
+meaningful to time), so we time the jit-compiled XLA paths that actually
+execute on CPU — the references for the classic kernels, and dense-vs-
+streamed for the decode kernels — and report the kernels' analytic
+FLOPs/bytes as `derived` (the roofline inputs for the TPU target).
+
+The decode section is the ring-flash-decode acceptance harness:
+
+  * dense vs streamed decode attention timings over a ring cache
+    (fp32 and int8), with analytic per-step HBM bytes for both paths —
+    dense pays the (B,H,C,cap) score tensor, the (B,C,cap) mask, and (for
+    int8) a full-precision cache copy; streamed pays none of them;
+  * a live-memory/HLO check on the JITTED SERVE STEP: the compiled
+    ``decode_impl="streamed"`` executable must contain neither a
+    (B,H,C,cap) (nor (B,K,g,C,cap)) score buffer nor a dense (B,C,cap)
+    mask, and its XLA temp allocation must not exceed the dense path's.
+    Violations raise — CI runs this file.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --json BENCH_kernels.json
+"""
 from __future__ import annotations
+
+import argparse
+import functools
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.common.config import ModelConfig
 from repro.kernels import ref
+from repro.models import transformer as T
+from repro.models.attention_core import ring_flash_decode
+from repro.serve.kvcache import quant
+from repro.train.step import make_serve_step
+
+DEC_MODEL = ModelConfig(name="kernelbench-tiny", family="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                        d_ff=128, vocab_size=256, dtype="float32")
 
 
 def run():
@@ -56,5 +85,146 @@ def run():
     return rows
 
 
+def decode_bytes(B, C, H, K, hd, cap, block, int8: bool):
+    """Analytic per-step HBM traffic (bytes) of one decode attention layer.
+
+    Both paths stream the raw cache once (GQA: once per kv head) and write
+    the (B,C,H,hd) fp32 output.  The dense path additionally round-trips
+    the (B,H,C,cap) fp32 score tensor (written by the scores matmul, read +
+    re-written by masking/softmax, read by the value matmul), materializes
+    the (B,C,cap) bool ring mask, and — when the cache is int8 — a
+    full-precision (bf16) cache copy.  The streamed path's score/mask tiles
+    are (C, block) per grid step and live in VMEM/registers only.
+    """
+    elt = 1 if int8 else 4
+    cache = 2 * B * cap * K * hd * elt + (2 * B * cap * K * 4 if int8 else 0)
+    out = B * C * H * hd * 4
+    common = cache + out
+    scores = B * H * C * cap * 4
+    mask = B * C * cap
+    dense = common + 4 * scores + mask + (2 * B * cap * K * hd * 2 if int8 else 0)
+    streamed = common
+    return {"dense": dense, "streamed": streamed,
+            "live_score_tile": {"dense": scores, "streamed": B * H * C * block * 4}}
+
+
+def bench_decode(rng, B=8, C=8, H=8, K=2, hd=64, cap=2048, block=128):
+    """Time dense vs streamed decode attention over a populated ring cache
+    (fp32 + int8) and report speedups + analytic HBM bytes."""
+    q = jnp.asarray(rng.normal(size=(B, C, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, cap, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, cap, K, hd)), jnp.float32)
+    pos = jnp.full((B,), cap + 37, jnp.int32)          # wrapped ring
+    length = jnp.full((B,), cap, jnp.int32)
+    n = jnp.full((B,), C, jnp.int32)
+    kq, ks = quant(k)
+    vq, vs = quant(v)
+
+    arms = {
+        "dense_fp32": (jax.jit(ref.ring_decode_ref),
+                       (q, k, v, pos, length, n)),
+        "streamed_fp32": (jax.jit(functools.partial(ring_flash_decode,
+                                                    block=block)),
+                          (q, k, v, pos, length, n)),
+        "dense_int8": (jax.jit(lambda *a: ref.ring_decode_ref(
+            *a, k_scale=ks, v_scale=vs)), (q, kq, vq, pos, length, n)),
+        "streamed_int8": (jax.jit(lambda *a: ring_flash_decode(
+            *a, k_scale=ks, v_scale=vs, block=block)),
+            (q, kq, vq, pos, length, n)),
+    }
+    out = {"shape": {"B": B, "C": C, "H": H, "K": K, "hd": hd, "cap": cap,
+                     "block": block}}
+    for name, (fn, args) in arms.items():
+        us = timeit(fn, *args)
+        int8 = name.endswith("int8")
+        impl = name.split("_")[0]
+        bts = decode_bytes(B, C, H, K, hd, cap, block, int8)
+        out[name] = {"us_per_call": round(us, 1),
+                     "analytic_hbm_bytes": bts[impl],
+                     "live_score_bytes": bts["live_score_tile"][impl]}
+    for p in ("fp32", "int8"):
+        out[f"speedup_streamed_vs_dense_{p}"] = round(
+            out[f"dense_{p}"]["us_per_call"]
+            / out[f"streamed_{p}"]["us_per_call"], 2)
+        out[f"hbm_bytes_ratio_{p}"] = round(
+            out[f"dense_{p}"]["analytic_hbm_bytes"]
+            / out[f"streamed_{p}"]["analytic_hbm_bytes"], 2)
+    return out
+
+
+def serve_step_live_memory_check(B=4, C=8, cap=256):
+    """Compile the jitted serve step per decode_impl and prove the streamed
+    executable materializes neither the (B,H,C,cap)/(B,K,g,C,cap) score
+    tensor nor the dense (B,C,cap) mask, and allocates no more XLA temp
+    memory than the dense path.  Raises on violation."""
+    cfg = DEC_MODEL
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    score_shapes = [f"f32[{B},{H},{C},{cap}]",
+                    f"f32[{B},{K},{H // K},{C},{cap}]"]
+    mask_shape = f"pred[{B},{C},{cap}]"
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((B, C), jnp.int32),
+             "n_tokens": jnp.full((B,), C, jnp.int32)}
+    report = {"shape": {"B": B, "C": C, "cap": cap, "H": H, "K": K},
+              "checked_buffers": score_shapes + [mask_shape]}
+    for impl in ("dense", "streamed"):
+        cache = T.init_cache(cfg, B, cap, jnp.float32, prefill_chunk=C)
+        comp = jax.jit(make_serve_step(cfg, impl)).lower(
+            params, None, cache, batch).compile()
+        txt = comp.as_text()
+        found = [s for s in score_shapes + [mask_shape] if s in txt]
+        try:
+            temp = int(comp.memory_analysis().temp_size_in_bytes)
+        except Exception:                      # backend without the API
+            temp = None
+        report[impl] = {"materialized_buffers": found,
+                        "xla_temp_bytes": temp}
+    assert report["dense"]["materialized_buffers"], \
+        "sanity: dense path should materialize the score/mask buffers"
+    assert not report["streamed"]["materialized_buffers"], \
+        f"streamed serve step materializes {report['streamed']}"
+    dt, st = (report["dense"]["xla_temp_bytes"],
+              report["streamed"]["xla_temp_bytes"])
+    if dt is not None and st is not None:
+        assert st <= dt, f"streamed temp {st} > dense temp {dt}"
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="", help="write results to this path")
+    ap.add_argument("--cap", type=int, default=2048,
+                    help="ring capacity for the decode timing arms")
+    args = ap.parse_args()
+
+    rows = run()
+    emit(rows)
+
+    rng = np.random.default_rng(0)
+    decode = bench_decode(rng, cap=args.cap)
+    for p in ("fp32", "int8"):
+        print(f"decode[{p}]: dense {decode[f'dense_{p}']['us_per_call']}us "
+              f"vs streamed {decode[f'streamed_{p}']['us_per_call']}us "
+              f"({decode[f'speedup_streamed_vs_dense_{p}']}x, analytic HBM "
+              f"{decode[f'hbm_bytes_ratio_{p}']}x less)")
+
+    live = serve_step_live_memory_check()
+    print(f"serve-step live-memory check: dense materializes "
+          f"{live['dense']['materialized_buffers']}, streamed none "
+          f"(temp {live['dense']['xla_temp_bytes']} -> "
+          f"{live['streamed']['xla_temp_bytes']} bytes)")
+
+    if args.json:
+        report = {
+            "backend": jax.default_backend(),
+            "kernels": rows,
+            "decode": decode,
+            "serve_step_live_memory": live,
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    emit(run())
+    main()

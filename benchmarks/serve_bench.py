@@ -1,15 +1,20 @@
 """Serving-engine throughput: eager per-token loop vs the jitted engine step.
 
-Three arms over the same greedy continuous-batching workload:
+Arms over the same continuous-batching workload:
 
   * ``eager``      — the seed ServeEngine loop: one token per engine step,
                      per-row host-side sampling (eager argmax + int() sync),
                      a B+1-way key split every step;
   * ``jit_chunk1`` — the jitted engine step, chunked prefill OFF (width 1);
   * ``jit_chunkN`` — the jitted engine step with chunked prefill (whole
-                     prompt chunks through the cached sequence path).
+                     prompt chunks through the cached sequence path);
+  * ``jit_chunkN_streamed`` — the same engine with ``decode_impl=
+                     "streamed"`` (ring-flash-decode: online softmax over kv
+                     blocks, no dense (B,H,C,cap) scores / (B,C,cap) mask).
 
-Also verifies the jitted step compiles ONCE per width (no per-step
+The report's ``decode_impl`` axis compares the streamed hot loop against
+the dense oracle (``speedup_streamed_vs_dense`` — must not regress).  Also
+verifies every jitted arm compiles ONCE per executable (no per-step
 retraces after warmup).  Emits JSON for CI artifacts::
 
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
@@ -148,11 +153,14 @@ def main() -> None:
         if kind == "eager":
             return EagerLoop(cfg, params, args.slots, capacity)
         chunk = 1 if kind == "jit_chunk1" else args.chunk
+        impl = "streamed" if kind.endswith("_streamed") else "dense"
         return ServeEngine(cfg, params, batch_slots=args.slots,
-                           capacity=capacity, prefill_chunk=chunk)
+                           capacity=capacity, prefill_chunk=chunk,
+                           decode_impl=impl)
 
     params = T.init(cfg, jax.random.PRNGKey(0))
-    arms = ["eager", "jit_chunk1", f"jit_chunk{args.chunk}"]
+    arms = ["eager", "jit_chunk1", f"jit_chunk{args.chunk}",
+            f"jit_chunk{args.chunk}_streamed"]
 
     results = {}
     trace_counts = {}
@@ -171,16 +179,20 @@ def main() -> None:
             trace_counts[kind] = before
         results[kind] = {"wall_s": round(dt, 4),
                          "tokens": total,
-                         "tok_per_s": round(total / dt, 2)}
-        print(f"{kind:12s} {total:5d} tokens in {dt:7.3f}s "
+                         "tok_per_s": round(total / dt, 2),
+                         "decode_impl": ("streamed" if kind.endswith("_streamed")
+                                         else "dense")}
+        print(f"{kind:20s} {total:5d} tokens in {dt:7.3f}s "
               f"({total / dt:8.1f} tok/s)")
 
     jit1 = results["jit_chunk1"]["tok_per_s"]
     jitN = results[f"jit_chunk{args.chunk}"]["tok_per_s"]
+    jitS = results[f"jit_chunk{args.chunk}_streamed"]["tok_per_s"]
     eager = results["eager"]["tok_per_s"]
     speedup = jitN / eager
     print(f"speedup (jitted+chunked vs eager loop): {speedup:.2f}x")
     print(f"chunked prefill vs width-1: {jitN / jit1:.2f}x")
+    print(f"streamed decode vs dense: {jitS / jitN:.2f}x")
     print(f"trace counts (stable across runs): {trace_counts}")
 
     report = {
@@ -190,6 +202,9 @@ def main() -> None:
                    "smoke": bool(args.smoke),
                    "backend": jax.default_backend()},
         "results": results,
+        "decode_impl_axis": {
+            "dense": jitN, "streamed": jitS,
+            "speedup_streamed_vs_dense": round(jitS / jitN, 2)},
         "speedup_jit_vs_eager": round(speedup, 2),
         "speedup_chunked_vs_width1": round(jitN / jit1, 2),
         "trace_counts": {arm: {str(k): v for k, v in c.items()}

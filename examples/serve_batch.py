@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="prompt tokens fed per jitted prefill call")
     ap.add_argument("--int8-cache", action="store_true")
+    ap.add_argument("--decode-impl", default="dense",
+                    choices=["dense", "streamed", "kernel"],
+                    help="attention interior: dense oracle, streamed "
+                         "ring-flash-decode (XLA), or the Pallas kernel")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -47,14 +51,15 @@ def main():
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(4, cfg.vocab_size, (B, args.prompt_len)))
 
-    serve = jax.jit(make_serve_step(cfg))
+    serve = jax.jit(make_serve_step(cfg, decode_impl=args.decode_impl))
     kv_dtype = jnp.int8 if args.int8_cache else jnp.dtype(cfg.dtype)
     C = max(1, min(args.prefill_chunk, args.prompt_len))
     cache = T.init_cache(cfg, B, capacity=args.prompt_len + args.gen,
                          kv_dtype=kv_dtype, prefill_chunk=C)
     print(f"== serving {cfg.name}: batch={B}, prompt={args.prompt_len}, "
           f"gen={args.gen}, window={args.window or 'full'}, "
-          f"cache={kv_dtype}, prefill_chunk={C} ==")
+          f"cache={kv_dtype}, prefill_chunk={C}, "
+          f"decode_impl={args.decode_impl} ==")
     # chunked prefill: whole prompt chunks through the cached sequence path
     t0 = time.time()
     n_calls = 0

@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--batch-slots", type=int, default=2)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-tokens", type=int, default=12)
+    ap.add_argument("--decode-impl", default="streamed",
+                    choices=["dense", "streamed", "kernel"],
+                    help="serving attention interior (streamed = "
+                         "ring-flash-decode hot loop)")
     args = ap.parse_args()
 
     cfg = ModelConfig(name="serve-fed-tiny", family="dense", num_layers=2,
@@ -45,7 +49,8 @@ def main():
     global_adapters = trainer.global_state.global_adapters
     print("\n== serving base + global FLoRIST adapter ==")
     eng = ServeEngine(cfg, trainer.params, global_adapters,
-                      batch_slots=args.batch_slots, capacity=64, seed=0)
+                      batch_slots=args.batch_slots, capacity=64, seed=0,
+                      decode_impl=args.decode_impl)
     rng = np.random.default_rng(0)
     sp = SamplingParams(temperature=args.temperature, top_k=8,
                         max_tokens=args.max_tokens)

@@ -23,7 +23,8 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, bq: int, bk: int, nk: int, causal: bool, window: int):
+            scale: float, bq: int, bk: int, nk: int, causal: bool,
+            window: int, kv_len: int):
     ik = pl.program_id(2)
     iq = pl.program_id(1)
 
@@ -45,6 +46,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         mask &= kpos <= qpos
     if window:
         mask &= kpos > (qpos - window)
+    if kv_len:                      # T was padded: mask the padded columns
+        mask &= kpos < kv_len
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]                               # (bq, 1)
@@ -62,11 +65,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+                   static_argnames=("causal", "window", "bq", "bk", "kv_len",
+                                    "interpret"))
 def flash_attention_kernel(q, k, v, causal: bool = True, window: int = 0,
-                           bq: int = 128, bk: int = 128,
+                           bq: int = 128, bk: int = 128, kv_len: int = 0,
                            interpret: bool = False):
-    """q: (B,S,H,hd), k/v: (B,T,K,hd) -> (B,S,H,hd)."""
+    """q: (B,S,H,hd), k/v: (B,T,K,hd) -> (B,S,H,hd).  ``kv_len`` marks the
+    real KV length when T carries block padding (0 = no padding)."""
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
     g = H // K
@@ -85,7 +90,7 @@ def flash_attention_kernel(q, k, v, causal: bool = True, window: int = 0,
 
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
-                          causal=causal, window=window),
+                          causal=causal, window=window, kv_len=kv_len),
         grid=(B * H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda bh, iq_, ik_: (bh, iq_, 0)),

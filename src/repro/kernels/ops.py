@@ -3,7 +3,9 @@
 On CPU (this container) the kernels execute in ``interpret=True`` mode —
 the kernel body runs as traced Python, validating the exact TPU code path.
 Shape padding to block multiples is handled here so callers can use
-arbitrary sizes.
+arbitrary sizes.  ``lora_matmul`` carries a ``custom_vjp`` (backward via the
+reference math) so ``use_kernels=True`` training differentiates through the
+fused forward.
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ from repro.kernels import ref
 from repro.kernels.adapter_gram import adapter_gram_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.lora_matmul import lora_matmul_kernel
+from repro.kernels.mla_ring_decode import mla_ring_decode_kernel
+from repro.kernels.ring_decode import ring_decode_kernel
 from repro.kernels.wkv6 import wkv6_kernel
 
 
@@ -33,31 +37,164 @@ def _pad_to(x, axis: int, mult: int):
     return jnp.pad(x, widths), n
 
 
-def lora_matmul(x, w, a, b, scale, bm: int = 128, bn: int = 128):
-    """x: (..., din) -> (..., dout), fused base + adapter matmul."""
-    lead = x.shape[:-1]
-    din = x.shape[-1]
+def _lora_matmul_fwd(x, w, a, b, scale, bm, bn):
     dout = w.shape[1]
-    xf = x.reshape(-1, din)
-    xf, M = _pad_to(xf, 0, bm)
+    xf, M = _pad_to(x, 0, bm)
     b_scaled = (b * scale).astype(w.dtype)
     wp, _ = _pad_to(w, 1, bn)
     bp, _ = _pad_to(b_scaled, 0, bn)
     y = lora_matmul_kernel(xf, wp, a.astype(x.dtype), bp.astype(x.dtype),
                            bm=bm, bn=bn, interpret=_interpret())
-    return y[:M, :dout].reshape(*lead, dout)
+    return y[:M, :dout]
+
+
+@functools.lru_cache(maxsize=None)
+def _lora_matmul_vjp(bm: int, bn: int):
+    """custom_vjp-wrapped fused LoRA matmul: forward runs the Pallas kernel,
+    backward is the reference math (Pallas kernels have no autodiff rule, so
+    without this the ``use_kernels=True`` train step cannot differentiate)."""
+
+    @jax.custom_vjp
+    def f(x, w, a, b, scale):
+        return _lora_matmul_fwd(x, w, a, b, scale, bm, bn)
+
+    def fwd(x, w, a, b, scale):
+        return f(x, w, a, b, scale), (x, w, a, b, scale)
+
+    def bwd(res, g):
+        x, w, a, b, scale = res
+        sc = jnp.asarray(scale, x.dtype)
+        g = g.astype(x.dtype)
+        z = x @ a.T.astype(x.dtype)                      # (M, r) recomputed
+        gz = (g @ b.astype(x.dtype)) * sc                # (M, r)
+        dx = g @ w.T + gz @ a.astype(x.dtype)
+        dw = (x.T @ g).astype(w.dtype)
+        da = (gz.T @ x).astype(a.dtype)
+        db = (g.T @ z * sc).astype(b.dtype)
+        dscale = jnp.sum(g * (z @ b.T.astype(x.dtype))).astype(
+            jnp.result_type(scale))
+        return dx, dw, da, db, jnp.reshape(dscale, jnp.shape(scale))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def lora_matmul(x, w, a, b, scale, bm: int = 128, bn: int = 128):
+    """x: (..., din) -> (..., dout), fused base + adapter matmul
+    (differentiable: reference-math backward)."""
+    lead = x.shape[:-1]
+    din = x.shape[-1]
+    y = _lora_matmul_vjp(bm, bn)(x.reshape(-1, din), w, a, b, scale)
+    return y.reshape(*lead, w.shape[1])
+
+
+def _flash_attention_fwd(q, k, v, causal, window, bq, bk):
+    S, T = q.shape[1], k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    qp, S0 = _pad_to(q, 1, bq)
+    kp, T0 = _pad_to(k, 1, bk)
+    vp, _ = _pad_to(v, 1, bk)
+    kv_len = T0 if kp.shape[1] != T0 else 0
+    out = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
+                                 bq=bq, bk=bk, kv_len=kv_len,
+                                 interpret=_interpret())
+    return out[:, :S0]
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_attention_vjp(causal: bool, window: int, bq: int, bk: int):
+    """custom_vjp: Pallas forward, oracle-math backward (Pallas kernels
+    carry no autodiff rule — without this ``use_kernels=True`` training
+    cannot differentiate through attention).  The backward differentiates
+    ``flash_jax`` — the same masking semantics as the kernel (causal and
+    window applied independently) with O(bq·bk) live score tiles, so the
+    flash memory win holds in the backward pass too; non-block-multiple
+    shapes fall back to single-chunk (dense-equivalent) tiles."""
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _flash_attention_fwd(q, k, v, causal, window, bq, bk)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        from repro.models.attention_core import flash_jax
+        q, k, v = res
+        S, T = q.shape[1], k.shape[1]
+        qc = 512 if S % 512 == 0 else S
+        kc = 1024 if T % 1024 == 0 else T
+        _, pull = jax.vjp(
+            lambda q_, k_, v_: flash_jax(
+                q_, k_, v_, causal=causal, window=window, q_chunk=qc,
+                kv_chunk=kc).astype(q.dtype), q, k, v)
+        return pull(g)
+
+    f.defvjp(fwd, bwd)
+    return f
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     bq: int = 128, bk: int = 128):
-    """GQA flash attention; falls back to the reference for tiny shapes."""
-    B, S, H, hd = q.shape
-    T = k.shape[1]
-    if S % min(bq, S) or T % min(bk, T):
-        return ref.flash_attention_ref(q, k, v, causal, window).astype(q.dtype)
-    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
-                                 bq=bq, bk=bk, interpret=_interpret())
-    return out
+    """GQA flash attention.  S/T are padded to block multiples (padded KV
+    columns are masked in-kernel via ``kv_len``, padded query rows are
+    sliced off), so the kernel path runs at ANY sequence length — no silent
+    reference fallback.  Differentiable (memory-bounded flash backward)."""
+    return _flash_attention_vjp(causal, window, bq, bk)(q, k, v)
+
+
+def ring_decode(q, k, v, pos, length, n_tokens=None, window: int = 0,
+                k_scale=None, v_scale=None, bk: int = 128):
+    """Flash-decoding over a GQA ring cache (Pallas).
+
+    q: (B,C,H,hd); k/v: (B,cap,K,hd) raw cache storage (int8 with
+    per-token (B,cap,K,1) scales fused in-kernel); pos/length/n_tokens:
+    (B,) ring state AFTER the chunk write.  The slot axis is padded to a
+    block multiple here (dtype-preserving — an int8 cache is never expanded
+    to full precision); padded slots are masked in-kernel.  (B,C,H,hd) fp32.
+    """
+    B, C = q.shape[:2]
+    cap = k.shape[1]
+    if n_tokens is None:
+        n_tokens = jnp.full((B,), C, jnp.int32)
+    bk = min(bk, cap)
+    k, _ = _pad_to(k, 1, bk)
+    v, _ = _pad_to(v, 1, bk)
+    if k_scale is not None:
+        k_scale, _ = _pad_to(k_scale, 1, bk)
+        v_scale, _ = _pad_to(v_scale, 1, bk)
+    return ring_decode_kernel(q, k, v, pos, length, n_tokens, cap=cap,
+                              k_scale=k_scale, v_scale=v_scale,
+                              window=window, bk=bk, interpret=_interpret())
+
+
+def mla_ring_decode(q_eff, c_kv, k_rope, pos, length, n_tokens=None, *,
+                    scale: float, window: int = 0,
+                    c_kv_scale=None, k_rope_scale=None, bk: int = 128):
+    """Flash-decoding over the MLA compressed-latent ring cache (Pallas).
+
+    q_eff: (B,C,H,kvr+rope) absorbed queries; c_kv/k_rope: (B,cap,·) raw
+    cache storage (int8 with per-half (B,cap,1) scales fused in-kernel);
+    ``scale`` is REQUIRED and must be the un-absorbed 1/√(nope+rope) — it
+    is not derivable from q_eff's width.  Returns out_lat (B,C,H,kvr) fp32.
+    """
+    B, C = q_eff.shape[:2]
+    cap = c_kv.shape[1]
+    if n_tokens is None:
+        n_tokens = jnp.full((B,), C, jnp.int32)
+    bk = min(bk, cap)
+    c_kv, _ = _pad_to(c_kv, 1, bk)
+    k_rope, _ = _pad_to(k_rope, 1, bk)
+    if c_kv_scale is not None:
+        c_kv_scale, _ = _pad_to(c_kv_scale, 1, bk)
+        k_rope_scale, _ = _pad_to(k_rope_scale, 1, bk)
+    return mla_ring_decode_kernel(q_eff, c_kv, k_rope, pos, length, n_tokens,
+                                  cap=cap, scale=scale,
+                                  c_kv_scale=c_kv_scale,
+                                  k_rope_scale=k_rope_scale,
+                                  window=window, bk=bk,
+                                  interpret=_interpret())
 
 
 def wkv6(r, k, v, w, u, chunk: int = 256):

@@ -24,16 +24,73 @@ def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
     qf = q.astype(jnp.float32).reshape(B, S, K, g, hd)
     s = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32))
     s = s * (1.0 / math.sqrt(hd))
-    if causal:
-        qpos = jnp.arange(S)[:, None]
+    if causal or window:        # window applies independently of causal,
+        qpos = jnp.arange(S)[:, None]   # matching the kernel's mask
         kpos = jnp.arange(T)[None, :]
-        m = kpos <= qpos
+        m = jnp.ones((S, T), jnp.bool_)
+        if causal:
+            m &= kpos <= qpos
         if window:
             m &= kpos > (qpos - window)
         s = jnp.where(m[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
     return o.reshape(B, S, H, hd)
+
+
+def _ring_mask(pos, length, cap, qpos, window):
+    from repro.models.attention_core import ring_attend_mask
+    return ring_attend_mask(pos, length, cap, qpos, window)
+
+
+def ring_decode_ref(q, k, v, pos, length, n_tokens, window: int = 0,
+                    k_scale=None, v_scale=None):
+    """Dense decode-attention oracle over a GQA ring cache.
+
+    q: (B,C,H,hd); k/v: (B,cap,K,hd) raw cache storage (int8 with
+    (B,cap,K,1) scales supported — dequantized WHOLE, in fp32);
+    pos/length/n_tokens: (B,) ring state AFTER the chunk write.  This is
+    the O(cap)-live-memory math the streamed/kernel paths are tested
+    against: full (B,H,C,cap) scores + dense (B,C,cap) ring mask.
+    """
+    B, C, H, hd = q.shape
+    cap, K = k.shape[1], k.shape[2]
+    g = H // K
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale
+        vf = vf * v_scale
+    qf = q.astype(jnp.float32).reshape(B, C, K, g, hd)
+    s = jnp.einsum("bckgh,btkh->bkgct", qf, kf) / math.sqrt(hd)
+    qpos = (pos - n_tokens)[:, None] + jnp.arange(C)[None, :]
+    mask = _ring_mask(pos, length, cap, qpos, window)        # (B,C,cap)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgct,btkh->bckgh", p, vf)
+    return o.reshape(B, C, H, hd)
+
+
+def mla_ring_decode_ref(q_eff, c_kv, k_rope, pos, length, n_tokens,
+                        scale: float, window: int = 0,
+                        c_kv_scale=None, k_rope_scale=None):
+    """Dense absorbed-MLA decode oracle over the compressed-latent ring
+    cache.  q_eff: (B,C,H,kvr+rope); c_kv: (B,cap,kvr); k_rope:
+    (B,cap,rope); returns out_lat (B,C,H,kvr) fp32."""
+    B, C, H, _ = q_eff.shape
+    cap = c_kv.shape[1]
+    ckv = c_kv.astype(jnp.float32)
+    kr = k_rope.astype(jnp.float32)
+    if c_kv_scale is not None:
+        ckv = ckv * c_kv_scale
+        kr = kr * k_rope_scale
+    keff = jnp.concatenate([ckv, kr], axis=-1)
+    s = jnp.einsum("bchd,btd->bhct", q_eff.astype(jnp.float32), keff) * scale
+    qpos = (pos - n_tokens)[:, None] + jnp.arange(C)[None, :]
+    mask = _ring_mask(pos, length, cap, qpos, window)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhct,btk->bchk", p, ckv)
 
 
 def wkv6_ref(r, k, v, w, u):

@@ -71,6 +71,155 @@ def ring_attend_mask(pos, length, cap: int, qpos, window: int = 0):
     return m
 
 
+def ring_block_mask(pos, length, n_tokens, cap: int, start, bk: int, C: int,
+                    window: int = 0):
+    """Ring attention mask for ONE kv block of ``bk`` slots at ``start``.
+
+    The in-loop (streamed / in-kernel) form of :func:`ring_attend_mask`:
+    pos/length: (B,) ring state AFTER the chunk write, ``n_tokens: (B,)``
+    real query tokens per row (query positions are recovered as
+    ``qpos = pos - n_tokens + t``).  Returns a (B, C, bk) bool mask for
+    slots ``[start, start + bk)``; slots ``>= cap`` (block padding) are
+    masked out.  Concatenating the blocks over ``start = 0, bk, 2bk, ...``
+    reproduces ``ring_attend_mask(pos, length, cap, qpos, window)`` exactly
+    (property-tested in tests/test_decode_kernels.py).
+    """
+    s = start + jnp.arange(bk)[None, :]                     # (1, bk)
+    last = (pos - 1)[:, None]
+    p_abs = last - jnp.mod(last - s, cap)                   # (B, bk)
+    resident = (p_abs >= (pos - length)[:, None]) & (s < cap)
+    qpos = (pos - n_tokens)[:, None] + jnp.arange(C)[None, :]   # (B, C)
+    m = resident[:, None, :] & (p_abs[:, None, :] <= qpos[:, :, None])
+    if window:
+        m &= p_abs[:, None, :] > (qpos[:, :, None] - window)
+    return m
+
+
+def _streamed_ring_attend(qf, kv_block, pos, length, n_tokens, cap: int,
+                          bk: int, nb: int, dv: int, window: int,
+                          scale: float):
+    """Online-softmax scan over ring-cache kv blocks.
+
+    qf: (B,C,K,g,dq) fp32; ``kv_block(start) -> (k (B,bk,K,dq),
+    v (B,bk,K,dv))`` fp32 (dequantization happens per block inside the
+    callback, so an int8 cache is never expanded whole).  Live memory is
+    O(B·H·C·bk) score tiles — never O(cap).  Returns (B,C,H,dv) fp32.
+    """
+    B, C, K, g, _ = qf.shape
+
+    def body(carry, ib):
+        m_run, l_run, acc = carry
+        start = ib * bk
+        kb, vb = kv_block(start)
+        s = jnp.einsum("bckgd,bxkd->bkgcx", qf, kb) * scale     # (B,K,g,C,bk)
+        msk = ring_block_mask(pos, length, n_tokens, cap, start, bk, C,
+                              window)                           # (B,C,bk)
+        s = jnp.where(msk[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgcx,bxkd->bkgcd", p, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, K, g, C), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, g, C), jnp.float32)
+    a0 = jnp.zeros((B, K, g, C, dv), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nb))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]              # (B,K,g,C,dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, K * g, dv)
+
+
+def _block_slice(x, start, bk):
+    return jax.lax.dynamic_slice_in_dim(x, start, bk, axis=1)
+
+
+def _pad_cap(arrs, cap: int, bk: int):
+    """Pad the slot axis (axis 1) of every array to a bk multiple (dtype-
+    preserving — an int8 cache stays int8; padded slots are masked by
+    ``s < cap`` inside :func:`ring_block_mask`)."""
+    pad = (-cap) % bk
+    if pad == 0:
+        return arrs
+    return [None if a is None else
+            jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+            for a in arrs]
+
+
+def ring_flash_decode(q, k, v, pos, length, n_tokens=None, *, window: int = 0,
+                      scale: Optional[float] = None, block: int = 128,
+                      k_scale=None, v_scale=None):
+    """Streamed (XLA flash-decoding) attention over a GQA ring cache.
+
+    q: (B,C,H,hd); k/v: (B,cap,K,hd) — RAW cache storage, possibly int8
+    with per-token absmax scales (B,cap,K,1); pos/length: (B,) ring state
+    AFTER the chunk write; n_tokens: (B,) real query tokens (None = C).
+    The ring residency ∧ causal ∧ window mask is computed per kv block
+    in-loop and int8 blocks are dequantized in-loop, so neither a dense
+    (B,C,cap) mask, a (B,H,C,cap) score tensor, nor a full-precision cache
+    copy is ever live.  Returns (B,C,H,hd) fp32 — the same math as the
+    dense oracle in :func:`repro.kernels.ref.ring_decode_ref`.
+    """
+    B, C, H, dq = q.shape
+    cap, K = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = H // K
+    if scale is None:
+        scale = 1.0 / math.sqrt(dq)
+    n = (jnp.full((B,), C, jnp.int32) if n_tokens is None
+         else n_tokens.astype(jnp.int32))
+    bk = min(block, cap)
+    nb = -(-cap // bk)
+    k, v, k_scale, v_scale = _pad_cap([k, v, k_scale, v_scale], cap, bk)
+    qf = q.astype(jnp.float32).reshape(B, C, K, g, dq)
+
+    def kv_block(start):
+        kb = _block_slice(k, start, bk).astype(jnp.float32)
+        vb = _block_slice(v, start, bk).astype(jnp.float32)
+        if k_scale is not None:
+            kb = kb * _block_slice(k_scale, start, bk)
+            vb = vb * _block_slice(v_scale, start, bk)
+        return kb, vb
+
+    return _streamed_ring_attend(qf, kv_block, pos, length, n, cap, bk, nb,
+                                 dv, window, scale)
+
+
+def mla_ring_flash_decode(q_eff, c_kv, k_rope, pos, length, n_tokens=None, *,
+                          scale: float, window: int = 0, block: int = 128,
+                          c_kv_scale=None, k_rope_scale=None):
+    """Streamed absorbed-MLA decode over the compressed-latent ring cache.
+
+    q_eff: (B,C,H,kvr+rope) absorbed queries ``[q_nope·W_k | q_rope]``;
+    c_kv: (B,cap,kvr), k_rope: (B,cap,rope) — raw cache storage (int8 with
+    (B,cap,1) per-half scales supported; each half is dequantized PER BLOCK
+    in-loop, never as a whole).  Returns out_lat (B,C,H,kvr) fp32 — the
+    caller applies the absorbed V-projection.  ``scale`` must be the
+    un-absorbed 1/√(nope+rope).
+    """
+    B, C, H, dq = q_eff.shape
+    cap, kvr = c_kv.shape[1], c_kv.shape[2]
+    n = (jnp.full((B,), C, jnp.int32) if n_tokens is None
+         else n_tokens.astype(jnp.int32))
+    bk = min(block, cap)
+    nb = -(-cap // bk)
+    c_kv, k_rope, c_kv_scale, k_rope_scale = _pad_cap(
+        [c_kv, k_rope, c_kv_scale, k_rope_scale], cap, bk)
+    qf = q_eff.astype(jnp.float32).reshape(B, C, 1, H, dq)   # MQA: K=1, g=H
+
+    def kv_block(start):
+        ckv = _block_slice(c_kv, start, bk).astype(jnp.float32)
+        kr = _block_slice(k_rope, start, bk).astype(jnp.float32)
+        if c_kv_scale is not None:
+            ckv = ckv * _block_slice(c_kv_scale, start, bk)
+            kr = kr * _block_slice(k_rope_scale, start, bk)
+        kb = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :]
+        return kb, ckv[:, :, None, :]
+
+    return _streamed_ring_attend(qf, kv_block, pos, length, n, cap, bk, nb,
+                                 kvr, window, scale)
+
+
 def flash_jax(q, k, v, *, causal: bool = True, window: int = 0,
               scale: Optional[float] = None, q_chunk: int = 512,
               kv_chunk: int = 1024, unroll: Optional[bool] = None,

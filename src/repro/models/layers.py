@@ -156,7 +156,8 @@ def attention_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None,
     if positions is None:
         positions = jnp.arange(S)
     q, k, v = _qkv(cfg, p, x, adapters, positions)
-    if use_kernel and S % 128 == 0:
+    if use_kernel:
+        # any S: ops.flash_attention pads to block multiples internally
         from repro.kernels import ops as kops
         o = kops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
     elif S % min(S, 512) == 0:
@@ -175,7 +176,7 @@ def attention_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None,
 
 
 def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
-                     n_tokens=None):
+                     n_tokens=None, decode_impl: str = "dense"):
     """Chunked cached decode with per-slot positions.
 
     x: (B,C,d) — one token (C=1) or a prefill chunk.  cache:
@@ -185,6 +186,18 @@ def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
     optionally marks how many of the C tokens are real per row (masked
     continuous batching; rows with 0 leave their cache untouched).
     Returns (out (B,C,d), new_cache).
+
+    ``decode_impl`` selects the attention interior: ``"dense"`` (the tested
+    oracle — full (B,H,C,T) scores + dense ring mask), ``"streamed"``
+    (XLA flash-decoding: online softmax over kv blocks, in-loop ring
+    masking + int8 dequant, O(block) live memory), or ``"kernel"`` (the
+    Pallas ring-flash-decode kernel — same contract, fused on TPU).  All
+    three agree on every VALID query position (``t < n_tokens[b]``); rows
+    a chunk marks invalid hold unspecified values (their outputs are
+    discarded by every caller).  int8 caveat: the dense path dequantizes
+    to bf16 (``cache_kv``) while streamed/kernel fuse an fp32 dequant per
+    block — strictly more precise, so int8 agreement is within bf16
+    tolerance rather than bit-exact.
     """
     from repro.models.attention_core import ring_attend_mask
     from repro.serve.kvcache import cache_update, cache_kv
@@ -192,15 +205,33 @@ def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
     qpos = cache["pos"][:, None] + jnp.arange(C)[None, :]     # (B,C) absolute
     q, k, v = _qkv(cfg, p, x, adapters, qpos)
     cache = cache_update(cfg, cache, k, v, n_tokens)
-    kc, vc = cache_kv(cfg, cache)
-    T = kc.shape[1]
-    scale = 1.0 / math.sqrt(cfg.head_dim)
-    s = gqa_scores_einsum(q, kc) * scale            # (B,H,C,T)
-    mask = ring_attend_mask(cache["pos"], cache["length"], T, qpos,
-                            cfg.sliding_window)     # (B,C,T) per-row
-    s = jnp.where(mask[:, None], s, -1e30)
-    w = jax.nn.softmax(s, axis=-1)
-    o = gqa_out_einsum(w, vc)
+    if decode_impl == "dense":
+        kc, vc = cache_kv(cfg, cache)
+        T = kc.shape[1]
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        s = gqa_scores_einsum(q, kc) * scale            # (B,H,C,T)
+        mask = ring_attend_mask(cache["pos"], cache["length"], T, qpos,
+                                cfg.sliding_window)     # (B,C,T) per-row
+        s = jnp.where(mask[:, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = gqa_out_einsum(w, vc)
+    else:
+        n = (jnp.full((B,), C, jnp.int32) if n_tokens is None
+             else n_tokens.astype(jnp.int32))
+        int8 = cache["k"].dtype == jnp.int8
+        kw = dict(window=cfg.sliding_window,
+                  k_scale=cache["k_scale"] if int8 else None,
+                  v_scale=cache["v_scale"] if int8 else None)
+        if decode_impl == "kernel":
+            from repro.kernels import ops as kops
+            o = kops.ring_decode(q, cache["k"], cache["v"], cache["pos"],
+                                 cache["length"], n, **kw)
+        elif decode_impl == "streamed":
+            from repro.models.attention_core import ring_flash_decode
+            o = ring_flash_decode(q, cache["k"], cache["v"], cache["pos"],
+                                  cache["length"], n, **kw)
+        else:
+            raise ValueError(f"unknown decode_impl {decode_impl!r}")
     o = o.reshape(B, C, cfg.num_heads * cfg.head_dim).astype(x.dtype)
     a = adapters or {}
     return lora_proj(o, p["wo"], a.get("wo")), cache
@@ -296,14 +327,21 @@ def mla_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None):
 
 
 def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
-               n_tokens=None):
+               n_tokens=None, decode_impl: str = "dense"):
     """MLA chunked decode — *absorbed* formulation: attention runs directly
     against the compressed latent cache (the paper-faithful MLA memory
     saving); the per-head K/V expansion ((B,T,H,·) — 17 GB/layer at
     32k×128h) is never materialized.  Scores: q_latᵀc_kv + q_ropeᵀk_rope;
     values: latent then per-head V-projection after the softmax.  x: (B,C,d)
     with per-slot cache positions; ``n_tokens: (B,)`` masks padded rows as in
-    :func:`attention_decode`."""
+    :func:`attention_decode`.
+
+    ``decode_impl``: ``"dense"`` (oracle; int8 caches are dequantized WHOLE
+    up front), ``"streamed"`` (XLA flash-decoding over latent kv blocks —
+    int8 halves dequantized per block, so serving never holds a full fp32
+    cache copy), or ``"kernel"`` (Pallas).  Agreement contract as in
+    :func:`attention_decode`.
+    """
     from repro.models.attention_core import ring_attend_mask
     from repro.serve.kvcache import mla_cache_update
     B, C, _ = x.shape
@@ -313,13 +351,6 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
     qpos = cache["pos"][:, None] + jnp.arange(C)[None, :]     # (B,C)
     q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(cfg, p, x, adapters, qpos)
     cache = mla_cache_update(cache, c_kv_t, k_rope_t, n_tokens)
-    c_kv, k_rope = cache["c_kv"], cache["k_rope"]
-    if c_kv.dtype == jnp.int8:
-        from repro.serve.kvcache import dequant
-        c_kv = dequant(c_kv, cache["c_kv_scale"])
-        k_rope = dequant(k_rope, cache["k_rope_scale"])
-    c_kv = c_kv.astype(jnp.float32)
-    k_rope = k_rope.astype(jnp.float32)
 
     a = adapters or {}
     w_kvb = p["wkv_b"]
@@ -332,14 +363,44 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
 
     q_lat = jnp.einsum("bshn,khn->bshk", q_nope.astype(jnp.float32), w_k)
     scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
-    s = (jnp.einsum("bshk,btk->bhst", q_lat, c_kv)
-         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), k_rope)) * scale
-    T = s.shape[-1]
-    mask = ring_attend_mask(cache["pos"], cache["length"], T, qpos,
-                            cfg.sliding_window)                # (B,C,T)
-    s = jnp.where(mask[:, None], s, -1e30)
-    wts = jax.nn.softmax(s, axis=-1)
-    out_lat = jnp.einsum("bhst,btk->bshk", wts, c_kv)          # (B,C,H,kvr)
+    int8 = cache["c_kv"].dtype == jnp.int8
+    if decode_impl == "dense":
+        c_kv, k_rope = cache["c_kv"], cache["k_rope"]
+        if int8:
+            from repro.serve.kvcache import dequant
+            c_kv = dequant(c_kv, cache["c_kv_scale"])
+            k_rope = dequant(k_rope, cache["k_rope_scale"])
+        c_kv = c_kv.astype(jnp.float32)
+        k_rope = k_rope.astype(jnp.float32)
+        s = (jnp.einsum("bshk,btk->bhst", q_lat, c_kv)
+             + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                          k_rope)) * scale
+        T = s.shape[-1]
+        mask = ring_attend_mask(cache["pos"], cache["length"], T, qpos,
+                                cfg.sliding_window)            # (B,C,T)
+        s = jnp.where(mask[:, None], s, -1e30)
+        wts = jax.nn.softmax(s, axis=-1)
+        out_lat = jnp.einsum("bhst,btk->bshk", wts, c_kv)      # (B,C,H,kvr)
+    else:
+        n = (jnp.full((B,), C, jnp.int32) if n_tokens is None
+             else n_tokens.astype(jnp.int32))
+        q_eff = jnp.concatenate(
+            [q_lat, q_rope.astype(jnp.float32)], axis=-1)      # (B,C,H,kvr+r)
+        kw = dict(scale=scale, window=cfg.sliding_window,
+                  c_kv_scale=cache["c_kv_scale"] if int8 else None,
+                  k_rope_scale=cache["k_rope_scale"] if int8 else None)
+        if decode_impl == "kernel":
+            from repro.kernels import ops as kops
+            out_lat = kops.mla_ring_decode(q_eff, cache["c_kv"],
+                                           cache["k_rope"], cache["pos"],
+                                           cache["length"], n, **kw)
+        elif decode_impl == "streamed":
+            from repro.models.attention_core import mla_ring_flash_decode
+            out_lat = mla_ring_flash_decode(q_eff, cache["c_kv"],
+                                            cache["k_rope"], cache["pos"],
+                                            cache["length"], n, **kw)
+        else:
+            raise ValueError(f"unknown decode_impl {decode_impl!r}")
     o = jnp.einsum("bshk,khv->bshv", out_lat, w_v)
     o = o.reshape(B, C, H * vd).astype(x.dtype)
     return lora_proj(o, p["wo"], a.get("wo")), cache

@@ -264,7 +264,7 @@ def _mask_state_rows(new_cache, old_cache, n_tokens):
 
 
 def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict,
-                  n_tokens=None):
+                  n_tokens=None, decode_impl: str = "dense"):
     """One layer, one token chunk. Returns (x, new_cache)."""
     a = a or {}
     if kind == "mamba":
@@ -286,7 +286,8 @@ def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict,
         return x + h, _mask_state_rows(cache, old, n_tokens)
     dec_fn = Lyr.mla_decode if kind.startswith("mla") else Lyr.attention_decode
     h, cache = dec_fn(cfg, p["attn"], Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps),
-                      cache, a.get("attn"), n_tokens=n_tokens)
+                      cache, a.get("attn"), n_tokens=n_tokens,
+                      decode_impl=decode_impl)
     x = x + h
     xn = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
     if kind in ("moe", "mla_moe"):
@@ -298,14 +299,18 @@ def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, a: Dict,
 
 def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
            adapters: Optional[Dict] = None,
-           n_tokens: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Tuple]:
+           n_tokens: Optional[jnp.ndarray] = None,
+           decode_impl: str = "dense") -> Tuple[jnp.ndarray, Tuple]:
     """One decode step over a token chunk. batch: {"tokens": (B,C)} (or
     frame/patch embeds); C=1 is classic single-token decode, C>1 feeds a
     whole prefill chunk through the cached path in one call.  Caches carry
     per-slot ``pos``/``length`` so every batch row rides its own ring
     offset.  ``n_tokens: (B,)`` optionally gives the real token count per
     row (None = all C; rows with 0 leave their cache untouched — inactive
-    continuous-batching slots).  Returns (logits (B,C,V), new_cache)."""
+    continuous-batching slots).  ``decode_impl`` picks the attention
+    interior of every attention/MLA layer: ``"dense"`` oracle, ``"streamed"``
+    XLA flash-decoding, or ``"kernel"`` Pallas ring-flash-decode (SSM/RWKV
+    recurrences are unaffected).  Returns (logits (B,C,V), new_cache)."""
     x = embed_inputs(cfg, params, batch)
     a_blocks = (adapters or {}).get("blocks", ())
     new_caches = []
@@ -315,7 +320,7 @@ def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
         if kind == "shared":
             sa = (adapters or {}).get("shared_blk", {})
             x, c = _block_decode(cfg, "shared", params["shared_blk"], x, cache[ci],
-                                 sa, n_tokens)
+                                 sa, n_tokens, decode_impl)
             new_caches.append(c)
             continue
         seg_a = a_blocks[seg_i] if seg_i < len(a_blocks) and a_blocks[seg_i] else {}
@@ -323,7 +328,8 @@ def decode(cfg: ModelConfig, params: Params, cache: Tuple, batch: Dict,
         def body(carry, xs, kind=kind):
             xc = carry
             p_l, a_l, c_l = xs
-            xc, c_l = _block_decode(cfg, kind, p_l, xc, c_l, a_l, n_tokens)
+            xc, c_l = _block_decode(cfg, kind, p_l, xc, c_l, a_l, n_tokens,
+                                    decode_impl)
             return xc, c_l
 
         from repro.common import flags

@@ -23,6 +23,10 @@ The host loop only admits requests, picks the step shape (chunked while any
 slot is prefilling, otherwise a ``lax.scan`` burst of width-1 steps — a
 fixed set of compiled executables, no per-step retraces), and polls
 completion flags once per burst.
+
+``decode_impl`` selects the attention interior of every step (dense oracle
+| streamed ring-flash-decode | Pallas kernel — see ``transformer.decode``);
+the executable set and retrace guarantees are identical for all three.
 """
 from __future__ import annotations
 
@@ -91,7 +95,8 @@ def sample_logits(logits: jnp.ndarray, params: SamplingParams,
 
 
 def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
-                       trace_counter: Optional[Dict[Any, int]] = None):
+                       trace_counter: Optional[Dict[Any, int]] = None,
+                       decode_impl: str = "dense"):
     """Pure engine step of fixed token ``width``: (params, adapters, cache,
     state) -> (cache, state, finished (B,) bool).  Jit this once per
     (width, stochastic).  ``stochastic=False`` compiles the greedy-only
@@ -99,7 +104,8 @@ def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
     used whenever no outstanding request samples.  (Greedy rows' outputs
     never depend on their keys, and a sampled request keeps the engine in
     the stochastic variant for its whole lifetime, so mode switches cannot
-    perturb sampled streams.)"""
+    perturb sampled streams.)  ``decode_impl`` picks the attention interior
+    (dense | streamed | kernel — see ``transformer.decode``)."""
     C = width
 
     def step(params, adapters, cache, state):
@@ -121,7 +127,7 @@ def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
                           jnp.where(active, 1, 0)).astype(jnp.int32)
 
         lg, cache = T.decode(cfg, params, cache, {"tokens": toks}, adapters,
-                             n_tokens=n_tok)
+                             n_tokens=n_tok, decode_impl=decode_impl)
         last = jnp.clip(n_tok - 1, 0, C - 1)
         logits = jnp.take_along_axis(lg, last[:, None, None], axis=1)[:, 0]
 
@@ -163,12 +169,13 @@ def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
 
 
 def _build_engine_burst(cfg: ModelConfig, steps: int, stochastic: bool = True,
-                        trace_counter: Optional[Dict[Any, int]] = None):
+                        trace_counter: Optional[Dict[Any, int]] = None,
+                        decode_impl: str = "dense"):
     """``steps`` width-1 engine steps as ONE jitted ``lax.scan`` — the
     decode hot loop with a single dispatch per burst.  Finished/inactive
     rows no-op inside the scan (n_tokens = 0), so a fixed burst length is
     safe even when a slot completes mid-burst."""
-    step = _build_engine_step(cfg, 1, stochastic)
+    step = _build_engine_step(cfg, 1, stochastic, decode_impl=decode_impl)
 
     def burst(params, adapters, cache, state):
         if trace_counter is not None:
@@ -191,12 +198,15 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, adapters: Any = None,
                  batch_slots: int = 4, capacity: int = 256,
                  kv_dtype=None, seed: int = 0, prefill_chunk: int = 8,
-                 max_tokens_cap: int = 1024):
+                 max_tokens_cap: int = 1024, decode_impl: str = "dense"):
+        if decode_impl not in ("dense", "streamed", "kernel"):
+            raise ValueError(f"unknown decode_impl {decode_impl!r}")
         self.cfg = cfg
         self.params = params
         self.adapters = adapters
         self.B = batch_slots
         self.capacity = capacity
+        self.decode_impl = decode_impl
         kv_dtype = kv_dtype or jnp.dtype(cfg.dtype)
         # SSM/RWKV recurrences step one token at a time; attention families
         # take whole chunks through the cached sequence path
@@ -357,14 +367,16 @@ class ServeEngine:
         key = (width, stochastic)
         if key not in self._step_fns:
             self._step_fns[key] = jax.jit(_build_engine_step(
-                self.cfg, width, stochastic, self.trace_counts))
+                self.cfg, width, stochastic, self.trace_counts,
+                self.decode_impl))
         return self._step_fns[key]
 
     def _get_burst(self, steps: int, stochastic: bool):
         key = ("burst", steps, stochastic)
         if key not in self._step_fns:
             self._step_fns[key] = jax.jit(_build_engine_burst(
-                self.cfg, steps, stochastic, self.trace_counts))
+                self.cfg, steps, stochastic, self.trace_counts,
+                self.decode_impl))
         return self._step_fns[key]
 
     def _prefilling(self) -> bool:

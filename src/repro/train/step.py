@@ -105,19 +105,20 @@ def make_prefill_step(cfg: ModelConfig, use_kernels: bool = False):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, decode_impl: str = "dense"):
     """Chunked decode against a per-slot KV cache: (params, adapters, cache,
     batch) -> (next_token_logits (B,V), cache).
 
     batch: {"tokens": (B,C)} plus optional {"n_tokens": (B,)} giving the
     real token count per row (chunked prefill with ragged prompt tails).
     Returns the logits at each row's LAST real token — the position the
-    next token is sampled from."""
+    next token is sampled from.  ``decode_impl`` picks the attention
+    interior (dense | streamed | kernel, see ``transformer.decode``)."""
     def serve_step(params, adapters, cache, batch):
         n = batch.get("n_tokens")
         lg, cache = T.decode(cfg, params, cache, {k: v for k, v in batch.items()
                                                   if k != "n_tokens"},
-                             adapters, n_tokens=n)
+                             adapters, n_tokens=n, decode_impl=decode_impl)
         if n is None:
             return lg[:, -1], cache
         idx = jnp.clip(n - 1, 0, lg.shape[1] - 1).astype(jnp.int32)
