@@ -1,0 +1,166 @@
+"""Bench-regression gate: fresh BENCH_*.json vs the committed trajectory.
+
+Three benchmark suites emit JSON reports in CI; this gate is what finally
+watches them.  It compares a freshly produced report against the committed
+baseline under ``benchmarks/baselines/`` and FAILS (exit 1) when a watched
+metric regresses by more than ``--tol`` (default 15%).
+
+Watched metrics are machine-speed-invariant RATIOS (speedups, arm-to-arm
+slowdowns) rather than absolute tok/s or wall seconds — a slower CI runner
+scales both arms of a ratio equally, so a >15% ratio regression means the
+CODE got slower (a tok/s or round-time regression of the optimized arm
+relative to its in-run baseline arm), not the machine.  Trace counts are
+compared exactly: a single extra compile in the serving hot loop is a
+regression no tolerance should absorb.
+
+Regenerate baselines intentionally (after an accepted perf change)::
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+        --json benchmarks/baselines/BENCH_serve.json
+
+Usage (CI)::
+
+    python benchmarks/bench_gate.py --suite serve --fresh BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# suite -> [(dotted metric path, direction)]; "higher" = bigger is better
+WATCHED = {
+    "serve": [
+        ("speedup_jit_vs_eager", "higher"),
+        ("speedup_chunked_vs_width1", "higher"),
+        ("decode_impl_axis.speedup_streamed_vs_dense", "higher"),
+        ("multi_adapter_axis.slowdown_32_vs_1", "lower"),
+    ],
+    "fed": [
+        ("speedup_cohort_vs_sequential", "higher"),
+    ],
+    "kernels": [
+        ("decode.speedup_streamed_vs_dense_fp32", "higher"),
+        ("decode.speedup_streamed_vs_dense_int8", "higher"),
+    ],
+    "agg": [
+        ("speedup_batched_vs_loop", "higher"),
+    ],
+}
+
+# suite -> dotted paths of {arm: {trace_key: count}} dicts compared exactly
+TRACE_PATHS = {
+    "serve": ["trace_counts",
+              "multi_adapter_axis.adapters_1.trace_counts",
+              "multi_adapter_axis.adapters_8.trace_counts",
+              "multi_adapter_axis.adapters_32.trace_counts"],
+}
+
+DEFAULT_BASELINE = {
+    "serve": "BENCH_serve.json",
+    "fed": "BENCH_fed.json",
+    "kernels": "BENCH_kernels.json",
+    "agg": "agg_bench.json",
+}
+
+
+def _get(report, dotted):
+    node = report
+    for k in dotted.split("."):
+        if not isinstance(node, dict) or k not in node:
+            return None
+        node = node[k]
+    return node
+
+
+def _trace_total(node):
+    """Sum of all integer trace counts in an {arm: {key: n}} subtree."""
+    if isinstance(node, bool):
+        return 0
+    if isinstance(node, int):
+        return node
+    if isinstance(node, dict):
+        return sum(_trace_total(v) for v in node.values())
+    return 0
+
+
+def check(suite: str, fresh: dict, baseline: dict, tol: float):
+    failures, checked = [], 0
+    for path, direction in WATCHED[suite]:
+        base = _get(baseline, path)
+        new = _get(fresh, path)
+        if base is None:
+            print(f"  ~ {path}: not in baseline, skipped "
+                  "(regenerate baselines to start watching it)")
+            continue
+        if new is None:
+            failures.append(f"{path}: present in baseline but MISSING from "
+                            "the fresh report")
+            continue
+        checked += 1
+        if direction == "higher":
+            ok = new >= base * (1.0 - tol)
+            verdict = f"{new} vs baseline {base} (floor {base * (1 - tol):.3f})"
+        else:
+            ok = new <= base * (1.0 + tol)
+            verdict = f"{new} vs baseline {base} (ceiling {base * (1 + tol):.3f})"
+        mark = "ok" if ok else "REGRESSED"
+        print(f"  {'+' if ok else '!'} {path} [{direction}]: {verdict} -> {mark}")
+        if not ok:
+            failures.append(f"{path}: {verdict}")
+
+    for path in TRACE_PATHS.get(suite, []):
+        base = _trace_total(_get(baseline, path))
+        new = _trace_total(_get(fresh, path))
+        if base == 0 and new == 0:
+            continue
+        checked += 1
+        ok = new <= base
+        print(f"  {'+' if ok else '!'} {path} trace total: {new} vs "
+              f"baseline {base} -> {'ok' if ok else 'RETRACE REGRESSION'}")
+        if not ok:
+            failures.append(f"{path}: trace count grew {base} -> {new} "
+                            "(a new compile in the hot loop)")
+    return failures, checked
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", required=True, choices=sorted(WATCHED),
+                    help="which benchmark report to gate")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced report JSON")
+    ap.add_argument("--baseline", default="",
+                    help="committed baseline JSON (default: "
+                         "benchmarks/baselines/<suite file>)")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="allowed fractional regression on ratio metrics")
+    args = ap.parse_args()
+
+    baseline_path = args.baseline or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baselines",
+        DEFAULT_BASELINE[args.suite])
+    if not os.path.exists(baseline_path):
+        print(f"bench_gate: no committed baseline at {baseline_path} — "
+              "commit one (see module docstring) so the trajectory is watched")
+        return 1
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    print(f"bench_gate[{args.suite}]: {args.fresh} vs {baseline_path} "
+          f"(tol {args.tol:.0%})")
+    failures, checked = check(args.suite, fresh, baseline, args.tol)
+    if failures:
+        print(f"bench_gate[{args.suite}]: {len(failures)} regression(s):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"bench_gate[{args.suite}]: {checked} metric(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

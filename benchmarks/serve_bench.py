@@ -15,7 +15,14 @@ Arms over the same continuous-batching workload:
 The report's ``decode_impl`` axis compares the streamed hot loop against
 the dense oracle (``speedup_streamed_vs_dense`` — must not regress).  Also
 verifies every jitted arm compiles ONCE per executable (no per-step
-retraces after warmup).  Emits JSON for CI artifacts::
+retraces after warmup).
+
+The ``multi_adapter`` axis serves the same workload through the
+multi-tenant registry (``repro.serve.adapters``) with 1 / 8 / 32 live
+adapters of mixed ranks, requests round-robining across them; it reports
+per-arm tok/s, the 32-vs-1 slowdown ratio, and the trace counts — with a
+registry hot-swap between the warmup and timed passes to prove adapter
+churn causes zero retraces.  Emits JSON for CI artifacts::
 
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
 """
@@ -114,20 +121,76 @@ class EagerLoop:
         return results
 
 
-def workload(engine, n_req, prompt_len, gen, rng):
+def workload(engine, n_req, prompt_len, gen, rng, adapter_ids=None):
     # temperature sampling: the production path (the seed loop pays ~8 eager
     # dispatches + a host sync per slot per token here; the jitted step pays
     # zero extra — sampling compiles into the engine step)
     sp = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, max_tokens=gen)
     uids = []
-    for _ in range(n_req):
+    for r in range(n_req):
         p = rng.integers(1, engine.cfg.vocab_size, prompt_len).tolist()
-        uids.append(engine.submit(p, sp))
+        if adapter_ids:
+            uids.append(engine.submit(p, sp,
+                                      adapter_id=adapter_ids[r % len(adapter_ids)]))
+        else:
+            uids.append(engine.submit(p, sp))
     t0 = time.perf_counter()
     out = engine.run()
     dt = time.perf_counter() - t0
     total = sum(len(out[u]) for u in uids)
     return dt, total
+
+
+def multi_adapter_axis(cfg, params, args, gen, capacity, rng):
+    """1 / 8 / 32 live mixed-rank adapters through ONE engine each: tok/s
+    per arm + trace counts, with a hot-swap between warmup and the timed
+    pass to prove registry churn never retraces."""
+    from repro.configs import lora_targets
+    from repro.peft.lora import init_lora
+    from repro.serve.adapters import AdapterRegistry
+
+    key = jax.random.PRNGKey(7)
+    template = init_lora(params, lora_targets(cfg), 4, 8.0, key)
+    ranks = [4, 8, 2, 6]
+    axis = {}
+    for n_ad in (1, 8, 32):
+        reg = AdapterRegistry(template, page_rank=4, num_pages=2 * n_ad + 6,
+                              max_adapters=n_ad + 3, max_rank=8)
+        ids = [reg.register(
+            f"t{j}", init_lora(params, lora_targets(cfg), ranks[j % len(ranks)],
+                               8.0, jax.random.fold_in(key, j)))
+            for j in range(n_ad)]
+        eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                          capacity=capacity, prefill_chunk=args.chunk,
+                          registry=reg)
+        dt, total = workload(eng, args.requests, args.prompt_len, gen, rng,
+                             adapter_ids=ids)
+        warm_traces = dict(eng.trace_counts)
+        # registry churn between passes: the timed pass runs against swapped
+        # pool contents with the SAME executables
+        ids[0] = reg.swap("t0", init_lora(params, lora_targets(cfg), 8, 8.0,
+                                          jax.random.fold_in(key, 999)))
+        dt2, _ = workload(eng, args.requests, args.prompt_len, gen, rng,
+                          adapter_ids=ids)
+        assert dict(eng.trace_counts) == warm_traces, (
+            f"multi_adapter[{n_ad}]: registry churn retraced "
+            f"({warm_traces} -> {dict(eng.trace_counts)})")
+        dt = min(dt, dt2)
+        axis[f"adapters_{n_ad}"] = {
+            "wall_s": round(dt, 4), "tokens": total,
+            "tok_per_s": round(total / dt, 2),
+            "live_adapters": n_ad,
+            "ranks": [ranks[j % len(ranks)] for j in range(min(n_ad, 4))],
+            "trace_counts": {str(k): v for k, v in warm_traces.items()},
+        }
+        print(f"multi_adapter[{n_ad:2d}]     {total:5d} tokens in {dt:7.3f}s "
+              f"({total / dt:8.1f} tok/s)")
+    t1 = axis["adapters_1"]["tok_per_s"]
+    t32 = axis["adapters_32"]["tok_per_s"]
+    axis["slowdown_32_vs_1"] = round(t1 / t32, 2)
+    axis["retraces_stable_under_churn"] = True
+    print(f"multi-adapter slowdown (32 vs 1 live): {t1 / t32:.2f}x")
+    return axis
 
 
 def main() -> None:
@@ -195,6 +258,8 @@ def main() -> None:
     print(f"streamed decode vs dense: {jitS / jitN:.2f}x")
     print(f"trace counts (stable across runs): {trace_counts}")
 
+    multi_axis = multi_adapter_axis(cfg, params, args, gen, capacity, rng)
+
     report = {
         "config": {"model": cfg.name, "batch_slots": args.slots,
                    "requests": args.requests, "prompt_len": args.prompt_len,
@@ -205,6 +270,7 @@ def main() -> None:
         "decode_impl_axis": {
             "dense": jitN, "streamed": jitS,
             "speedup_streamed_vs_dense": round(jitS / jitN, 2)},
+        "multi_adapter_axis": multi_axis,
         "speedup_jit_vs_eager": round(speedup, 2),
         "speedup_chunked_vs_width1": round(jitN / jit1, 2),
         "trace_counts": {arm: {str(k): v for k, v in c.items()}

@@ -1,0 +1,83 @@
+"""Batched-gather LoRA delta kernel (BGMV): y_b = scale_b · B_b (A_b x_b).
+
+Multi-tenant decode applies a DIFFERENT adapter to every batch row.  The
+adapters live in paged pools (``repro.serve.adapters``): A-pages
+(n_pages, page_rank, din), B-pages (n_pages, dout, page_rank), and each
+row's indirection row ``tbl[b]`` lists the pages holding its adapter.  The
+kernel walks grid (B, Pmax) — row outer, page-slot inner — and for each
+(b, j) gathers page ``tbl[b, j]`` via a scalar-prefetch index map, so the
+page fetch is a data-dependent block DMA, not an XLA gather materializing
+(B, R, din) copies of the pools in HBM.
+
+Rank raggedness is handled in-kernel: lane ℓ of page-slot j is the global
+lane j·page_rank + ℓ, masked unless it is < rank_b.  A rank-0 row (the
+reserved base-model id 0, or an evicted id) contributes an exact zero —
+its padded table entries point at page 0, whose gathered values are fully
+masked.  The rank-r intermediate z never round-trips HBM.
+
+Grid order note: the output block (b) is revisited across consecutive j
+steps, which is the Pallas accumulation pattern; when Pmax == 1 (rank ≤
+page_rank, the common case) consecutive rows serving the SAME adapter map
+to the same A/B page blocks and Pallas skips the redundant DMAs.
+
+Inference-only: no custom_vjp (serving never differentiates; training uses
+``lora_matmul``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tbl_ref, rnk_ref, scl_ref, x_ref, a_ref, b_ref, o_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    pr = a_ref.shape[1]
+    x = x_ref[0]                                           # (C, din)
+    z = jnp.dot(x, a_ref[0].T, preferred_element_type=jnp.float32)  # (C, pr)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, pr), 1) + j * pr
+    z = jnp.where(lane < rnk_ref[b], z, 0.0)
+    acc = jnp.dot(z, b_ref[0].astype(jnp.float32).T,
+                  preferred_element_type=jnp.float32)      # (C, dout)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] += acc * scl_ref[b]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bgmv_kernel(x, a_pages, b_pages, row_tbl, row_rank, row_scale,
+                interpret: bool = False):
+    """x: (B, C, din); a_pages: (P, pr, din); b_pages: (P, dout, pr);
+    row_tbl: (B, Pmax) i32 page indices; row_rank: (B,) i32 effective
+    ranks; row_scale: (B,) f32.  Returns (B, C, dout) f32 deltas."""
+    B, C, din = x.shape
+    P, pr, _ = a_pages.shape
+    dout = b_pages.shape[1]
+    Pmax = row_tbl.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Pmax),
+        in_specs=[
+            pl.BlockSpec((1, C, din), lambda b, j, tbl, rnk, scl: (b, 0, 0)),
+            pl.BlockSpec((1, pr, din),
+                         lambda b, j, tbl, rnk, scl: (tbl[b, j], 0, 0)),
+            pl.BlockSpec((1, dout, pr),
+                         lambda b, j, tbl, rnk, scl: (tbl[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, dout),
+                               lambda b, j, tbl, rnk, scl: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, dout), jnp.float32),
+        interpret=interpret,
+    )(row_tbl.astype(jnp.int32), row_rank.astype(jnp.int32),
+      row_scale.astype(jnp.float32), x, a_pages, b_pages)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.adapter_gram import adapter_gram_kernel
+from repro.kernels.bgmv import bgmv_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.lora_matmul import lora_matmul_kernel
 from repro.kernels.mla_ring_decode import mla_ring_decode_kernel
@@ -195,6 +196,22 @@ def mla_ring_decode(q_eff, c_kv, k_rope, pos, length, n_tokens=None, *,
                                   k_rope_scale=k_rope_scale,
                                   window=window, bk=bk,
                                   interpret=_interpret())
+
+
+def bgmv(x, a_pages, b_pages, table, rank, scale, ids):
+    """Batched-gather multi-tenant LoRA delta (Pallas): per-row
+    y_b = scale_b · B_b(A_b x_b) gathered from the paged adapter pools at
+    each row's own rank.
+
+    x: (B, C, din); a_pages: (P, pr, din); b_pages: (P, dout, pr);
+    table: (maxA, Pmax) adapter→pages indirection; rank/scale: (maxA,);
+    ids: (B,) per-row adapter ids (0 = base, exact-zero delta).
+    Returns (B, C, dout) f32.  Inference-only — no autodiff rule.
+    """
+    ids = ids.astype(jnp.int32)
+    return bgmv_kernel(x, a_pages, b_pages, table[ids], rank[ids],
+                       scale.astype(jnp.float32)[ids],
+                       interpret=_interpret())
 
 
 def wkv6(r, k, v, w, u, chunk: int = 256):

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import ModelConfig
-from repro.peft.lora import lora_proj
+from repro.peft.lora import PagedLoRA, lora_proj, paged_delta_weight
 
 Params = Dict[str, Any]
 
@@ -306,6 +306,10 @@ def mla_fwd(cfg: ModelConfig, p: Params, x, adapters=None, positions=None):
     if S % min(S, 512) == 0:
         w_kvb = p["wkv_b"]
         a_kvb = (adapters or {}).get("wkv_b")
+        if isinstance(a_kvb, PagedLoRA):
+            raise NotImplementedError(
+                "paged multi-tenant adapters only run through the decode "
+                "path (mla_decode); mla_fwd is the training/full-seq path")
         if a_kvb is not None:   # fold the LoRA delta into the absorbed weight
             w_kvb = w_kvb + ((a_kvb["B"] @ a_kvb["A"]).T
                              * a_kvb["scale"]).astype(w_kvb.dtype)
@@ -355,13 +359,22 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
     a = adapters or {}
     w_kvb = p["wkv_b"]
     a_kvb = a.get("wkv_b")
-    if a_kvb is not None:        # fold LoRA delta into the absorbed weight
-        w_kvb = w_kvb + ((a_kvb["B"] @ a_kvb["A"]).T
-                         * a_kvb["scale"]).astype(w_kvb.dtype)
-    w = w_kvb.reshape(kvr, H, nope + vd).astype(jnp.float32)
-    w_k, w_v = w[..., :nope], w[..., nope:]
-
-    q_lat = jnp.einsum("bshn,khn->bshk", q_nope.astype(jnp.float32), w_k)
+    if isinstance(a_kvb, PagedLoRA):
+        # multi-tenant: every batch row folds ITS OWN adapter's delta into
+        # the absorbed weight, so the latent projections become per-row
+        w = (w_kvb.astype(jnp.float32)[None] + paged_delta_weight(a_kvb)
+             ).reshape(B, kvr, H, nope + vd)
+        w_k, w_v = w[..., :nope], w[..., nope:]
+        q_lat = jnp.einsum("bshn,bkhn->bshk", q_nope.astype(jnp.float32), w_k)
+        v_ein = "bshk,bkhv->bshv"
+    else:
+        if a_kvb is not None:    # fold LoRA delta into the absorbed weight
+            w_kvb = w_kvb + ((a_kvb["B"] @ a_kvb["A"]).T
+                             * a_kvb["scale"]).astype(w_kvb.dtype)
+        w = w_kvb.reshape(kvr, H, nope + vd).astype(jnp.float32)
+        w_k, w_v = w[..., :nope], w[..., nope:]
+        q_lat = jnp.einsum("bshn,khn->bshk", q_nope.astype(jnp.float32), w_k)
+        v_ein = "bshk,khv->bshv"
     scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
     int8 = cache["c_kv"].dtype == jnp.int8
     if decode_impl == "dense":
@@ -401,7 +414,7 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
                                             cache["length"], n, **kw)
         else:
             raise ValueError(f"unknown decode_impl {decode_impl!r}")
-    o = jnp.einsum("bshk,khv->bshv", out_lat, w_v)
+    o = jnp.einsum(v_ein, out_lat, w_v)
     o = o.reshape(B, C, H * vd).astype(x.dtype)
     return lora_proj(o, p["wo"], a.get("wo")), cache
 

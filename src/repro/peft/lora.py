@@ -9,6 +9,11 @@ so that the effective update is ``ΔWᵀ = (B A)ᵀ``:
 ``B`` is zero-initialized and ``A`` is Gaussian (Hu et al. 2022), so training
 starts at the base model.  When model layers are stacked for
 ``lax.scan`` (leading ``L`` axis), adapters carry the same leading axis.
+
+Multi-tenant serving (``repro.serve.adapters``) replaces the per-leaf
+``{"A", "B", "scale"}`` dict with a :class:`PagedLoRA` leaf — fixed-shape
+paged pools plus per-batch-row adapter ids — so one jitted decode step
+applies every row's OWN adapter at its own effective rank.
 """
 from __future__ import annotations
 
@@ -21,16 +26,136 @@ import jax.numpy as jnp
 USE_KERNEL: bool = False
 
 
-def lora_proj(x: jnp.ndarray, w: jnp.ndarray, adapter: Optional[Dict] = None) -> jnp.ndarray:
-    """y = x @ w (+ LoRA delta). x: (..., in), w: (in, out)."""
+@jax.tree_util.register_pytree_node_class
+class PagedLoRA:
+    """One LoRA-bearing leaf of a multi-tenant *paged* adapter store.
+
+    Built per serve step by :func:`repro.serve.adapters.attach`; consumed by
+    :func:`lora_proj`, which applies each batch row's own adapter at its own
+    effective rank with branch-free gathered math.
+
+    Array children (scanned leaves carry a leading layer axis ``L`` added by
+    ``attach`` so ``lax.scan`` over layers unstacks every child):
+
+    ==========  ==========================  =====================================
+    child       shape                       meaning
+    ==========  ==========================  =====================================
+    a_pages     (P, page_rank, din)         paged A rows, page p = ranks
+                                            [j·pr, (j+1)·pr) of its owner
+    b_pages     (P, dout, page_rank)        paged B columns, same layout
+    scale       (maxA,)                     per-adapter alpha/r
+    table       (maxA, Pmax)                page indirection per adapter
+    rank        (maxA,)                     effective rank (0 = base / masked)
+    ids         (B,)                        per-batch-row adapter id (0 = base)
+    ==========  ==========================  =====================================
+
+    Static aux data: ``impl`` — ``"xla"`` (gather/einsum twin, the dense
+    oracle, bit-identical to the classic single-tenant math) or ``"kernel"``
+    (the Pallas bgmv kernel, ``repro.kernels.bgmv``).
+    """
+
+    def __init__(self, a_pages, b_pages, scale, table, rank, ids,
+                 impl: str = "xla"):
+        self.a_pages = a_pages
+        self.b_pages = b_pages
+        self.scale = scale
+        self.table = table
+        self.rank = rank
+        self.ids = ids
+        self.impl = impl
+
+    def tree_flatten(self):
+        return ((self.a_pages, self.b_pages, self.scale, self.table,
+                 self.rank, self.ids), self.impl)
+
+    @classmethod
+    def tree_unflatten(cls, impl, children):
+        return cls(*children, impl=impl)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"PagedLoRA(P={self.a_pages.shape[-3]}, "
+                f"pr={self.a_pages.shape[-2]}, impl={self.impl!r})")
+
+
+def _paged_gather(ad: PagedLoRA):
+    """Gather each row's pages into dense per-row panels.
+
+    Returns (Ag (B, R, din), Bg (B, dout, R), rank_b (B,), scale_b (B,))
+    with R = Pmax·page_rank; lane ordering matches page order so lane
+    ``l`` is rank index ``l`` of the row's adapter."""
+    pt = ad.table[ad.ids]                               # (B, Pmax)
+    B_, Pmax = pt.shape
+    P, pr, din = ad.a_pages.shape
+    dout = ad.b_pages.shape[1]
+    R = Pmax * pr
+    Ag = ad.a_pages[pt].reshape(B_, R, din)
+    Bg = jnp.moveaxis(ad.b_pages[pt], 2, 1).reshape(B_, dout, R)
+    return Ag, Bg, ad.rank[ad.ids], ad.scale[ad.ids]
+
+
+def paged_lora_delta(x: jnp.ndarray, ad: PagedLoRA) -> jnp.ndarray:
+    """Per-row LoRA delta  Δy_b = scale_b · (x_b A_bᵀ) B_bᵀ.
+
+    x: (B, C, din) — one continuous-batching token chunk; row ``b`` applies
+    adapter ``ids[b]`` at its own effective rank (lanes ≥ rank are masked,
+    so stale page contents from evicted adapters can never leak).  The
+    ``"xla"`` twin is bit-identical to the classic single-tenant
+    ``lora_proj`` math (masked lanes contribute exact zeros); ``"kernel"``
+    runs the Pallas bgmv kernel (fp32 accumulation, within tolerance).
+    """
+    if x.ndim != 3:
+        raise ValueError("paged multi-tenant adapters are a decode-path "
+                         f"feature: expected x of rank 3 (B, C, din), got "
+                         f"shape {x.shape}")
+    if ad.impl == "kernel":
+        from repro.kernels import ops as kops
+        return kops.bgmv(x, ad.a_pages, ad.b_pages, ad.table, ad.rank,
+                         ad.scale, ad.ids).astype(x.dtype)
+    Ag, Bg, rank_b, scale_b = _paged_gather(ad)
+    R = Ag.shape[1]
+    z = jnp.einsum("bcd,brd->bcr", x, Ag.astype(x.dtype))
+    z = jnp.where(jnp.arange(R)[None, None, :] < rank_b[:, None, None],
+                  z, jnp.zeros((), x.dtype))
+    return (jnp.einsum("bcr,bor->bco", z, Bg.astype(x.dtype))
+            * scale_b[:, None, None].astype(x.dtype))
+
+
+def paged_delta_weight(ad: PagedLoRA) -> jnp.ndarray:
+    """Per-row dense ΔW_b = scale_b · (B_b A_b)ᵀ: (B, din, dout).
+
+    The paged counterpart of folding a LoRA delta into a base weight — used
+    by the MLA absorbed-decode path, where the ``wkv_b`` adapter must merge
+    into the absorbed projection per batch row.  Materializes per-row
+    weights (B · din · dout), so it is the dense fallback, not a fast path.
+    """
+    Ag, Bg, rank_b, scale_b = _paged_gather(ad)
+    R = Ag.shape[1]
+    lane = jnp.arange(R)[None, :, None]
+    Ag = jnp.where(lane < rank_b[:, None, None], Ag, 0.0)
+    delta = jnp.einsum("bor,brd->bdo", Bg.astype(jnp.float32),
+                       Ag.astype(jnp.float32))
+    return delta * scale_b[:, None, None]
+
+
+def lora_proj(x: jnp.ndarray, w: jnp.ndarray, adapter: Optional[Any] = None) -> jnp.ndarray:
+    """y = x @ w (+ LoRA delta). x: (..., in), w: (in, out).
+
+    ``adapter`` is ``None`` (base model — NO adapter math is traced, the
+    compiled step contains no LoRA dots), a classic ``{"A", "B", "scale"}``
+    leaf, or a :class:`PagedLoRA` multi-tenant leaf (per-row adapters).
+    """
     if adapter is None:
         return x @ w
+    if isinstance(adapter, PagedLoRA):
+        with jax.named_scope("lora_delta"):
+            return x @ w + paged_lora_delta(x, adapter)
     if USE_KERNEL and x.ndim == 3:
         from repro.kernels import ops as kops
         return kops.lora_matmul(x, w, adapter["A"], adapter["B"], adapter["scale"])
     y = x @ w
-    z = x @ adapter["A"].T.astype(x.dtype)
-    y = y + (z @ adapter["B"].T.astype(x.dtype)) * adapter["scale"].astype(x.dtype)
+    with jax.named_scope("lora_delta"):
+        z = x @ adapter["A"].T.astype(x.dtype)
+        y = y + (z @ adapter["B"].T.astype(x.dtype)) * adapter["scale"].astype(x.dtype)
     return y
 
 

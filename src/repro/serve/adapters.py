@@ -1,0 +1,353 @@
+"""Multi-tenant adapter serving: registry + paged on-device adapter store.
+
+FLoRIST's server mints one compact global low-rank adapter per
+cohort/task/round — at production scale many of them are live at once, and
+heterogeneous ranks are intrinsic (FLoRA stacking and AFLoRA resource-aware
+per-client ranks both produce adapters whose rank varies per tenant and per
+round).  This module lets ONE :class:`repro.serve.engine.ServeEngine` serve
+them all in one continuous batch:
+
+* **Paged adapter store.**  Adapters live on-device in fixed-shape paged
+  pools: one ``(L?, n_pages, page_rank, din)`` A-pool and one
+  ``(L?, n_pages, dout, page_rank)`` B-pool per LoRA-bearing leaf (``L`` is
+  the layer-stack axis of scanned leaves).  An adapter of rank ``r``
+  occupies ``ceil(r / page_rank)`` pages via an indirection table, so
+  registering / evicting / swapping an adapter of ANY rank never changes an
+  array shape — zero retraces — and never touches pages held by other
+  adapters, so in-flight requests (which pin their adapter *id*) are never
+  perturbed.
+
+* **:class:`AdapterRegistry`** — host-side bookkeeping (name → id,
+  versions, free pages, per-adapter rank/scale metadata) over those pools.
+  ``register(name, adapters) -> adapter_id``, ``evict(name_or_id)``,
+  ``swap(name, adapters) -> new_id`` (atomic version bump: the new version
+  gets fresh pages and a fresh id; the old id keeps serving in-flight rows
+  until evicted).
+
+* **:func:`attach`** — builds the adapter tree the model consumes: every
+  pool leaf becomes a :class:`repro.peft.lora.PagedLoRA` carrying pools +
+  indirection + the per-batch-row id table; scanned leaves get the layer
+  axis broadcast onto the shared tables so ``lax.scan`` over layers
+  unstacks every child cleanly.
+
+Adapter id **0 is reserved** for "base model, no adapter": its rank entry
+is pinned to 0, so every lane of its delta is masked to an exact zero in
+both the XLA twin and the bgmv kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.peft.lora import PagedLoRA
+
+
+def _is_adapter_leaf(node: Any) -> bool:
+    return isinstance(node, dict) and "A" in node and "B" in node
+
+
+def _map_adapter_leaves(fn: Callable, node: Any) -> Any:
+    """Map ``fn`` over every ``{"A", "B", ...}`` leaf-dict of an adapter (or
+    pool) tree, preserving the surrounding container structure."""
+    if _is_adapter_leaf(node):
+        return fn(node)
+    if isinstance(node, dict):
+        return {k: _map_adapter_leaves(fn, v) for k, v in node.items()}
+    if isinstance(node, (tuple, list)):
+        return type(node)(_map_adapter_leaves(fn, v) for v in node)
+    return node
+
+
+def _walk_adapter_leaves(node: Any, path=()):
+    """Yield (path, leaf_dict) for every adapter leaf, in deterministic
+    order: dict keys sorted (matching jax pytree key order, so trees that
+    differ only in dict insertion order walk identically)."""
+    if _is_adapter_leaf(node):
+        yield path, node
+        return
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from _walk_adapter_leaves(node[k], path + (k,))
+    elif isinstance(node, (tuple, list)):
+        for i, v in enumerate(node):
+            yield from _walk_adapter_leaves(v, path + (i,))
+
+
+def attach(device_state: Dict[str, Any], ids, impl: str = "xla"):
+    """Build the adapter tree a decode step consumes from the registry's
+    device state and the engine's per-slot ``ids: (B,)`` table.
+
+    Every pool leaf becomes a :class:`PagedLoRA`; stacked leaves (A-pool of
+    rank 4: ``(L, P, pr, din)``) get ``table`` / ``rank`` / ``ids``
+    broadcast to a leading ``L`` axis so the model's ``lax.scan`` over
+    layers unstacks them alongside the pools.  Pure tracing-time structure:
+    the broadcasts are free under jit.
+    """
+    if impl not in ("xla", "kernel"):
+        raise ValueError(f"unknown paged-LoRA impl {impl!r}")
+    table, rank = device_state["table"], device_state["rank"]
+    ids = jnp.asarray(ids, jnp.int32)
+
+    def mk(leaf):
+        a = leaf["A"]
+        if a.ndim == 4:                                  # stacked (L,P,pr,din)
+            L = a.shape[0]
+            return PagedLoRA(
+                a, leaf["B"], leaf["scale"],
+                jnp.broadcast_to(table, (L,) + table.shape),
+                jnp.broadcast_to(rank, (L,) + rank.shape),
+                jnp.broadcast_to(ids, (L,) + ids.shape), impl=impl)
+        return PagedLoRA(a, leaf["B"], leaf["scale"], table, rank, ids,
+                         impl=impl)
+
+    return _map_adapter_leaves(mk, device_state["pools"])
+
+
+def is_device_state(adapters: Any) -> bool:
+    """Whether ``adapters`` is a registry device-state dict (pools + tables)
+    rather than a classic single-tenant adapter tree."""
+    return (isinstance(adapters, dict) and "pools" in adapters
+            and "table" in adapters and "rank" in adapters)
+
+
+class AdapterRegistry:
+    """Registry of live adapters over fixed-shape paged device pools.
+
+    ``template`` is any adapter tree with the structure the engine will
+    serve (e.g. a round's ``global_adapters``) — only its leaf *shapes*
+    matter (din/dout per leaf and the layer-stack axis); its values are NOT
+    registered.
+
+    Parameters
+    ----------
+    page_rank:   ranks per page — an adapter of rank r spans
+                 ``ceil(r / page_rank)`` pages.
+    num_pages:   pool capacity in pages (shared by all adapters).
+    max_adapters: id-table capacity, *including* the reserved base id 0.
+    max_rank:    largest registrable rank; fixes the indirection-table width
+                 ``Pmax = ceil(max_rank / page_rank)``.
+    """
+
+    def __init__(self, template: Any, *, page_rank: int = 4,
+                 num_pages: int = 64, max_adapters: int = 16,
+                 max_rank: int = 32):
+        if page_rank < 1 or num_pages < 1 or max_adapters < 2:
+            raise ValueError("page_rank/num_pages >= 1 and max_adapters >= 2"
+                             " required")
+        self.page_rank = page_rank
+        self.num_pages = num_pages
+        self.max_adapters = max_adapters
+        self.max_rank = max_rank
+        self.pages_max = max(1, math.ceil(max_rank / page_rank))
+
+        def mk_pool(leaf):
+            a, b = leaf["A"], leaf["B"]
+            if a.ndim == 3:                              # stacked (L, r, din)
+                L, _, din = a.shape
+                dout = b.shape[1]
+                return {
+                    "A": jnp.zeros((L, num_pages, page_rank, din), a.dtype),
+                    "B": jnp.zeros((L, num_pages, dout, page_rank), b.dtype),
+                    "scale": jnp.zeros((L, max_adapters), jnp.float32),
+                }
+            din = a.shape[1]
+            dout = b.shape[0]
+            return {
+                "A": jnp.zeros((num_pages, page_rank, din), a.dtype),
+                "B": jnp.zeros((num_pages, dout, page_rank), b.dtype),
+                "scale": jnp.zeros((max_adapters,), jnp.float32),
+            }
+
+        self._pools = _map_adapter_leaves(mk_pool, template)
+        self._leaf_paths = [p for p, _ in _walk_adapter_leaves(template)]
+        if not self._leaf_paths:
+            raise ValueError("template adapter tree has no {'A','B'} leaves")
+        self._table = jnp.zeros((max_adapters, self.pages_max), jnp.int32)
+        self._rank = jnp.zeros((max_adapters,), jnp.int32)  # id 0 stays 0
+        self._free_pages: List[int] = list(range(num_pages))
+        self._free_ids: List[int] = list(range(1, max_adapters))
+        # id -> {"name", "rank", "pages", "version", "retired"}
+        self._meta: Dict[int, Dict[str, Any]] = {}
+        self._names: Dict[str, int] = {}            # name -> current id
+        self._versions: Dict[str, List[int]] = {}   # name -> id history
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def device_state(self) -> Dict[str, Any]:
+        """The pytree a serve step takes as its ``adapters`` argument:
+        fixed structure and shapes across any register/evict/swap churn."""
+        return {"pools": self._pools, "table": self._table, "rank": self._rank}
+
+    @property
+    def num_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def live_ids(self) -> List[int]:
+        return sorted(self._meta)
+
+    def resolve(self, name: str) -> int:
+        """Current adapter id serving ``name`` (post-swap: the new version)."""
+        return self._names[name]
+
+    def is_live(self, adapter_id: int) -> bool:
+        """Whether ``adapter_id`` is servable: the reserved base id 0, or a
+        registered (possibly swap-retired, not yet evicted) adapter."""
+        return adapter_id == 0 or adapter_id in self._meta
+
+    def metadata(self, adapter_id: int) -> Dict[str, Any]:
+        return dict(self._meta[adapter_id])
+
+    # -- lifecycle -------------------------------------------------------------
+    def register(self, name: str, adapters: Any) -> int:
+        """Copy ``adapters`` into free pages and return its adapter id.
+
+        Zero-retrace contract: only ``.at[].set`` updates of fixed-shape
+        arrays — no engine executable ever re-specializes on registry churn.
+        """
+        if name in self._names:
+            raise ValueError(f"adapter name {name!r} is already registered; "
+                             "use swap() to publish a new version")
+        return self._install(name, adapters)
+
+    def swap(self, name: str, adapters: Any) -> int:
+        """Atomic version bump for a live name: the new version lands in
+        fresh pages under a NEW id, then the name is repointed.  The old id
+        (and its pages) stays fully servable for rows already in flight —
+        evict it once they drain."""
+        if name not in self._names:
+            raise KeyError(f"cannot swap unknown adapter name {name!r}")
+        old = self._names[name]
+        new = self._install(name, adapters)
+        self._meta[old]["retired"] = True
+        return new
+
+    def evict(self, ref: Union[str, int]) -> None:
+        """Free an adapter's pages and id.  ``ref`` is an adapter id, or a
+        name (evicts EVERY live version of the name, retired ones included).
+        The freed rank entry is zeroed on device, so a stale id in a slot
+        degrades to the base model deterministically — but evicting an
+        adapter that still has rows in flight is a caller error; the engine
+        refuses NEW submissions against an evicted id."""
+        if isinstance(ref, str):
+            if ref not in self._versions:
+                raise KeyError(f"unknown adapter name {ref!r}")
+            for aid in [i for i in self._versions[ref] if i in self._meta]:
+                self._evict_id(aid)
+            return
+        self._evict_id(ref)
+
+    # -- internals -------------------------------------------------------------
+    def _evict_id(self, aid: int) -> None:
+        if aid not in self._meta:
+            raise KeyError(f"unknown or already-evicted adapter id {aid}")
+        meta = self._meta.pop(aid)
+        self._free_pages.extend(meta["pages"])
+        self._free_pages.sort()
+        self._free_ids.append(aid)
+        self._free_ids.sort()
+        self._rank = self._rank.at[aid].set(0)
+        name = meta["name"]
+        if self._names.get(name) == aid:
+            del self._names[name]
+        vs = self._versions.get(name)
+        if vs is not None:
+            vs[:] = [i for i in vs if i != aid]
+            if not vs:
+                del self._versions[name]
+
+    def _adapter_rank(self, adapters: Any) -> int:
+        paths, ranks = [], []
+        for path, leaf in _walk_adapter_leaves(adapters):
+            paths.append(path)
+            ranks.append(int(leaf["A"].shape[-2]))
+        if paths != self._leaf_paths:
+            raise ValueError("adapter tree structure does not match the "
+                             f"registry template: got leaves {paths}, "
+                             f"expected {self._leaf_paths}")
+        return max(ranks)
+
+    def _install(self, name: str, adapters: Any) -> int:
+        r = self._adapter_rank(adapters)
+        if r < 1:
+            raise ValueError("cannot register a rank-0 adapter")
+        if r > self.max_rank:
+            raise ValueError(f"adapter rank {r} exceeds the registry "
+                             f"max_rank {self.max_rank}")
+        n_pg = math.ceil(r / self.page_rank)
+        if len(self._free_pages) < n_pg:
+            raise RuntimeError(f"out of adapter pages: need {n_pg}, "
+                               f"{len(self._free_pages)} free "
+                               f"(evict something or grow num_pages)")
+        if not self._free_ids:
+            raise RuntimeError("out of adapter ids (grow max_adapters)")
+        pages = self._free_pages[:n_pg]          # smallest-first: determinism
+        del self._free_pages[:n_pg]
+        aid = self._free_ids.pop(0)
+
+        rp = n_pg * self.page_rank               # padded rank (whole pages)
+        pg = jnp.asarray(pages, jnp.int32)
+
+        def write(pool, leaf):
+            a = jnp.asarray(leaf["A"])
+            b = jnp.asarray(leaf["B"])
+            scale = jnp.asarray(leaf["scale"], jnp.float32)
+            if a.ndim == 3:                      # stacked (L, r_leaf, din)
+                L, rl, din = a.shape
+                dout = b.shape[1]
+                ap = jnp.zeros((L, rp, din), pool["A"].dtype).at[:, :rl].set(
+                    a.astype(pool["A"].dtype))
+                bp = jnp.zeros((L, dout, rp), pool["B"].dtype).at[..., :rl].set(
+                    b.astype(pool["B"].dtype))
+                return {
+                    "A": pool["A"].at[:, pg].set(
+                        ap.reshape(L, n_pg, self.page_rank, din)),
+                    "B": pool["B"].at[:, pg].set(jnp.moveaxis(
+                        bp.reshape(L, dout, n_pg, self.page_rank), 2, 1)),
+                    "scale": pool["scale"].at[:, aid].set(
+                        jnp.broadcast_to(scale, (L,))),
+                }
+            rl, din = a.shape
+            dout = b.shape[0]
+            ap = jnp.zeros((rp, din), pool["A"].dtype).at[:rl].set(
+                a.astype(pool["A"].dtype))
+            bp = jnp.zeros((dout, rp), pool["B"].dtype).at[:, :rl].set(
+                b.astype(pool["B"].dtype))
+            return {
+                "A": pool["A"].at[pg].set(
+                    ap.reshape(n_pg, self.page_rank, din)),
+                "B": pool["B"].at[pg].set(jnp.moveaxis(
+                    bp.reshape(dout, n_pg, self.page_rank), 1, 0)),
+                "scale": pool["scale"].at[aid].set(
+                    jnp.reshape(scale, ())),
+            }
+
+        # zip the pool tree against the incoming adapter tree leaf-by-leaf
+        leaves = dict(_walk_adapter_leaves(adapters))
+
+        def write_at(path):
+            def go(pool_node, p=()):
+                if _is_adapter_leaf(pool_node):
+                    return write(pool_node, leaves[p])
+                if isinstance(pool_node, dict):
+                    return {k: go(v, p + (k,)) for k, v in pool_node.items()}
+                if isinstance(pool_node, (tuple, list)):
+                    return type(pool_node)(go(v, p + (i,))
+                                           for i, v in enumerate(pool_node))
+                return pool_node
+            return go
+
+        self._pools = write_at(None)(self._pools)
+        row = jnp.zeros((self.pages_max,), jnp.int32).at[:n_pg].set(pg)
+        self._table = self._table.at[aid].set(row)
+        self._rank = self._rank.at[aid].set(r)
+
+        version = len(self._versions.get(name, [])) + 1
+        self._meta[aid] = {"name": name, "rank": r, "pages": pages,
+                           "version": version, "retired": False}
+        self._names[name] = aid
+        self._versions.setdefault(name, []).append(aid)
+        return aid

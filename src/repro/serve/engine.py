@@ -41,6 +41,7 @@ import numpy as np
 from repro.common.config import ModelConfig
 from repro.models import transformer as T
 from repro.serve import kvcache as Kv
+from repro.serve.adapters import AdapterRegistry, attach, is_device_state
 
 
 @dataclasses.dataclass
@@ -57,6 +58,7 @@ class Request:
     uid: int
     prompt: List[int]
     params: SamplingParams
+    adapter_id: int = 0             # 0 = base model, no adapter
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -96,7 +98,7 @@ def sample_logits(logits: jnp.ndarray, params: SamplingParams,
 
 def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
                        trace_counter: Optional[Dict[Any, int]] = None,
-                       decode_impl: str = "dense"):
+                       decode_impl: str = "dense", lora_impl: str = "xla"):
     """Pure engine step of fixed token ``width``: (params, adapters, cache,
     state) -> (cache, state, finished (B,) bool).  Jit this once per
     (width, stochastic).  ``stochastic=False`` compiles the greedy-only
@@ -105,13 +107,23 @@ def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
     never depend on their keys, and a sampled request keeps the engine in
     the stochastic variant for its whole lifetime, so mode switches cannot
     perturb sampled streams.)  ``decode_impl`` picks the attention interior
-    (dense | streamed | kernel — see ``transformer.decode``)."""
+    (dense | streamed | kernel — see ``transformer.decode``).
+
+    ``adapters`` may be a classic single-tenant adapter tree OR an
+    :class:`AdapterRegistry` device state (paged pools + indirection
+    tables): the latter is attached against the per-slot
+    ``state["adapter_ids"]`` table so every batch row applies its own
+    adapter (``lora_impl`` picks the bgmv Pallas kernel or its XLA twin).
+    The branch is resolved at trace time from pytree structure; registry
+    churn changes only array VALUES, so it never retraces."""
     C = width
 
     def step(params, adapters, cache, state):
         if trace_counter is not None:       # python side effect: counts traces
             key = (C, "sampled" if stochastic else "greedy")
             trace_counter[key] = trace_counter.get(key, 0) + 1
+        if is_device_state(adapters):
+            adapters = attach(adapters, state["adapter_ids"], impl=lora_impl)
         active = state["active"]
         t = jnp.arange(C)[None, :]
         consumed, plen = state["consumed"], state["prompt_len"]
@@ -170,12 +182,13 @@ def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
 
 def _build_engine_burst(cfg: ModelConfig, steps: int, stochastic: bool = True,
                         trace_counter: Optional[Dict[Any, int]] = None,
-                        decode_impl: str = "dense"):
+                        decode_impl: str = "dense", lora_impl: str = "xla"):
     """``steps`` width-1 engine steps as ONE jitted ``lax.scan`` — the
     decode hot loop with a single dispatch per burst.  Finished/inactive
     rows no-op inside the scan (n_tokens = 0), so a fixed burst length is
     safe even when a slot completes mid-burst."""
-    step = _build_engine_step(cfg, 1, stochastic, decode_impl=decode_impl)
+    step = _build_engine_step(cfg, 1, stochastic, decode_impl=decode_impl,
+                              lora_impl=lora_impl)
 
     def burst(params, adapters, cache, state):
         if trace_counter is not None:
@@ -198,12 +211,22 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, adapters: Any = None,
                  batch_slots: int = 4, capacity: int = 256,
                  kv_dtype=None, seed: int = 0, prefill_chunk: int = 8,
-                 max_tokens_cap: int = 1024, decode_impl: str = "dense"):
+                 max_tokens_cap: int = 1024, decode_impl: str = "dense",
+                 registry: Optional[AdapterRegistry] = None,
+                 lora_impl: Optional[str] = None):
         if decode_impl not in ("dense", "streamed", "kernel"):
             raise ValueError(f"unknown decode_impl {decode_impl!r}")
+        if registry is not None and adapters is not None:
+            raise ValueError("pass a single-tenant adapter tree OR a "
+                             "multi-tenant registry, not both")
         self.cfg = cfg
         self.params = params
         self.adapters = adapters
+        self.registry = registry
+        # bgmv Pallas kernel alongside the kernel attention interior, the
+        # XLA gather/einsum twin otherwise (overridable independently)
+        self.lora_impl = lora_impl or (
+            "kernel" if decode_impl == "kernel" else "xla")
         self.B = batch_slots
         self.capacity = capacity
         self.decode_impl = decode_impl
@@ -231,6 +254,8 @@ class ServeEngine:
             "max_tokens": jnp.zeros((B,), jnp.int32),
             "stop_token": jnp.full((B,), -1, jnp.int32),
             "keys": jnp.zeros((B, 2), jnp.uint32),
+            # slot -> adapter id (0 = base); the attach() gather key
+            "adapter_ids": jnp.zeros((B,), jnp.int32),
         }
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self._pending: List[Request] = []
@@ -242,7 +267,8 @@ class ServeEngine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: List[int],
-               params: Optional[SamplingParams] = None) -> int:
+               params: Optional[SamplingParams] = None,
+               adapter_id: int = 0) -> int:
         params = params or SamplingParams()
         if len(prompt) > int(self._state["prompt_buf"].shape[1]):
             raise ValueError(f"prompt of {len(prompt)} tokens exceeds the "
@@ -252,9 +278,35 @@ class ServeEngine:
         if params.max_tokens > int(self._state["out_buf"].shape[1]):
             raise ValueError(f"max_tokens={params.max_tokens} exceeds "
                              f"max_tokens_cap={self._state['out_buf'].shape[1]}")
+        # validated at SUBMIT time: an unknown or evicted id is a loud host
+        # error, never a silent base-model fallback
+        if adapter_id != 0:
+            if self.registry is None:
+                raise ValueError(f"adapter_id={adapter_id} requires an "
+                                 "engine constructed with a registry")
+            if not self.registry.is_live(adapter_id):
+                raise KeyError(f"adapter_id={adapter_id} is unknown or "
+                               "evicted from the registry")
         self._uid += 1
-        self._pending.append(Request(self._uid, list(prompt), params))
+        self._pending.append(Request(self._uid, list(prompt), params,
+                                     adapter_id=adapter_id))
         return self._uid
+
+    def reset_slot(self, i: int) -> None:
+        """Abort slot ``i``'s request and re-arm the slot: the KV ring /
+        recurrent rows are wiped AND the slot's adapter-table entry is
+        cleared back to the base id, so the next occupant can never run
+        against its predecessor's adapter (or a since-evicted one)."""
+        if self.slots[i] is None:
+            raise ValueError(f"slot {i} is not occupied")
+        self.cache = Kv.reset_slot(self.cache, i)
+        self._state = dict(
+            self._state,
+            active=self._state["active"].at[i].set(False),
+            adapter_ids=self._state["adapter_ids"].at[i].set(0),
+        )
+        self.slots[i] = None
+        self._host_left.pop(i, None)
 
     def run(self, max_steps: int = 1000,
             poll_every: int = 8) -> Dict[int, List[int]]:
@@ -283,7 +335,7 @@ class ServeEngine:
                     and max_steps - steps >= poll_every:
                 # pure-decode phase: scan poll_every steps in ONE dispatch
                 fn = self._get_burst(poll_every, self._stochastic())
-                self.cache, self._state = fn(self.params, self.adapters,
+                self.cache, self._state = fn(self.params, self._adapters_arg(),
                                              self.cache, self._state)
                 steps += poll_every
                 self._poll(results)
@@ -302,7 +354,32 @@ class ServeEngine:
         self._drain(results)
         return results
 
+    def run_steps(self, steps: int) -> Dict[int, List[int]]:
+        """Advance the engine exactly ``steps`` engine steps WITHOUT
+        draining: in-flight requests stay resident in their slots (unlike
+        :meth:`run`, which reports stragglers' partial output and frees
+        them).  Pending requests are admitted as slots open; completed
+        requests are collected and returned.  This is the host-controlled
+        stepping mode the round→deploy loop uses to interleave serving with
+        registry churn (register / swap / evict between steps)."""
+        results: Dict[int, List[int]] = {}
+        for _ in range(steps):
+            self._admit()
+            if all(s is None for s in self.slots) and not self._pending:
+                break
+            self._engine_step()
+            self._poll(results)
+        return results
+
     # -- internals -------------------------------------------------------------
+    def _adapters_arg(self):
+        """What the jitted step receives as ``adapters``: the registry's
+        fixed-structure device state in multi-tenant mode (fresh VALUES
+        every call — hot-swaps land here — same treedef, so never a
+        retrace), else the engine's static adapter tree."""
+        if self.registry is not None:
+            return self.registry.device_state
+        return self.adapters
     def _admit(self):
         admitted = []
         for i in range(self.B):
@@ -349,6 +426,8 @@ class ServeEngine:
                            jnp.int32),
             stop_token=put("stop_token", [r.params.stop_token for r in reqs],
                            jnp.int32),
+            adapter_ids=put("adapter_ids", [r.adapter_id for r in reqs],
+                            jnp.int32),
             # per-request PRNG streams: a function of (seed, uid) only, so
             # sampling is invariant to slot placement
             keys=st["keys"].at[ix].set(
@@ -368,7 +447,7 @@ class ServeEngine:
         if key not in self._step_fns:
             self._step_fns[key] = jax.jit(_build_engine_step(
                 self.cfg, width, stochastic, self.trace_counts,
-                self.decode_impl))
+                self.decode_impl, self.lora_impl))
         return self._step_fns[key]
 
     def _get_burst(self, steps: int, stochastic: bool):
@@ -376,7 +455,7 @@ class ServeEngine:
         if key not in self._step_fns:
             self._step_fns[key] = jax.jit(_build_engine_burst(
                 self.cfg, steps, stochastic, self.trace_counts,
-                self.decode_impl))
+                self.decode_impl, self.lora_impl))
         return self._step_fns[key]
 
     def _prefilling(self) -> bool:
@@ -388,7 +467,7 @@ class ServeEngine:
         if width is None:
             width = self.chunk if self._prefilling() else 1
         step = self._get_step(width, self._stochastic())
-        self.cache, self._state, _ = step(self.params, self.adapters,
+        self.cache, self._state, _ = step(self.params, self._adapters_arg(),
                                           self.cache, self._state)
         for i in range(self.B):
             if self.slots[i] is None:

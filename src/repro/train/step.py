@@ -105,7 +105,8 @@ def make_prefill_step(cfg: ModelConfig, use_kernels: bool = False):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, decode_impl: str = "dense"):
+def make_serve_step(cfg: ModelConfig, decode_impl: str = "dense",
+                    lora_impl: str = "xla"):
     """Chunked decode against a per-slot KV cache: (params, adapters, cache,
     batch) -> (next_token_logits (B,V), cache).
 
@@ -113,11 +114,23 @@ def make_serve_step(cfg: ModelConfig, decode_impl: str = "dense"):
     real token count per row (chunked prefill with ragged prompt tails).
     Returns the logits at each row's LAST real token — the position the
     next token is sampled from.  ``decode_impl`` picks the attention
-    interior (dense | streamed | kernel, see ``transformer.decode``)."""
+    interior (dense | streamed | kernel, see ``transformer.decode``).
+
+    ``adapters`` may also be an :class:`repro.serve.adapters.AdapterRegistry`
+    device state; then ``batch["adapter_ids"]: (B,)`` selects each row's
+    adapter from the paged pools (id 0 = base) and ``lora_impl`` picks the
+    bgmv Pallas kernel or its XLA gather/einsum twin."""
     def serve_step(params, adapters, cache, batch):
+        from repro.serve.adapters import attach, is_device_state
+        if is_device_state(adapters):
+            ids = batch.get("adapter_ids")
+            if ids is None:
+                ids = jnp.zeros((batch["tokens"].shape[0],), jnp.int32)
+            adapters = attach(adapters, ids, impl=lora_impl)
         n = batch.get("n_tokens")
-        lg, cache = T.decode(cfg, params, cache, {k: v for k, v in batch.items()
-                                                  if k != "n_tokens"},
+        lg, cache = T.decode(cfg, params, cache,
+                             {k: v for k, v in batch.items()
+                              if k not in ("n_tokens", "adapter_ids")},
                              adapters, n_tokens=n, decode_impl=decode_impl)
         if n is None:
             return lg[:, -1], cache
