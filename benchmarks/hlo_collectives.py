@@ -1,43 +1,81 @@
-"""Diagnostic: dump the largest collective ops from an (optionally unrolled,
-reduced-depth) dry-run compile.  Usage:
+"""Inspect the collective schedule of compiled programs.
+
+Two modes:
+
+*Dry-run mode* (default) — dump the largest collective ops from an
+(optionally unrolled, reduced-depth) training dry-run compile on the
+production mesh:
 
   PYTHONPATH=src python benchmarks/hlo_collectives.py <arch> <shape> [L] [--unroll]
-"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-import collections
-import re
+*Serve mode* (``--serve``) — compile ONE sharded engine decode step on a
+(data=1, model=N) host mesh and ASSERT its collective schedule: attention
+is head-parallel so the only expected collective is the all-reduce at the
+row-parallel output projections (+ the small vocab-sharded logit
+reduction); all-to-all must not appear; total collective bytes stay under
+an analytic per-step bound; and with the streamed interior no dense
+``(B, H, C, cap)`` score/mask buffer may rematerialize.  Exits non-zero on
+any violation — CI-friendly.
+
+  PYTHONPATH=src python benchmarks/hlo_collectives.py --serve \\
+      [--mesh 8] [--decode-impl streamed] [--width 1]
+"""
+import argparse
+import os
 import sys
 
-import jax  # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.common import flags
-from repro.common.config import INPUT_SHAPES
-from repro.common.pjit_utils import active_mesh
-from repro.configs import get_config, long_context_variant
-from repro.launch.dryrun import _COLLECTIVES, _shape_bytes, build_dryrun, pick_kv_dtype
-from repro.launch.mesh import make_production_mesh
+from repro.common.xla_env import force_host_devices  # noqa: E402 (jax-free)
 
 
-def main():
-    arch, shape_name = sys.argv[1], sys.argv[2]
-    L = int(sys.argv[3]) if len(sys.argv) > 3 and sys.argv[3].isdigit() else 2
-    unroll = "--unroll" in sys.argv
-    shape = INPUT_SHAPES[shape_name]
-    cfg = get_config(arch)
-    if shape_name == "long_500k":
+def parse_args(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("arch", nargs="?", help="architecture (dry-run mode)")
+    ap.add_argument("shape", nargs="?", help="input shape name (dry-run mode)")
+    ap.add_argument("layers", nargs="?", type=int, default=2,
+                    help="reduced layer count (dry-run mode)")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--serve", action="store_true",
+                    help="assert the sharded serve-step collective schedule")
+    ap.add_argument("--mesh", type=int, default=8,
+                    help="model-axis size for --serve (forced host devices)")
+    ap.add_argument("--decode-impl", default="streamed",
+                    choices=("dense", "streamed", "kernel"))
+    ap.add_argument("--width", type=int, default=1,
+                    help="step token width for --serve (1 = decode)")
+    args = ap.parse_args(argv)
+    if not args.serve and (args.arch is None or args.shape is None):
+        ap.error("dry-run mode needs <arch> <shape> (or pass --serve)")
+    return args
+
+
+def main_dryrun(args):
+    import collections
+    import re
+
+    from repro.common import flags
+    from repro.common.config import INPUT_SHAPES
+    from repro.common.pjit_utils import active_mesh
+    from repro.configs import get_config, long_context_variant
+    from repro.launch.dryrun import (_COLLECTIVES, _shape_bytes, build_dryrun,
+                                     pick_kv_dtype)
+    from repro.topology import make_production_mesh
+
+    shape = INPUT_SHAPES[args.shape]
+    cfg = get_config(args.arch)
+    if args.shape == "long_500k":
         cfg = long_context_variant(cfg)
-    kw = {"num_layers": L}
+    kw = {"num_layers": args.layers}
     if cfg.first_dense_layers:
         kw["first_dense_layers"] = 1
     cfg = cfg.replace(**kw)
     mesh = make_production_mesh()
-    flags.set_analysis_unroll(unroll)
-    fn, args = build_dryrun(cfg, shape, mesh, grad_accum=1,
-                            kv_cache_dtype=pick_kv_dtype(cfg, shape))
+    flags.set_analysis_unroll(args.unroll)
+    fn, fargs = build_dryrun(cfg, shape, mesh, grad_accum=1,
+                             kv_cache_dtype=pick_kv_dtype(cfg, shape))
     with mesh, active_mesh(mesh):
-        compiled = fn.lower(*args).compile()
+        compiled = fn.lower(*fargs).compile()
     txt = compiled.as_text()
     per_line = []
     totals = collections.Counter()
@@ -57,7 +95,95 @@ def main():
     print(f"\ntop collectives (of {len(per_line)}):")
     for b, c, l in sorted(per_line, reverse=True)[:12]:
         print(f"  {b/2**20:9.1f}MiB {c:18s} {l[:120]}")
+    return 0
+
+
+def _serve_config():
+    """Tiny fp32 config for the serve-step schedule check: head counts
+    divide every mesh size in {1, 2, 4, 8}."""
+    from repro.common.config import ModelConfig
+    return ModelConfig(name="hlo-serve-tiny", family="dense", num_layers=2,
+                       d_model=64, num_heads=8, num_kv_heads=8, head_dim=16,
+                       d_ff=128, vocab_size=256, dtype="float32")
+
+
+def main_serve(args):
+    import jax
+
+    from repro.launch.dryrun import collective_bytes
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+    from repro.topology import make_serve_mesh
+
+    cfg = _serve_config()
+    msize = args.mesh
+    mesh = make_serve_mesh(msize)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    # cap must exceed the streamed block size (128): the live-memory claim
+    # is that score tiles stay O(block), never O(cap)
+    B, cap = 4, 512
+    eng = ServeEngine(cfg, params, batch_slots=B, capacity=cap,
+                      prefill_chunk=8, decode_impl=args.decode_impl,
+                      mesh=mesh)
+    compiled = eng.lower_step(width=args.width, stochastic=False).compile()
+    txt = compiled.as_text()
+
+    totals = collective_bytes(txt)
+    print(f"serve step: impl={args.decode_impl} width={args.width} "
+          f"mesh=(1,{msize}) B={B} cap={cap}")
+    print("collective bytes/step:", {k: v for k, v in totals.items() if v})
+
+    failures = []
+
+    # 1. schedule shape: head-parallel decode communicates ONLY via
+    # all-reduce (row-parallel projections, vocab-sharded logit reduction)
+    # plus at most small all-gathers from the sampling epilogue; a
+    # sequence-sharded or resharding-happy lowering would show up here
+    if totals["all-to-all"]:
+        failures.append(f"unexpected all-to-all ({totals['all-to-all']}B)")
+    if msize > 1 and totals["all-reduce"] == 0:
+        failures.append("expected all-reduce at row-parallel projections, "
+                        "found none")
+
+    # 2. total bytes: per step, the dominant traffic is one (B,C,d) f32
+    # all-reduce per row-parallel projection (wo + w_down per layer + the
+    # embed row-combine) plus the (B,C,V) logit epilogue.  8x slack keeps
+    # the bound meaningful (a dense (B,H,C,cap) gather would blow it by
+    # orders of magnitude) without tracking XLA's exact fusion choices.
+    C, d, V, L = args.width, cfg.d_model, cfg.vocab_size, cfg.num_layers
+    analytic = 4 * B * C * ((2 * L + 1) * d + 2 * V)
+    bound = 8 * analytic if msize > 1 else 0
+    total = sum(totals.values())
+    if total > bound:
+        failures.append(f"collective bytes {total} exceed bound {bound} "
+                        f"(analytic {analytic})")
+
+    # 3. no dense score/mask resurrection in the streamed/kernel interior
+    # (the PR 5 live-memory guarantee must survive the sharded lowering);
+    # buffers shrink by the shard factor, so check every per-shard shape
+    if args.decode_impl != "dense":
+        H, K = cfg.num_heads, cfg.num_kv_heads
+        forbidden = []
+        for s in {1, msize}:
+            for b in range(1, B + 1):
+                forbidden += [
+                    f"f32[{b},{H // s},{C},{cap}]",
+                    f"f32[{b},{K // s},{H // K},{C},{cap}]",
+                ]
+        found = sorted({f for f in forbidden if f in txt})
+        if found:
+            failures.append(f"dense score buffers rematerialized: {found}")
+
+    if failures:
+        for f in failures:
+            print("FAIL:", f)
+        return 1
+    print("PASS: collective schedule as expected")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    args = parse_args(sys.argv[1:])
+    # append (never clobber) the forced device count BEFORE backend init
+    force_host_devices(max(args.mesh, 1) if args.serve else 512)
+    sys.exit(main_serve(args) if args.serve else main_dryrun(args))

@@ -30,6 +30,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -193,6 +196,71 @@ def multi_adapter_axis(cfg, params, args, gen, capacity, rng):
     return axis
 
 
+def _mesh_worker(args, cfg, gen, capacity, rng) -> None:
+    """One mesh-sharded measurement: this process was started with
+    ``--xla_force_host_platform_device_count`` already in its env (XLA
+    reads it at backend init, so it cannot be set in-process here)."""
+    from repro.launch.dryrun import collective_bytes
+    from repro.topology import make_serve_mesh
+
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=args.slots, capacity=capacity,
+                      prefill_chunk=args.chunk, decode_impl="streamed",
+                      mesh=make_serve_mesh(args.mesh_worker))
+    dt, total = workload(eng, args.requests, args.prompt_len, gen, rng)
+    before = dict(eng.trace_counts)
+    dt2, _ = workload(eng, args.requests, args.prompt_len, gen, rng)
+    assert dict(eng.trace_counts) == before, (
+        f"mesh_axis[{args.mesh_worker}]: retraced after warmup "
+        f"({before} -> {dict(eng.trace_counts)})")
+    dt = min(dt, dt2)
+    totals = collective_bytes(eng.lower_step(width=1).compile().as_text())
+    print(json.dumps({
+        "devices": len(jax.devices()),
+        "wall_s": round(dt, 4), "tokens": total,
+        "tok_per_s": round(total / dt, 2),
+        "trace_counts": {str(k): v for k, v in before.items()},
+        "collective_bytes_per_step": {k: v for k, v in totals.items() if v},
+    }))
+
+
+def mesh_axis(args, gen):
+    """Same streamed workload on a (data=1, model=N) mesh, 1 vs 2 forced
+    host devices, each in a fresh subprocess: tok/s, per-step collective
+    bytes from the compiled step, and trace counts for the gate."""
+    from repro.common.xla_env import merge_flags
+
+    axis = {}
+    for name, n in (("single", 1), ("sharded", 2)):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = merge_flags(
+            os.environ.get("XLA_FLAGS", ""),
+            f"--xla_force_host_platform_device_count={n}")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--mesh-worker", str(n), "--slots", str(args.slots),
+               "--requests", str(args.requests),
+               "--prompt-len", str(args.prompt_len),
+               "--gen", str(gen), "--chunk", str(args.chunk)]
+        if args.smoke:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=900)
+        if proc.returncode != 0:
+            print(proc.stdout, proc.stderr, file=sys.stderr)
+            raise RuntimeError(f"mesh_axis worker (devices={n}) failed")
+        axis[name] = json.loads(proc.stdout.strip().splitlines()[-1])
+        print(f"mesh_axis[{name:7s}] {axis[name]['tokens']:5d} tokens in "
+              f"{axis[name]['wall_s']:7.3f}s ({axis[name]['tok_per_s']:8.1f} "
+              f"tok/s) collectives={axis[name]['collective_bytes_per_step']}")
+    axis["model_axis"] = 2
+    axis["slowdown_sharded_vs_single"] = round(
+        axis["single"]["tok_per_s"] / axis["sharded"]["tok_per_s"], 2)
+    print(f"mesh-axis slowdown (2-device model-sharded vs 1): "
+          f"{axis['slowdown_sharded_vs_single']:.2f}x")
+    return axis
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -205,12 +273,18 @@ def main() -> None:
                          "step count unless it is chunked")
     ap.add_argument("--gen", type=int, default=0)
     ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--mesh-worker", type=int, default=0,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     cfg = SMOKE_MODEL if args.smoke else FULL_MODEL
     gen = args.gen or (32 if args.smoke else 48)
     capacity = args.prompt_len + gen + 8
     rng = np.random.default_rng(0)
+
+    if args.mesh_worker:
+        _mesh_worker(args, cfg, gen, capacity, rng)
+        return
 
     def mk(kind):
         if kind == "eager":
@@ -259,6 +333,7 @@ def main() -> None:
     print(f"trace counts (stable across runs): {trace_counts}")
 
     multi_axis = multi_adapter_axis(cfg, params, args, gen, capacity, rng)
+    m_axis = mesh_axis(args, gen)
 
     report = {
         "config": {"model": cfg.name, "batch_slots": args.slots,
@@ -271,6 +346,7 @@ def main() -> None:
             "dense": jitN, "streamed": jitS,
             "speedup_streamed_vs_dense": round(jitS / jitN, 2)},
         "multi_adapter_axis": multi_axis,
+        "mesh_axis": m_axis,
         "speedup_jit_vs_eager": round(speedup, 2),
         "speedup_chunked_vs_width1": round(jitN / jit1, 2),
         "trace_counts": {arm: {str(k): v for k, v in c.items()}

@@ -12,8 +12,15 @@ both generations of the adapter serve side by side in one batch — and the
 jitted step never retraces, because registry churn only rewrites fixed-shape
 device pools.
 
+With ``--mesh N`` the engine decodes tensor-parallel on a ``(data=1,
+model=N)`` mesh — same tokens, same trace counts, the registry's paged
+pools sharded along with the base weights.  On a CPU host export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first (the flag is
+read once, at backend init).
+
   PYTHONPATH=src python examples/serve_federated.py [--rounds 2] \
-      [--requests-per-round 4] [--batch-slots 4] [--temperature 0.0]
+      [--requests-per-round 4] [--batch-slots 4] [--temperature 0.0] \
+      [--mesh 0]
 """
 import argparse
 
@@ -39,6 +46,9 @@ def main():
                     choices=["dense", "streamed", "kernel"],
                     help="serving attention interior (streamed = "
                          "ring-flash-decode hot loop)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="model-parallel devices for the serve mesh "
+                         "(0 = no mesh, single device)")
     args = ap.parse_args()
 
     cfg = ModelConfig(name="serve-fed-tiny", family="dense", num_layers=2,
@@ -55,9 +65,13 @@ def main():
     # deploy surface; trainer rounds just publish into them.
     registry = AdapterRegistry(trainer.A_init_full, page_rank=4,
                                num_pages=16, max_adapters=8, max_rank=8)
+    mesh = None
+    if args.mesh:
+        from repro.topology import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
     eng = ServeEngine(cfg, trainer.params, batch_slots=args.batch_slots,
                       capacity=64, seed=0, decode_impl=args.decode_impl,
-                      registry=registry)
+                      registry=registry, mesh=mesh)
     rng = np.random.default_rng(0)
     sp = SamplingParams(temperature=args.temperature, top_k=8,
                         max_tokens=args.max_tokens)

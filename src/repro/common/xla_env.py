@@ -1,0 +1,53 @@
+"""``XLA_FLAGS`` management for tools that tune the backend.
+
+XLA parses ``XLA_FLAGS`` once, when the backend initializes (lazily, at the
+first device lookup — not at ``import jax``), so these helpers work as long
+as they run before any device use.  They APPEND to a user-set value instead
+of clobbering it, and a flag whose *name* is already present is left alone
+(the user's choice wins) — the clobbering bug class this module exists to
+fix.  Shared by the dry-run, ``benchmarks/hlo_collectives.py`` and
+``benchmarks/xla_flags_tune.py``.
+
+No jax import here: the module must be importable before flag setup.
+"""
+from __future__ import annotations
+
+import os
+from typing import Mapping, Union
+
+
+def _flag_name(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def merge_flags(base: str, *flags: str) -> str:
+    """Merge ``flags`` (full ``--name=value`` strings) into the flag string
+    ``base``, skipping any whose name ``base`` already sets."""
+    have = {_flag_name(f) for f in base.split()}
+    add = [f for f in flags if _flag_name(f) not in have]
+    return " ".join(([base] if base else []) + add)
+
+
+def append_xla_flags(*flags: str) -> str:
+    """Append ``flags`` (full ``--name=value`` strings) to ``XLA_FLAGS``,
+    skipping any whose name is already set.  Returns the merged value."""
+    merged = merge_flags(os.environ.get("XLA_FLAGS", ""), *flags)
+    os.environ["XLA_FLAGS"] = merged
+    return merged
+
+
+def force_host_devices(n: int) -> str:
+    """Request ``n`` virtual host devices — unless the caller's environment
+    already chose a count."""
+    return append_xla_flags(f"--xla_force_host_platform_device_count={n}")
+
+
+def render_flags(flag_dict: Mapping[str, Union[str, int, bool]]) -> str:
+    """Render a ``{name: value}`` flag set as an ``XLA_FLAGS`` fragment
+    (for a child process env; booleans lower-case as XLA expects)."""
+    out = []
+    for k, v in flag_dict.items():
+        if isinstance(v, bool):
+            v = "true" if v else "false"
+        out.append(f"--{k}={v}")
+    return " ".join(out)

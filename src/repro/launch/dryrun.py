@@ -1,6 +1,5 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+from repro.common.xla_env import force_host_devices
+force_host_devices(512)
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes, with 512 placeholder host devices.

@@ -1,35 +1,12 @@
-"""Production meshes.
+"""Re-export shim: mesh construction moved to :mod:`repro.topology.mesh`
+(shared by the trainer and the serving stack).  Import from there."""
+from repro.topology.mesh import (  # noqa: F401
+    axis_size,
+    data_axes,
+    make_host_mesh,
+    make_production_mesh,
+    make_serve_mesh,
+)
 
-Single pod: v5e-256 as (data=16, model=16).
-Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16) — the ``pod``
-axis carries only data parallelism + the federated upload/download
-collectives (DCN-friendly), never tensor parallelism.
-
-Functions, not module constants: importing this module must never touch JAX
-device state (the dry-run sets XLA_FLAGS *before* the first jax import).
-"""
-from __future__ import annotations
-
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh(model: int = 1) -> Mesh:
-    """Tiny mesh over however many real devices exist (tests / examples)."""
-    n = len(jax.devices())
-    return jax.make_mesh((n // model, model), ("data", "model"))
-
-
-def data_axes(mesh: Mesh):
-    """Axes carrying the batch dimension."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-
-
-def axis_size(mesh: Mesh, name: str) -> int:
-    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+__all__ = ["axis_size", "data_axes", "make_host_mesh",
+           "make_production_mesh", "make_serve_mesh"]

@@ -1,180 +1,22 @@
-"""Partition rules: PartitionSpec trees for params / adapters / optimizer
-state / batches / KV caches, per architecture and mesh.
+"""Re-export shim: partition rules moved to
+:mod:`repro.topology.partitioning` (shared by the trainer and the serving
+stack; serving-side specs live in :mod:`repro.topology.serve`).  Import
+from there."""
+from repro.topology.partitioning import (  # noqa: F401
+    _COL_MODEL,
+    _ROW_MODEL,
+    CACHE_LEAF_RANKS,
+    ZERO3_THRESHOLD,
+    _fits,
+    _sanitize,
+    batch_pspecs,
+    cache_pspecs,
+    param_pspec,
+    params_pspecs,
+    replicated_pspecs,
+    to_shardings,
+)
 
-Strategy (DESIGN.md §5):
-  * every 2-D+ weight shards its "wide" dim over ``model`` (tensor / expert
-    parallel);
-  * archs above ``ZERO3_THRESHOLD`` params additionally shard the other dim
-    over ``data`` (ZeRO-3 style — GSPMD inserts the all-gathers);
-  * leading scan (layer) axes are never sharded;
-  * batch shards over (``pod``,) ``data``; vocab-dim logits over ``model``;
-  * KV caches: batch → data (when divisible), cache sequence → model
-    (flash-decoding-style partial-softmax merge is generated by GSPMD);
-  * adapters + their optimizer state are tiny → replicated (they are the
-    objects the *federated* layer communicates, not the training hot loop).
-
-A spec is applied only if every named axis divides the corresponding dim;
-otherwise the axis is dropped (never a sharding-mismatch crash at lower()).
-"""
-from __future__ import annotations
-
-from typing import Any, Dict, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.common.config import ModelConfig
-from repro.launch.mesh import axis_size, data_axes
-
-ZERO3_THRESHOLD = 8e9      # params; above this, weights also shard over data
-
-# last-path-key -> (row_axis, col_axis) template for 2-D weights, where the
-# template names refer to ("model" on wide dim, optional "data" on the other)
-_COL_MODEL = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "wr", "wg",
-              "wck", "wcr", "wq_a", "wq_b", "wkv_a", "wkv_b", "dd_w1", "wd1")
-_ROW_MODEL = ("wo", "w_down", "out_proj", "wcv")
-
-
-def _fits(mesh: Mesh, dim: int, axis) -> bool:
-    if axis is None:
-        return True
-    if isinstance(axis, tuple):
-        sz = 1
-        for a in axis:
-            sz *= axis_size(mesh, a)
-    else:
-        sz = axis_size(mesh, axis)
-    return dim % sz == 0
-
-
-def _sanitize(mesh: Mesh, spec: Tuple, shape: Tuple[int, ...]) -> P:
-    fixed = []
-    for axis, dim in zip(spec, shape):
-        fixed.append(axis if _fits(mesh, dim, axis) else None)
-    return P(*fixed)
-
-
-def param_pspec(mesh: Mesh, cfg: ModelConfig, path_keys: Tuple, leaf,
-                zero3: bool) -> P:
-    last = path_keys[-1]
-    shape = leaf.shape
-    nd = leaf.ndim
-    dax = data_axes(mesh)
-
-    def build(core_spec):
-        """Prepend None for any leading stack axes beyond the core rank."""
-        lead = nd - len(core_spec)
-        return _sanitize(mesh, (None,) * lead + tuple(core_spec), shape)
-
-    # --- embeddings / head --------------------------------------------------
-    # embed: vocab-sharded rows. Lookup lowers to mask+all-reduce of the
-    # (B,S,d) activation (cheap); tied/untied head contracts d and leaves
-    # logits vocab-sharded so the CE logsumexp reduces a (B,c) scalar field.
-    if last == "embed":
-        return _sanitize(mesh, ("model", None), shape)
-    if last == "lm_head":
-        return _sanitize(mesh, (None, "model"), shape)
-    if last == "frontend_proj":
-        return _sanitize(mesh, (None, "model"), shape)
-    if last == "router":
-        return build((None, None))
-
-    # --- MoE experts: (E, d, ff) / (E, ff, d), maybe stacked (L, E, ...) -----
-    # expert-parallel over 'model', and additionally over 'data' when E
-    # divides the full slice (deepseek: 256 experts == one per chip) —
-    # matches the shard_map EP path's in_specs so no per-layer resharding.
-    if (last in ("w_gate", "w_up", "w_down") and nd >= 3
-            and "moe" in path_keys and "shared" not in path_keys):
-        E = leaf.shape[-3]
-        from repro.launch.mesh import axis_size as _asz
-        full = _asz(mesh, "model") * _asz(mesh, "data")
-        if E % full == 0 and full > 1:
-            return build((("data", "model"), None, None))
-        return build(("model", None, None))
-
-    # --- generic 2-D weights --------------------------------------------------
-    if last in _COL_MODEL and nd >= 2:
-        core = (dax[-1] if zero3 else None, "model")
-        return build(core)
-    if last in _ROW_MODEL and nd >= 2:
-        core = ("model", dax[-1] if zero3 else None)
-        return build(core)
-    if last == "conv_w":
-        return build((None, "model"))
-    if last == "conv_b":
-        return build(("model",))
-
-    # norms, biases, scalars, dd_w2/wd2 small tensors: replicated
-    return P(*([None] * nd))
-
-
-def params_pspecs(mesh: Mesh, cfg: ModelConfig, params: Any) -> Any:
-    zero3 = cfg.param_count() > ZERO3_THRESHOLD
-
-    def fix(path, leaf):
-        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
-        return param_pspec(mesh, cfg, keys, leaf, zero3)
-
-    return jax.tree_util.tree_map_with_path(fix, params)
-
-
-def replicated_pspecs(tree: Any) -> Any:
-    return jax.tree.map(lambda l: P(*([None] * l.ndim)), tree)
-
-
-def batch_pspecs(mesh: Mesh, cfg: ModelConfig, batch: Any) -> Any:
-    dax = data_axes(mesh)
-
-    def fix(leaf):
-        if leaf.ndim == 0:
-            return P()
-        spec = [None] * leaf.ndim
-        if _fits(mesh, leaf.shape[0], dax):
-            spec[0] = dax if len(dax) > 1 else dax[0]
-        elif _fits(mesh, leaf.shape[0], dax[-1]):
-            spec[0] = dax[-1]
-        return P(*spec)
-
-    return jax.tree.map(fix, batch)
-
-
-def cache_pspecs(mesh: Mesh, cfg: ModelConfig, cache: Any) -> Any:
-    """KV caches: leaves look like (maybe L,) B, cap, heads/latent, ...
-    batch -> data axes; cache-sequence dim -> model (flash-decoding merge);
-    SSM/RWKV states: batch -> data, state dims -> model when divisible."""
-    dax = data_axes(mesh)
-
-    # decide per-leaf by comparing ndim against the un-stacked rank
-    # (single source of truth shared with kvcache's reset ops)
-    from repro.serve.kvcache import CACHE_LEAF_RANKS as ranks
-
-    def fix2(path, leaf):
-        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
-        last = keys[-1]
-        nd = leaf.ndim
-        base = ranks.get(last, nd)
-        lead = max(0, nd - base)          # leading stack axes
-        spec = [None] * nd
-        if last in ("pos", "length") or nd == lead:
-            return P(*spec)
-        b = leaf.shape[lead]
-        if _fits(mesh, b, dax):
-            spec[lead] = dax if len(dax) > 1 else dax[0]
-        elif _fits(mesh, b, dax[-1]):
-            spec[lead] = dax[-1]
-        if last in ("k", "v", "k_scale", "v_scale", "c_kv", "k_rope",
-                    "c_kv_scale", "k_rope_scale") and nd > lead + 1:
-            if _fits(mesh, leaf.shape[lead + 1], "model"):
-                spec[lead + 1] = "model"
-        if last in ("ssm", "wkv") and nd > lead + 1:
-            if _fits(mesh, leaf.shape[lead + 1], "model"):
-                spec[lead + 1] = "model"
-        return P(*spec)
-
-    return jax.tree_util.tree_map_with_path(fix2, cache)
-
-
-def to_shardings(mesh: Mesh, pspecs: Any) -> Any:
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
-                        is_leaf=lambda x: isinstance(x, P))
+__all__ = ["CACHE_LEAF_RANKS", "ZERO3_THRESHOLD", "batch_pspecs",
+           "cache_pspecs", "param_pspec", "params_pspecs",
+           "replicated_pspecs", "to_shardings"]

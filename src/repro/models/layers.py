@@ -17,11 +17,31 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.common.config import ModelConfig
+from repro.common.pjit_utils import (
+    _ambient_mesh,
+    constrain,
+    mesh_axis_sizes,
+    shard_map as _pjit_shard_map,
+)
 from repro.peft.lora import PagedLoRA, lora_proj, paged_delta_weight
 
 Params = Dict[str, Any]
+
+# spec of a (B, C, heads, per-head) decode activation under head-parallel
+# tensor parallelism (repro.topology.serve)
+_HEAD_SPEC = (None, None, "model", None)
+
+
+def _model_par_heads(kv_heads: int, q_heads: int) -> bool:
+    """Whether head-parallel decode applies under the ambient mesh: the
+    ``model`` axis must divide both head counts so every GQA group stays on
+    one shard (attention is then collective-free; the only communication is
+    the all-reduce at the row-parallel output projections)."""
+    m = mesh_axis_sizes().get("model", 1)
+    return m > 1 and kv_heads % m == 0 and q_heads % m == 0
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +224,11 @@ def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
     B, C, _ = x.shape
     qpos = cache["pos"][:, None] + jnp.arange(C)[None, :]     # (B,C) absolute
     q, k, v = _qkv(cfg, p, x, adapters, qpos)
+    headpar = _model_par_heads(cfg.num_kv_heads, cfg.num_heads)
+    if headpar:
+        q = constrain(q, _HEAD_SPEC)
+        k = constrain(k, _HEAD_SPEC)
+        v = constrain(v, _HEAD_SPEC)
     cache = cache_update(cfg, cache, k, v, n_tokens)
     if decode_impl == "dense":
         kc, vc = cache_kv(cfg, cache)
@@ -223,18 +248,79 @@ def attention_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
                   k_scale=cache["k_scale"] if int8 else None,
                   v_scale=cache["v_scale"] if int8 else None)
         if decode_impl == "kernel":
-            from repro.kernels import ops as kops
-            o = kops.ring_decode(q, cache["k"], cache["v"], cache["pos"],
-                                 cache["length"], n, **kw)
+            o = _ring_decode_sharded(q, cache, n, cfg.sliding_window,
+                                     headpar)
         elif decode_impl == "streamed":
             from repro.models.attention_core import ring_flash_decode
             o = ring_flash_decode(q, cache["k"], cache["v"], cache["pos"],
                                   cache["length"], n, **kw)
         else:
             raise ValueError(f"unknown decode_impl {decode_impl!r}")
+    if headpar:
+        o = constrain(o, _HEAD_SPEC)
     o = o.reshape(B, C, cfg.num_heads * cfg.head_dim).astype(x.dtype)
     a = adapters or {}
     return lora_proj(o, p["wo"], a.get("wo")), cache
+
+
+def _ring_decode_sharded(q, cache: Dict, n, window, headpar: bool):
+    """Pallas ring-flash-decode, head-parallel when possible: with an
+    ambient mesh whose ``model`` axis divides the head counts, the kernel
+    runs inside ``shard_map`` over the kv-head axis — each shard attends
+    its own GQA groups against its own cache shard, no collectives.  The
+    kernel is opaque to GSPMD, so without the manual mapping a sharded
+    cache would be all-gathered around every call."""
+    from repro.kernels import ops as kops
+    int8 = cache["k"].dtype == jnp.int8
+    args = [q, cache["k"], cache["v"], cache["pos"], cache["length"], n]
+    if int8:
+        args += [cache["k_scale"], cache["v_scale"]]
+
+    def body(q_, k_, v_, pos_, len_, n_, *scales):
+        ks_, vs_ = scales if scales else (None, None)
+        return kops.ring_decode(q_, k_, v_, pos_, len_, n_, window=window,
+                                k_scale=ks_, v_scale=vs_)
+
+    mesh = _ambient_mesh()
+    if not headpar or mesh is None:
+        return body(*args)
+    hspec = P(*_HEAD_SPEC)
+    rep1 = P(None)
+    specs = [hspec] * 3 + [rep1] * 3 + ([hspec] * 2 if int8 else [])
+    return _pjit_shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                           out_specs=hspec, check_vma=False)(*args)
+
+
+def _mla_ring_decode_sharded(q_eff, cache: Dict, n, scale, window,
+                             headpar: bool):
+    """MLA Pallas latent decode under head parallelism: query heads shard
+    over ``model`` (``shard_map`` over axis 2 of ``q_eff``); the compressed
+    latent cache is tiny and stays replicated, so each shard attends all
+    positions with its own head slice — no collectives."""
+    from repro.kernels import ops as kops
+    int8 = cache["c_kv"].dtype == jnp.int8
+    args = [q_eff, cache["c_kv"], cache["k_rope"], cache["pos"],
+            cache["length"], n]
+    if int8:
+        args += [cache["c_kv_scale"], cache["k_rope_scale"]]
+
+    def body(q_, ckv_, kr_, pos_, len_, n_, *scales):
+        cs_, rs_ = scales if scales else (None, None)
+        return kops.mla_ring_decode(q_, ckv_, kr_, pos_, len_, n_,
+                                    scale=scale, window=window,
+                                    c_kv_scale=cs_, k_rope_scale=rs_)
+
+    mesh = _ambient_mesh()
+    if not headpar or mesh is None:
+        return body(*args)
+    hspec = P(*_HEAD_SPEC)
+    rep3 = P(None, None, None)
+    rep1 = P(None)
+    specs = [hspec, rep3, rep3, rep1, rep1, rep1]
+    if int8:
+        specs += [rep3, rep3]
+    return _pjit_shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                           out_specs=hspec, check_vma=False)(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -367,6 +453,7 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
         w_k, w_v = w[..., :nope], w[..., nope:]
         q_lat = jnp.einsum("bshn,bkhn->bshk", q_nope.astype(jnp.float32), w_k)
         v_ein = "bshk,bkhv->bshv"
+        headpar = False       # per-row absorbed weights: keep heads whole
     else:
         if a_kvb is not None:    # fold LoRA delta into the absorbed weight
             w_kvb = w_kvb + ((a_kvb["B"] @ a_kvb["A"]).T
@@ -375,6 +462,9 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
         w_k, w_v = w[..., :nope], w[..., nope:]
         q_lat = jnp.einsum("bshn,khn->bshk", q_nope.astype(jnp.float32), w_k)
         v_ein = "bshk,khv->bshv"
+        headpar = _model_par_heads(H, H)
+    if headpar:
+        q_lat = constrain(q_lat, _HEAD_SPEC)
     scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
     int8 = cache["c_kv"].dtype == jnp.int8
     if decode_impl == "dense":
@@ -403,10 +493,8 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
                   c_kv_scale=cache["c_kv_scale"] if int8 else None,
                   k_rope_scale=cache["k_rope_scale"] if int8 else None)
         if decode_impl == "kernel":
-            from repro.kernels import ops as kops
-            out_lat = kops.mla_ring_decode(q_eff, cache["c_kv"],
-                                           cache["k_rope"], cache["pos"],
-                                           cache["length"], n, **kw)
+            out_lat = _mla_ring_decode_sharded(q_eff, cache, n, scale,
+                                               cfg.sliding_window, headpar)
         elif decode_impl == "streamed":
             from repro.models.attention_core import mla_ring_flash_decode
             out_lat = mla_ring_flash_decode(q_eff, cache["c_kv"],
@@ -414,6 +502,8 @@ def mla_decode(cfg: ModelConfig, p: Params, x, cache: Dict, adapters=None,
                                             cache["length"], n, **kw)
         else:
             raise ValueError(f"unknown decode_impl {decode_impl!r}")
+    if headpar:
+        out_lat = constrain(out_lat, _HEAD_SPEC)
     o = jnp.einsum(v_ein, out_lat, w_v)
     o = o.reshape(B, C, H * vd).astype(x.dtype)
     return lora_proj(o, p["wo"], a.get("wo")), cache

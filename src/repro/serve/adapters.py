@@ -181,6 +181,20 @@ class AdapterRegistry:
         fixed structure and shapes across any register/evict/swap churn."""
         return {"pools": self._pools, "table": self._table, "rank": self._rank}
 
+    def place(self, shardings: Optional[Dict[str, Any]]) -> None:
+        """Commit the registry's device state onto a mesh: one-time
+        ``device_put`` of pools / indirection table / rank table with
+        ``shardings`` (a tree matching :attr:`device_state`, normally from
+        ``topology.serve_adapter_pspecs``).  Every later ``register`` /
+        ``swap`` / ``evict`` goes through ``.at[].set`` on the committed
+        arrays, which preserves their sharding — so a placed registry keeps
+        matching the engine executables' ``in_shardings`` across churn."""
+        if shardings is None:
+            return
+        st = jax.device_put(self.device_state, shardings)
+        self._pools, self._table, self._rank = (
+            st["pools"], st["table"], st["rank"])
+
     @property
     def num_free_pages(self) -> int:
         return len(self._free_pages)

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
+from repro.common.pjit_utils import active_mesh
 from repro.models import transformer as T
 from repro.serve import kvcache as Kv
 from repro.serve.adapters import AdapterRegistry, attach, is_device_state
@@ -180,6 +181,26 @@ def _build_engine_step(cfg: ModelConfig, width: int, stochastic: bool = True,
     return step
 
 
+class _MeshedFn:
+    """A jitted engine fn bound to a mesh.
+
+    Tracing happens on the first call (or an explicit ``lower``), so the
+    wrapper re-enters the ambient-mesh context around both — that is what
+    lets the trace-time ``constrain`` pins inside the model resolve against
+    the engine's mesh."""
+
+    def __init__(self, fn, mesh):
+        self._fn, self._mesh = fn, mesh
+
+    def __call__(self, *args):
+        with active_mesh(self._mesh):
+            return self._fn(*args)
+
+    def lower(self, *args, **kw):
+        with active_mesh(self._mesh):
+            return self._fn.lower(*args, **kw)
+
+
 def _build_engine_burst(cfg: ModelConfig, steps: int, stochastic: bool = True,
                         trace_counter: Optional[Dict[Any, int]] = None,
                         decode_impl: str = "dense", lora_impl: str = "xla"):
@@ -213,7 +234,8 @@ class ServeEngine:
                  kv_dtype=None, seed: int = 0, prefill_chunk: int = 8,
                  max_tokens_cap: int = 1024, decode_impl: str = "dense",
                  registry: Optional[AdapterRegistry] = None,
-                 lora_impl: Optional[str] = None):
+                 lora_impl: Optional[str] = None,
+                 mesh: Optional[Any] = None):
         if decode_impl not in ("dense", "streamed", "kernel"):
             raise ValueError(f"unknown decode_impl {decode_impl!r}")
         if registry is not None and adapters is not None:
@@ -264,6 +286,13 @@ class ServeEngine:
         self._step_fns: Dict[int, Any] = {}
         # (width, mode) / ("burstN", mode) -> #traces (bench + retrace tests)
         self.trace_counts: Dict[Any, int] = {}
+        # mesh=None keeps today's single-device engine bit-for-bit; with a
+        # mesh every engine-owned tree is committed to its serve sharding
+        # and every executable gets explicit in_/out_shardings
+        self.mesh = mesh
+        self._shardings: Optional[Dict[str, Any]] = None
+        if mesh is not None:
+            self._install_mesh(mesh)
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: List[int],
@@ -371,7 +400,49 @@ class ServeEngine:
             self._poll(results)
         return results
 
+    def lower_step(self, width: int = 1, stochastic: bool = False):
+        """Lower (not run) one engine step against the engine's current
+        trees — the inspection surface the HLO-collective assertions and the
+        XLA flag-tuning harness compile."""
+        fn = self._get_step(width, stochastic)
+        return fn.lower(self.params, self._adapters_arg(), self.cache,
+                        self._state)
+
     # -- internals -------------------------------------------------------------
+    def _install_mesh(self, mesh):
+        """Pin every engine-owned tree onto ``mesh``.
+
+        Computes the serve pspecs (:mod:`repro.topology.serve`), then
+        ``device_put``s params / cache / state (and the registry pools)
+        ONCE with the target shardings.  Host-side ``.at[].set`` updates on
+        committed arrays preserve their sharding, so admission and registry
+        churn keep matching the executables' ``in_shardings`` (a drifted
+        committed sharding would be a hard error there, never silent)."""
+        from repro import topology
+        specs = topology.serve_pspecs(
+            mesh, self.cfg, self.params, self.cache, self._state,
+            adapters=self._adapters_arg(), lora_impl=self.lora_impl)
+        sh = {k: (None if s is None else topology.to_shardings(mesh, s))
+              for k, s in specs.items()}
+        self.params = jax.device_put(self.params, sh["params"])
+        self.cache = jax.device_put(self.cache, sh["cache"])
+        self._state = jax.device_put(self._state, sh["state"])
+        if self.registry is not None:
+            self.registry.place(sh["adapters"])
+        elif self.adapters is not None:
+            self.adapters = jax.device_put(self.adapters, sh["adapters"])
+        self._shardings = sh
+
+    def _jit_engine_fn(self, fn, n_out: int):
+        if self._shardings is None:
+            return jax.jit(fn)
+        sh = self._shardings
+        out = (sh["cache"], sh["state"]) + ((None,) if n_out == 3 else ())
+        jf = jax.jit(fn, in_shardings=(sh["params"], sh["adapters"],
+                                       sh["cache"], sh["state"]),
+                     out_shardings=out)
+        return _MeshedFn(jf, self.mesh)
+
     def _adapters_arg(self):
         """What the jitted step receives as ``adapters``: the registry's
         fixed-structure device state in multi-tenant mode (fresh VALUES
@@ -445,17 +516,17 @@ class ServeEngine:
     def _get_step(self, width: int, stochastic: bool):
         key = (width, stochastic)
         if key not in self._step_fns:
-            self._step_fns[key] = jax.jit(_build_engine_step(
+            self._step_fns[key] = self._jit_engine_fn(_build_engine_step(
                 self.cfg, width, stochastic, self.trace_counts,
-                self.decode_impl, self.lora_impl))
+                self.decode_impl, self.lora_impl), n_out=3)
         return self._step_fns[key]
 
     def _get_burst(self, steps: int, stochastic: bool):
         key = ("burst", steps, stochastic)
         if key not in self._step_fns:
-            self._step_fns[key] = jax.jit(_build_engine_burst(
+            self._step_fns[key] = self._jit_engine_fn(_build_engine_burst(
                 self.cfg, steps, stochastic, self.trace_counts,
-                self.decode_impl, self.lora_impl))
+                self.decode_impl, self.lora_impl), n_out=2)
         return self._step_fns[key]
 
     def _prefilling(self) -> bool:

@@ -185,14 +185,10 @@ def mla_cache_update(cache: Dict, c_kv_t, k_rope_t,
 # ---------------------------------------------------------------------------
 
 # un-stacked rank of every known cache/state leaf: the batch axis of a leaf
-# sits at ``ndim - rank`` (leaves may carry leading layer-stack axes).  The
-# single source of truth — launch/sharding.py's cache_pspecs imports it too.
-CACHE_LEAF_RANKS = {
-    "k": 4, "v": 4, "k_scale": 4, "v_scale": 4,
-    "c_kv": 3, "k_rope": 3, "c_kv_scale": 3, "k_rope_scale": 3,
-    "conv": 3, "ssm": 4, "wkv": 4, "tm_x": 2, "cm_x": 2,
-    "pos": 1, "length": 1,
-}
+# sits at ``ndim - rank`` (leaves may carry leading layer-stack axes).
+# Defined in the shared topology layer so partition rules and these reset
+# ops agree on one table.
+from repro.topology.partitioning import CACHE_LEAF_RANKS  # noqa: E402
 
 
 def _reset(cache: Any, row_mask_fn) -> Any:

@@ -1,0 +1,60 @@
+"""Shared topology layer: mesh construction + partition rules.
+
+One home for everything that decides *where tensors live*, consumed by both
+the trainer (``launch/``) and the serving stack (``serve/``):
+
+  * :mod:`repro.topology.mesh` — production / host / serve mesh builders and
+    axis helpers;
+  * :mod:`repro.topology.partitioning` — training-side PartitionSpec rules
+    (params, batches, KV caches, optimizer state) plus the
+    ``CACHE_LEAF_RANKS`` table and ``to_shardings``;
+  * :mod:`repro.topology.serve` — serving-side specs: ring KV caches with a
+    head-sharded (not sequence-sharded) layout, per-slot engine state, and
+    the paged multi-tenant adapter pools.
+
+``launch/mesh.py`` and ``launch/sharding.py`` remain as thin re-export shims
+so existing imports keep working.
+"""
+from repro.topology.mesh import (
+    axis_size,
+    data_axes,
+    make_host_mesh,
+    make_production_mesh,
+    make_serve_mesh,
+)
+from repro.topology.partitioning import (
+    CACHE_LEAF_RANKS,
+    ZERO3_THRESHOLD,
+    batch_pspecs,
+    cache_pspecs,
+    param_pspec,
+    params_pspecs,
+    replicated_pspecs,
+    to_shardings,
+)
+from repro.topology.serve import (
+    serve_adapter_pspecs,
+    serve_cache_pspecs,
+    serve_pspecs,
+    serve_state_pspecs,
+)
+
+__all__ = [
+    "CACHE_LEAF_RANKS",
+    "ZERO3_THRESHOLD",
+    "axis_size",
+    "batch_pspecs",
+    "cache_pspecs",
+    "data_axes",
+    "make_host_mesh",
+    "make_production_mesh",
+    "make_serve_mesh",
+    "param_pspec",
+    "params_pspecs",
+    "replicated_pspecs",
+    "serve_adapter_pspecs",
+    "serve_cache_pspecs",
+    "serve_pspecs",
+    "serve_state_pspecs",
+    "to_shardings",
+]

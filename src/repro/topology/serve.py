@@ -1,0 +1,161 @@
+"""Serving-side partition specs: the decode hot loop's tensor layouts.
+
+Training shards the KV cache's *sequence* axis over ``model`` (prefill is
+throughput-bound and GSPMD's flash-decoding partial-softmax merge is fine
+there).  Decode is latency-bound: one token per step means the sequence axis
+no longer amortizes the merge collectives, so serving shards the *head*
+axis instead — Megatron-style tensor parallelism where attention is
+collective-free per shard and the only communication is the all-reduce at
+each row-parallel output projection (``wo`` / ``w_down``):
+
+  * GQA ring caches ``(B, cap, K, hd)``: KV-head axis ``K`` → ``model``
+    (query heads follow their group: ``H = g·K`` shards with them);
+  * MLA compressed latents ``(B, cap, kvr)``: replicated — the latent
+    stream is tiny by construction and the absorbed-decode query heads
+    carry the parallelism instead (latent-attention head sharding);
+  * SSM / RWKV recurrent state: head/state axis → ``model`` as in training;
+  * per-slot engine state (``(B,)``-leading leaves): batch → ``data``;
+  * paged adapter pools: follow the base weight's Megatron layout —
+    column-parallel targets shard the B-pool's ``dout``, row-parallel
+    targets shard the A-pool's ``din``; indirection/rank tables replicated.
+    The Pallas bgmv path keeps pools replicated (the kernel is opaque to
+    GSPMD; only the XLA twin participates in tensor parallelism).
+
+Every rule degrades to ``None`` when an axis does not divide, so any model
+shape lowers on any mesh — an axis that does not fit is simply replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.topology.mesh import data_axes
+from repro.topology.partitioning import (
+    CACHE_LEAF_RANKS,
+    _COL_MODEL,
+    _ROW_MODEL,
+    _fits,
+    params_pspecs,
+)
+
+# serving shards these GQA ring-cache leaves on the KV-head axis
+_HEADED_CACHE = ("k", "v", "k_scale", "v_scale")
+# recurrent-state leaves keep their training-side head/state sharding
+_STATE_CACHE = ("ssm", "wkv")
+
+
+def _batch_axis(mesh: Mesh, dim: int):
+    dax = data_axes(mesh)
+    if _fits(mesh, dim, dax):
+        return dax if len(dax) > 1 else dax[0]
+    if _fits(mesh, dim, dax[-1]):
+        return dax[-1]
+    return None
+
+
+def serve_cache_pspecs(mesh: Mesh, cfg: ModelConfig, cache: Any) -> Any:
+    """Head-sharded ring-cache specs (see module docstring)."""
+    ranks = CACHE_LEAF_RANKS
+
+    def fix(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+        last = keys[-1]
+        nd = leaf.ndim
+        base = ranks.get(last, nd)
+        lead = max(0, nd - base)          # leading layer-stack axes
+        spec = [None] * nd
+        if last in ("pos", "length") or nd == lead:
+            return P(*spec)
+        spec[lead] = _batch_axis(mesh, leaf.shape[lead])
+        if last in _HEADED_CACHE and nd > lead + 2:
+            if _fits(mesh, leaf.shape[lead + 2], "model"):
+                spec[lead + 2] = "model"
+        elif last in _STATE_CACHE and nd > lead + 1:
+            if _fits(mesh, leaf.shape[lead + 1], "model"):
+                spec[lead + 1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def serve_state_pspecs(mesh: Mesh, state: Any) -> Any:
+    """Per-slot engine state: every ``(B, ...)`` leaf shards batch → data."""
+
+    def fix(leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = [None] * leaf.ndim
+        spec[0] = _batch_axis(mesh, leaf.shape[0])
+        return P(*spec)
+
+    return jax.tree.map(fix, state)
+
+
+def _pool_leaf_spec(mesh: Mesh, keys, leaf) -> P:
+    """Spec for one array inside a paged-pool / classic adapter leaf-dict.
+
+    ``keys`` ends with (..., target_name, {"A"|"B"|"scale"}).
+    Layouts: pool A ``(L?, P, pr, din)`` / B ``(L?, P, dout, pr)``;
+    classic A ``(L?, r, din)`` / B ``(L?, dout, r)``.
+    """
+    part = keys[-1]
+    target = keys[-2] if len(keys) >= 2 else None
+    nd = leaf.ndim
+    spec = [None] * nd
+    if part == "A" and target in _ROW_MODEL and nd >= 2:
+        if _fits(mesh, leaf.shape[-1], "model"):
+            spec[-1] = "model"                      # din follows row-parallel in
+    elif part == "B" and target in _COL_MODEL and nd >= 2:
+        if _fits(mesh, leaf.shape[-2], "model"):
+            spec[-2] = "model"                      # dout follows col-parallel out
+    return P(*spec)
+
+
+def serve_adapter_pspecs(mesh: Mesh, adapters: Any,
+                         lora_impl: str = "xla") -> Any:
+    """Specs for the engine's ``adapters`` argument: a registry device-state
+    dict, a classic single-tenant adapter tree, or ``None``."""
+    if adapters is None:
+        return None
+
+    def replicated(tree):
+        return jax.tree.map(lambda l: P(*([None] * l.ndim)), tree)
+
+    from repro.serve.adapters import is_device_state
+
+    if is_device_state(adapters):
+        if lora_impl == "kernel":
+            return replicated(adapters)
+        def fix(path, leaf):
+            keys = tuple(getattr(k, "key", getattr(k, "idx", None))
+                         for k in path)
+            if keys[0] != "pools":
+                return P(*([None] * leaf.ndim))     # table / rank: replicated
+            return _pool_leaf_spec(mesh, keys, leaf)
+        return jax.tree_util.tree_map_with_path(fix, adapters)
+
+    if lora_impl == "kernel":
+        return replicated(adapters)
+
+    def fix(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+        return _pool_leaf_spec(mesh, keys, leaf)
+
+    return jax.tree_util.tree_map_with_path(fix, adapters)
+
+
+def serve_pspecs(mesh: Mesh, cfg: ModelConfig, params: Any, cache: Any,
+                 state: Any, adapters: Any = None,
+                 lora_impl: str = "xla") -> Dict[str, Any]:
+    """The full spec bundle for one engine: params reuse the training
+    Megatron rules (``params_pspecs``); cache/state/adapters get the
+    serving-specific rules above."""
+    return {
+        "params": params_pspecs(mesh, cfg, params),
+        "cache": serve_cache_pspecs(mesh, cfg, cache),
+        "state": serve_state_pspecs(mesh, state),
+        "adapters": serve_adapter_pspecs(mesh, adapters, lora_impl),
+    }
