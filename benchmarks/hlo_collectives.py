@@ -110,7 +110,7 @@ def _serve_config():
 def main_serve(args):
     import jax
 
-    from repro.launch.dryrun import collective_bytes
+    from repro.analysis.hlo_audit import collective_bytes, run_audit
     from repro.models import transformer as T
     from repro.serve.engine import ServeEngine
     from repro.topology import make_serve_mesh
@@ -133,46 +133,12 @@ def main_serve(args):
           f"mesh=(1,{msize}) B={B} cap={cap}")
     print("collective bytes/step:", {k: v for k, v in totals.items() if v})
 
-    failures = []
-
-    # 1. schedule shape: head-parallel decode communicates ONLY via
-    # all-reduce (row-parallel projections, vocab-sharded logit reduction)
-    # plus at most small all-gathers from the sampling epilogue; a
-    # sequence-sharded or resharding-happy lowering would show up here
-    if totals["all-to-all"]:
-        failures.append(f"unexpected all-to-all ({totals['all-to-all']}B)")
-    if msize > 1 and totals["all-reduce"] == 0:
-        failures.append("expected all-reduce at row-parallel projections, "
-                        "found none")
-
-    # 2. total bytes: per step, the dominant traffic is one (B,C,d) f32
-    # all-reduce per row-parallel projection (wo + w_down per layer + the
-    # embed row-combine) plus the (B,C,V) logit epilogue.  8x slack keeps
-    # the bound meaningful (a dense (B,H,C,cap) gather would blow it by
-    # orders of magnitude) without tracking XLA's exact fusion choices.
-    C, d, V, L = args.width, cfg.d_model, cfg.vocab_size, cfg.num_layers
-    analytic = 4 * B * C * ((2 * L + 1) * d + 2 * V)
-    bound = 8 * analytic if msize > 1 else 0
-    total = sum(totals.values())
-    if total > bound:
-        failures.append(f"collective bytes {total} exceed bound {bound} "
-                        f"(analytic {analytic})")
-
-    # 3. no dense score/mask resurrection in the streamed/kernel interior
-    # (the PR 5 live-memory guarantee must survive the sharded lowering);
-    # buffers shrink by the shard factor, so check every per-shard shape
-    if args.decode_impl != "dense":
-        H, K = cfg.num_heads, cfg.num_kv_heads
-        forbidden = []
-        for s in {1, msize}:
-            for b in range(1, B + 1):
-                forbidden += [
-                    f"f32[{b},{H // s},{C},{cap}]",
-                    f"f32[{b},{K // s},{H // K},{C},{cap}]",
-                ]
-        found = sorted({f for f in forbidden if f in txt})
-        if found:
-            failures.append(f"dense score buffers rematerialized: {found}")
+    # the declarative schedule assertions live in repro.analysis.hlo_audit
+    # ("serve.decode_step"); CI regression tests run the same audit
+    failures = run_audit("serve.decode_step", txt, {
+        "cfg": cfg, "mesh": msize, "batch": B, "capacity": cap,
+        "width": args.width, "decode_impl": args.decode_impl,
+    })
 
     if failures:
         for f in failures:

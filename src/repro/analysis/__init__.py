@@ -1,0 +1,23 @@
+"""Static analysis for the repro codebase (``repro-lint`` + contracts).
+
+Three layers, all zero-execution:
+
+* :mod:`repro.analysis.lint` — AST rule engine with JAX-specific rules
+  (retrace hazards, host syncs in hot loops, import-time device compute,
+  static-arg hazards, topology-shim bypasses).  CLI: ``repro-lint``.
+* :mod:`repro.analysis.contracts` / :mod:`repro.analysis.registry` — the
+  ``@check_contract`` registry every major entrypoint registers with; the
+  checker runs ``jax.eval_shape`` / ``jax.make_jaxpr`` across the config
+  matrix and asserts declared invariants plus jaxpr-level bans.
+* :mod:`repro.analysis.hlo_audit` — declarative assertions over compiled
+  artifacts (forbidden buffer shapes, collective byte bounds, donation),
+  shared by ``benchmarks/hlo_collectives.py`` and CI.
+"""
+from repro.analysis.hlo_audit import (audit_names, collective_bytes,  # noqa: F401
+                                      run_audit, shape_bytes)
+from repro.analysis.lint import Finding, lint_paths, lint_source  # noqa: F401
+from repro.analysis.registry import check_contract, contract_names  # noqa: F401
+
+__all__ = ["Finding", "lint_paths", "lint_source", "check_contract",
+           "contract_names", "run_audit", "audit_names", "collective_bytes",
+           "shape_bytes"]

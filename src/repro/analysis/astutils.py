@@ -1,0 +1,323 @@
+"""Shared AST machinery for the lint rules.
+
+Everything here is pure ``ast`` — no jax import, so ``repro-lint`` runs in
+any environment (including pre-commit hooks with no accelerator stack).
+
+The central abstractions:
+
+* :class:`ModuleInfo` — one parsed file: source, tree, the import alias map
+  (``jnp`` → ``jax.numpy``), and per-line suppressions.
+* :func:`resolve` — dotted qualname of an expression through the alias map.
+* :func:`traced_functions` — the functions whose bodies execute under a
+  JAX trace.  Detection is evidence-based: a jit-like decorator, being
+  passed to a jit/vmap/grad/``lax.scan``-style wrapper in the same scope,
+  or being the function *returned by* a step builder (the repo convention:
+  ``make_*`` / ``_build_*`` factories return the traced step).  Pallas
+  kernel bodies (``pl.pallas_call`` targets) are deliberately excluded —
+  branching on ``functools.partial``-bound static config is idiomatic
+  there and value branches already go through ``pl.when``.
+* the taint helpers — which expressions carry *traced values* (function
+  params and anything derived from them), with the host-safe escapes
+  (``.shape`` / ``.dtype`` / ``.ndim`` / ``len()`` / ``is None`` ...)
+  considered untainted.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# -- suppression syntax -----------------------------------------------------
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w*-]+(?:\s*,\s*[\w*-]+)*)")
+
+#: qualnames that put their callee under a JAX trace
+JIT_NAMES = frozenset({
+    "jax.jit", "jax.pjit", "jax.experimental.pjit.pjit",
+})
+TRACED_WRAPPERS = JIT_NAMES | frozenset({
+    "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.jacfwd", "jax.jacrev", "jax.hessian", "jax.jvp", "jax.vjp",
+    "jax.linearize", "jax.checkpoint", "jax.remat",
+    "jax.eval_shape", "jax.make_jaxpr",
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.cond", "jax.lax.switch",
+    "jax.lax.map", "jax.lax.fori_loop", "jax.lax.associative_scan",
+})
+#: function name patterns of traced-step builders (repo convention:
+#: the def a ``make_*`` / ``_build_*`` factory returns is jitted by callers)
+BUILDER_RE = re.compile(r"^(make_|_?build_)")
+
+#: attribute reads that yield host metadata, never a traced value
+HOST_SAFE_ATTRS = frozenset({
+    "shape", "ndim", "dtype", "size", "aval", "sharding", "itemsize",
+    "weak_type", "nbytes",
+})
+#: calls whose result is host data regardless of argument taint
+HOST_SAFE_CALLS = frozenset({
+    "len", "isinstance", "type", "id", "repr", "str", "hash", "getattr",
+    "hasattr", "callable",
+})
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file plus the lookup tables rules need."""
+
+    path: str                       # as given (display)
+    relpath: str                    # path relative to the lint root
+    source: str
+    tree: ast.Module
+    imports: Dict[str, str]         # local alias -> dotted qualname
+    suppressions: Dict[int, Optional[Set[str]]]  # line -> rules (None = all)
+
+    @classmethod
+    def parse(cls, path: str, source: str, relpath: Optional[str] = None
+              ) -> "ModuleInfo":
+        tree = ast.parse(source, filename=path)
+        return cls(path=path, relpath=relpath or path, source=source,
+                   tree=tree, imports=_import_map(tree),
+                   suppressions=_suppressions(source))
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        rules = self.suppressions.get(line, ())
+        return rules is None or rule in rules
+
+
+def _import_map(tree: ast.Module) -> Dict[str, str]:
+    imports: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imports[a.asname or a.name.split(".", 1)[0]] = (
+                    a.name if a.asname else a.name.split(".", 1)[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name != "*":
+                    imports[a.asname or a.name] = f"{node.module}.{a.name}"
+    return imports
+
+
+def _suppressions(source: str) -> Dict[int, Optional[Set[str]]]:
+    out: Dict[int, Optional[Set[str]]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out[i] = None if "all" in rules or "*" in rules else rules
+    return out
+
+
+def resolve(node: ast.expr, imports: Dict[str, str]) -> Optional[str]:
+    """Dotted qualname of a Name/Attribute chain through the alias map
+    (``jnp.zeros`` -> ``jax.numpy.zeros``); None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(imports.get(node.id, node.id))
+        return ".".join(reversed(parts))
+    return None
+
+
+# -- traced-function discovery ----------------------------------------------
+
+
+@dataclasses.dataclass
+class TracedFn:
+    node: ast.FunctionDef
+    reason: str                     # evidence ("jit decorator", ...)
+    static_names: Set[str]          # params excluded from taint
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """Parse ``static_argnames=("a", "b")`` (or a single string) from a
+    jit-like call's keywords."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return set()
+
+
+def _jit_like(call: ast.Call, imports: Dict[str, str]) -> bool:
+    return resolve(call.func, imports) in JIT_NAMES
+
+
+def _partial_of_jit(node: ast.expr, imports: Dict[str, str]
+                    ) -> Optional[ast.Call]:
+    """``functools.partial(jax.jit, ...)`` -> the partial Call, else None."""
+    if (isinstance(node, ast.Call)
+            and resolve(node.func, imports) in ("functools.partial", "partial")
+            and node.args and _is_jit_name(node.args[0], imports)):
+        return node
+    return None
+
+
+def _is_jit_name(node: ast.expr, imports: Dict[str, str]) -> bool:
+    return resolve(node, imports) in JIT_NAMES
+
+
+def traced_functions(mod: ModuleInfo) -> List[TracedFn]:
+    """Every function whose body runs under a JAX trace, with evidence."""
+    out: Dict[ast.FunctionDef, TracedFn] = {}
+
+    def add(fn: ast.FunctionDef, reason: str, static: Set[str]) -> None:
+        if fn not in out:
+            out[fn] = TracedFn(fn, reason, static)
+
+    def local_defs(body) -> Dict[str, ast.FunctionDef]:
+        return {n.name: n for n in body if isinstance(n, ast.FunctionDef)}
+
+    def scan_scope(body, enclosing: Optional[ast.FunctionDef]) -> None:
+        defs = local_defs(body)
+        # (1) decorator evidence
+        for fn in defs.values():
+            for dec in fn.decorator_list:
+                if _is_jit_name(dec, mod.imports):
+                    add(fn, "jit decorator", set())
+                elif isinstance(dec, ast.Call) and _jit_like(dec, mod.imports):
+                    add(fn, "jit decorator", _static_argnames(dec))
+                else:
+                    p = _partial_of_jit(dec, mod.imports)
+                    if p is not None:
+                        add(fn, "partial(jit) decorator", _static_argnames(p))
+        # (2) passed to a jit/vmap/grad/lax.* wrapper in this scope
+        for node in body:
+            for call in (n for n in ast.walk(node) if isinstance(n, ast.Call)):
+                fq = resolve(call.func, mod.imports)
+                if fq not in TRACED_WRAPPERS:
+                    continue
+                for arg in call.args:
+                    if isinstance(arg, ast.Name) and arg.id in defs:
+                        static = (_static_argnames(call)
+                                  if fq in JIT_NAMES else set())
+                        add(defs[arg.id], f"passed to {fq}", static)
+        # (3) returned by a step builder
+        if enclosing is not None and BUILDER_RE.match(enclosing.name):
+            returned = {n.value.id for n in ast.walk(enclosing)
+                        if isinstance(n, ast.Return)
+                        and isinstance(n.value, ast.Name)}
+            for name in returned & set(defs):
+                add(defs[name], f"returned by builder {enclosing.name}", set())
+        # recurse into nested scopes
+        for fn in defs.values():
+            scan_scope(fn.body, fn)
+
+    scan_scope(mod.tree.body, None)
+    return list(out.values())
+
+
+def param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+# -- taint ------------------------------------------------------------------
+
+
+def _is_none_compare(node: ast.expr) -> bool:
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops))
+
+
+def direct_taint(node: ast.expr, tainted: Set[str],
+                 imports: Dict[str, str]) -> bool:
+    """Whether ``node`` *directly* carries a traced value: a tainted name,
+    or arithmetic / boolean / comparison / subscript / non-metadata
+    attribute chains over one.  Call results are opaque (a predicate like
+    ``is_device_state(x)`` may legally return host data), and the host-safe
+    metadata escapes (``x.shape``, ``len(x)``, ``x is None``) never taint.
+    """
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Call):
+        # free-function results are opaque (a predicate may return host
+        # data), but a METHOD call on a traced receiver (x.sum(), x.any())
+        # yields a tracer
+        if isinstance(node.func, ast.Attribute):
+            return direct_taint(node.func.value, tainted, imports)
+        return False
+    if isinstance(node, ast.Attribute):
+        if node.attr in HOST_SAFE_ATTRS:
+            return False
+        return direct_taint(node.value, tainted, imports)
+    if isinstance(node, ast.Subscript):
+        return direct_taint(node.value, tainted, imports)
+    if isinstance(node, ast.Compare):
+        if _is_none_compare(node):
+            return False
+        return any(direct_taint(n, tainted, imports)
+                   for n in [node.left] + node.comparators)
+    if isinstance(node, ast.BoolOp):
+        return any(direct_taint(v, tainted, imports) for v in node.values)
+    if isinstance(node, ast.UnaryOp):
+        return direct_taint(node.operand, tainted, imports)
+    if isinstance(node, ast.BinOp):
+        return (direct_taint(node.left, tainted, imports)
+                or direct_taint(node.right, tainted, imports))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(direct_taint(e, tainted, imports) for e in node.elts)
+    if isinstance(node, ast.IfExp):
+        return (direct_taint(node.body, tainted, imports)
+                or direct_taint(node.orelse, tainted, imports))
+    return False
+
+
+def taints_through(node: ast.expr, tainted: Set[str],
+                   imports: Dict[str, str]) -> bool:
+    """Whether assigning ``node`` to a name should taint it.  Unlike
+    :func:`direct_taint`, calls DO propagate (``y = f(x)`` with traced
+    ``x`` almost always yields a tracer) unless the callee is a host-safe
+    metadata call or the expression is an ``is None`` test."""
+    if _is_none_compare(node):
+        return False
+    if isinstance(node, ast.Call):
+        fq = resolve(node.func, imports)
+        if fq in HOST_SAFE_CALLS:
+            return False
+        return any(taints_through(a, tainted, imports) for a in node.args) or \
+            any(taints_through(kw.value, tainted, imports)
+                for kw in node.keywords)
+    if isinstance(node, ast.Attribute):
+        if node.attr in HOST_SAFE_ATTRS:
+            return False
+        return taints_through(node.value, tainted, imports)
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.expr) and taints_through(child, tainted,
+                                                          imports):
+            return True
+    return isinstance(node, ast.Name) and node.id in tainted
+
+
+def assign_targets(node: ast.stmt) -> Iterator[str]:
+    """Names bound by an assignment statement (tuples flattened)."""
+    targets: List[ast.expr] = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                yield n.id
+
+
+def walk_scope(body: List[ast.stmt]) -> Iterator[Tuple[ast.AST, bool]]:
+    """Yield ``(node, entering_nested_fn)`` over a function body in source
+    order, descending into nested defs (their bodies trace too)."""
+    for stmt in body:
+        for node in ast.walk(stmt):
+            yield node, isinstance(node, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))

@@ -1,0 +1,128 @@
+"""``repro-lint`` — the AST lint driver.
+
+Pure-``ast`` (no jax import), so it runs anywhere, instantly::
+
+    repro-lint src/                      # lint a tree (exit 1 on findings)
+    repro-lint --list-rules              # rule catalog
+    repro-lint --select host-branch-on-traced src/repro/serve/engine.py
+
+Suppression is inline, per line, with a justification comment::
+
+    x = int(flag)  # repro-lint: disable=host-branch-on-traced -- host flag
+
+``disable=all`` silences every rule on the line.  Unsuppressed findings
+fail the build (this is wired as a tier-1 CI job).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.astutils import ModuleInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"[{self.rule}] {self.message}"
+
+
+def _iter_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+        else:
+            yield p
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Sequence[str]] = None,
+                relpath: Optional[str] = None) -> List[Finding]:
+    """Lint one source string; suppressions applied.  ``select`` limits to
+    the named rules."""
+    from repro.analysis.rules import all_rules
+    mod = ModuleInfo.parse(path, source, relpath=relpath)
+    rules = all_rules()
+    if select:
+        unknown = set(select) - set(rules)
+        if unknown:
+            raise ValueError(f"unknown lint rule(s): {sorted(unknown)}")
+        rules = {k: v for k, v in rules.items() if k in select}
+    findings = []
+    for name, rule in sorted(rules.items()):
+        for f in rule(mod):
+            if not mod.suppressed(name, f.line):
+                findings.append(f)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    root = os.path.commonpath([os.path.abspath(p) for p in paths]) \
+        if paths else os.getcwd()
+    for fp in _iter_files(paths):
+        rel = os.path.relpath(os.path.abspath(fp), root) \
+            if os.path.isdir(root) else fp
+        with open(fp, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            findings.extend(lint_source(src, path=fp, select=select,
+                                        relpath=fp))
+        except SyntaxError as e:
+            findings.append(Finding(rule="syntax-error", path=fp,
+                                    line=e.lineno or 0, col=e.offset or 0,
+                                    message=str(e.msg)))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from repro.analysis.rules import rule_docs
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX-aware static lint for the repro codebase")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="RULE", help="run only the named rule(s)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, doc in sorted(rule_docs().items()):
+            print(f"{name:28s} {doc}")
+        return 0
+
+    findings = lint_paths(args.paths or ["src"], select=args.select)
+    if args.json:
+        print(json.dumps([dataclasses.asdict(f) for f in findings],
+                         indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        n = len(findings)
+        print(f"repro-lint: {n} finding{'s' if n != 1 else ''}"
+              if n else "repro-lint: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,126 @@
+"""The ``@check_contract`` registry.
+
+Every major entrypoint (train step, serve step, engine step/burst,
+aggregator finalize cores, each Pallas kernel and its XLA twin) registers a
+*contract builder* here.  A builder receives one :class:`Case` from the
+config matrix and returns a :class:`ContractCase` describing a function to
+abstractly evaluate plus the invariants it must satisfy — or ``None`` when
+the case does not apply (e.g. an SSM family for an attention kernel).
+
+This module is deliberately lightweight (no jax import): registration
+happens at import time of the subsystem modules, and the heavy lifting
+(``jax.eval_shape`` / ``jax.make_jaxpr``) lives in
+:mod:`repro.analysis.contracts`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+#: config-matrix axes a contract can vary over
+FAMILIES = ("gqa", "mla", "moe", "ssm")
+DECODE_IMPLS = ("dense", "streamed", "kernel")
+MESH_SIZES = (1, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One point of the config matrix."""
+    family: str = "gqa"
+    decode_impl: str = "dense"
+    mesh: int = 1
+
+    def label(self) -> str:
+        return f"{self.family}/{self.decode_impl}/mesh{self.mesh}"
+
+
+@dataclasses.dataclass
+class ContractCase:
+    """What the checker abstractly evaluates for one (contract, case).
+
+    ``fn(*args)`` must be traceable with ``jax.eval_shape`` — zero FLOPs.
+    ``args`` are ShapeDtypeStructs (or concrete small arrays; they are
+    never materialized on device by the checker).
+
+    Invariants:
+
+    * ``out_check(out_avals, case)`` — raise/assert on bad output
+      shape/dtype structure (called with the eval_shape result);
+    * ``pspec_tree`` — optional ``(pytree_of_arrays_or_structs,
+      pytree_of_PartitionSpecs)`` pair; the checker asserts every spec fits
+      its array's rank and that sharded axes divide evenly on ``mesh``
+      (an ``AbstractMesh`` at the case's mesh size — no devices needed);
+    * ``twin`` — optional second ``(fn, args)`` whose eval_shape output
+      avals must be identical to the primary's (Pallas kernel ↔ XLA twin);
+    * ``forbid_f64`` / ``forbid_callbacks`` — jaxpr-level bans (fp64
+      upcasts; pure/io/debug callbacks in the hot path).
+    """
+    fn: Callable
+    args: Tuple[Any, ...]
+    out_check: Optional[Callable[[Any, Case], None]] = None
+    pspec_tree: Optional[Tuple[Any, Any]] = None
+    mesh: Any = None
+    twin: Optional[Tuple[Callable, Tuple[Any, ...]]] = None
+    forbid_f64: bool = True
+    forbid_callbacks: bool = True
+
+
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    build: Callable[[Case], Optional[ContractCase]]
+    families: Sequence[str]
+    decode_impls: Sequence[str]
+    mesh_sizes: Sequence[int]
+
+    def cases(self) -> List[Case]:
+        return [Case(f, d, m) for f in self.families
+                for d in self.decode_impls for m in self.mesh_sizes]
+
+
+_CONTRACTS: Dict[str, _Entry] = {}
+
+
+def check_contract(name: str, *, families: Sequence[str] = ("gqa",),
+                   decode_impls: Sequence[str] = ("dense",),
+                   mesh_sizes: Sequence[int] = MESH_SIZES):
+    """Register ``build(case) -> ContractCase | None`` under ``name``.
+
+    The axes keywords declare which slice of the global matrix the
+    contract varies over; the checker enumerates their cross product.
+    """
+
+    def deco(build: Callable[[Case], Optional[ContractCase]]):
+        if name in _CONTRACTS:
+            raise ValueError(f"duplicate contract {name!r}")
+        _CONTRACTS[name] = _Entry(name, build, tuple(families),
+                                  tuple(decode_impls), tuple(mesh_sizes))
+        return build
+
+    return deco
+
+
+def contract_entries() -> Dict[str, _Entry]:
+    """All registered contracts (after :func:`load_registrations`)."""
+    return dict(_CONTRACTS)
+
+
+def contract_names() -> List[str]:
+    return sorted(_CONTRACTS)
+
+
+#: modules whose import registers the repo's built-in contracts
+REGISTRATION_MODULES = (
+    "repro.train.step",
+    "repro.serve.engine",
+    "repro.core.aggregators",
+    "repro.kernels.ops",
+)
+
+
+def load_registrations() -> List[str]:
+    """Import every registration module; return the contract names."""
+    import importlib
+    for m in REGISTRATION_MODULES:
+        importlib.import_module(m)
+    return contract_names()

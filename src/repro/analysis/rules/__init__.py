@@ -1,0 +1,45 @@
+"""Lint rule registry.
+
+A rule is a function ``(module: ModuleInfo) -> Iterator[Finding]``
+registered under a stable kebab-case name (the name users suppress with
+``# repro-lint: disable=<rule>``).  Importing this package loads every
+built-in rule module.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Iterator, List
+
+_RULES: Dict[str, Callable] = {}
+_DOCS: Dict[str, str] = {}
+
+_BUILTIN_MODULES = ("retrace", "imports", "structure")
+
+
+def register_rule(name: str, doc: str = ""):
+    """Decorator: register ``fn`` as lint rule ``name``."""
+
+    def deco(fn):
+        if name in _RULES:
+            raise ValueError(f"duplicate lint rule {name!r}")
+        _RULES[name] = fn
+        _DOCS[name] = doc or (fn.__doc__ or "").strip().splitlines()[0]
+        fn.rule_name = name
+        return fn
+
+    return deco
+
+
+def all_rules() -> Dict[str, Callable]:
+    _load()
+    return dict(_RULES)
+
+
+def rule_docs() -> Dict[str, str]:
+    _load()
+    return dict(_DOCS)
+
+
+def _load() -> None:
+    for m in _BUILTIN_MODULES:
+        importlib.import_module(f"{__name__}.{m}")

@@ -1,0 +1,97 @@
+"""Import-surface rules: device compute at module import time, and internal
+imports that bypass :mod:`repro.topology` via the ``launch/`` shims.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutils import ModuleInfo, resolve
+from repro.analysis.lint import Finding
+from repro.analysis.rules import register_rule
+
+#: jax namespaces whose *calls* allocate device buffers / build tracers —
+#: at module scope they run at import time, before XLA_FLAGS management or
+#: mesh setup, and pin arrays to the default device
+_COMPUTE_PREFIXES = ("jax.numpy.", "jax.random.", "jax.nn.", "jax.lax.")
+#: metadata-only callables that are safe at import time
+_SAFE_SUFFIXES = (".dtype",)
+
+_SHIM_MODULES = ("repro.launch.mesh", "repro.launch.sharding")
+
+
+def _module_scope_calls(tree: ast.Module) -> Iterator[ast.Call]:
+    """Calls executed at import: module-level statements, class bodies and
+    default-argument expressions — but NOT function bodies or the
+    ``if __name__ == "__main__"`` block."""
+
+    def is_main_guard(node: ast.stmt) -> bool:
+        return (isinstance(node, ast.If)
+                and isinstance(node.test, ast.Compare)
+                and isinstance(node.test.left, ast.Name)
+                and node.test.left.id == "__name__")
+
+    def scan(body) -> Iterator[ast.Call]:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # default-arg expressions also run at import, but the
+                # mutable-default-pytree rule owns that report
+                continue
+            if is_main_guard(stmt):
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                yield from scan(stmt.body)
+                continue
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Call):
+                    yield n
+
+    yield from scan(tree.body)
+
+
+@register_rule(
+    "import-time-jax-compute",
+    "jnp./jax.random/jax.nn calls at module import time")
+def import_time_jax_compute(mod: ModuleInfo) -> Iterator[Finding]:
+    for call in _module_scope_calls(mod.tree):
+        fq = resolve(call.func, mod.imports)
+        if not fq:
+            continue
+        if fq.endswith(_SAFE_SUFFIXES):
+            continue
+        if any(fq.startswith(p) for p in _COMPUTE_PREFIXES) \
+                or fq in ("jax.jit", "jax.device_put"):
+            yield Finding(
+                rule="import-time-jax-compute", path=mod.relpath,
+                line=call.lineno, col=call.col_offset,
+                message=f"`{fq}` runs at module import time: allocates on "
+                        f"the default device before flag/mesh setup and "
+                        f"breaks jax-free importability")
+
+
+@register_rule(
+    "topology-shim-bypass",
+    "internal imports of repro.launch.mesh/sharding instead of "
+    "repro.topology")
+def topology_shim_bypass(mod: ModuleInfo) -> Iterator[Finding]:
+    # the shims themselves (and this package) are exempt
+    rel = mod.relpath.replace("\\", "/")
+    if rel.endswith(("launch/mesh.py", "launch/sharding.py")):
+        return
+    for node in ast.walk(mod.tree):
+        hit = None
+        if isinstance(node, ast.Import):
+            hit = next((a.name for a in node.names
+                        if a.name in _SHIM_MODULES), None)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module in _SHIM_MODULES:
+                hit = node.module
+            elif node.module == "repro.launch" and any(
+                    a.name in ("mesh", "sharding") for a in node.names):
+                hit = "repro.launch"
+        if hit:
+            yield Finding(
+                rule="topology-shim-bypass", path=mod.relpath,
+                line=node.lineno, col=node.col_offset,
+                message=f"import of deprecated shim `{hit}`: import from "
+                        f"repro.topology instead")

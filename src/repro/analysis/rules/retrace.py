@@ -1,0 +1,187 @@
+"""Rules over *traced* function bodies: retrace / concretization hazards
+and host synchronization in the jitted hot loops.
+
+``host-branch-on-traced`` — Python control flow (``if`` / ``while`` /
+``assert``) or explicit concretization (``bool()`` / ``int()`` / ``float()``
+/ ``.item()`` / ``.tolist()``) on a value that flows from a traced function
+parameter.  Under ``jit`` these either raise ``ConcretizationTypeError`` or
+— worse — silently bake a host value into the compiled program and retrace
+on every change.
+
+``host-sync-in-hot-loop`` — ``jax.device_get`` / ``block_until_ready`` /
+``np.asarray`` in a function reachable from a traced entrypoint: a device
+round-trip in the decode burst serializes the dispatch pipeline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set
+
+from repro.analysis.astutils import (ModuleInfo, TracedFn, assign_targets,
+                                     direct_taint, param_names, resolve,
+                                     taints_through, traced_functions)
+from repro.analysis.lint import Finding
+from repro.analysis.rules import register_rule
+
+_CONCRETIZERS = ("bool", "int", "float", "complex")
+_ITEM_METHODS = ("item", "tolist", "__bool__", "__int__", "__float__")
+
+_SYNC_QUALNAMES = frozenset({
+    "jax.device_get", "jax.block_until_ready",
+    "numpy.asarray", "numpy.array", "numpy.copy",
+})
+
+
+class _TaintScan:
+    """One pass over a traced function: propagate taint statement by
+    statement, flag host branches / concretizations on tainted values."""
+
+    def __init__(self, mod: ModuleInfo, traced: TracedFn, rule: str):
+        self.mod = mod
+        self.rule = rule
+        self.findings: List[Finding] = []
+        fn = traced.node
+        self.tainted: Set[str] = (
+            set(param_names(fn)) - traced.static_names - {"self"})
+        self.reason = traced.reason
+        self._scan(fn.body)
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(Finding(
+            rule=self.rule, path=self.mod.relpath, line=node.lineno,
+            col=node.col_offset,
+            message=f"{what} on a traced value inside a traced function "
+                    f"({self.reason}): retrace / ConcretizationTypeError "
+                    f"hazard"))
+
+    def _taints(self, node: ast.expr) -> bool:
+        return taints_through(node, self.tainted, self.mod.imports)
+
+    def _direct(self, node: ast.expr) -> bool:
+        return direct_taint(node, self.tainted, self.mod.imports)
+
+    def _scan_expr(self, node: ast.expr) -> None:
+        for call in (n for n in ast.walk(node) if isinstance(n, ast.Call)):
+            f = call.func
+            if (isinstance(f, ast.Name) and f.id in _CONCRETIZERS
+                    and call.args and self._direct(call.args[0])):
+                self._flag(call, f"{f.id}()")
+            elif (isinstance(f, ast.Attribute) and f.attr in _ITEM_METHODS
+                    and self._direct(f.value)):
+                self._flag(call, f".{f.attr}()")
+
+    def _scan(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.If, ast.While)):
+                if self._direct(stmt.test):
+                    kw = "if" if isinstance(stmt, ast.If) else "while"
+                    self._flag(stmt, f"Python `{kw}`")
+                self._scan_expr(stmt.test)
+                self._scan(stmt.body)
+                self._scan(stmt.orelse)
+            elif isinstance(stmt, ast.Assert):
+                if self._direct(stmt.test):
+                    self._flag(stmt, "`assert`")
+                self._scan_expr(stmt.test)
+            elif isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = stmt.value
+                if value is not None:
+                    self._scan_expr(value)
+                    if self._taints(value):
+                        self.tainted |= set(assign_targets(stmt))
+            elif isinstance(stmt, ast.For):
+                self._scan_expr(stmt.iter)
+                if self._taints(stmt.iter):
+                    self.tainted |= {n.id for n in ast.walk(stmt.target)
+                                     if isinstance(n, ast.Name)}
+                self._scan(stmt.body)
+                self._scan(stmt.orelse)
+            elif isinstance(stmt, ast.FunctionDef):
+                # nested defs trace too; their params carry traced values
+                self.tainted |= set(param_names(stmt)) - {"self"}
+                self._scan(stmt.body)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if stmt.value is not None:
+                    self._scan_expr(stmt.value)
+            elif isinstance(stmt, (ast.With,)):
+                for item in stmt.items:
+                    self._scan_expr(item.context_expr)
+                self._scan(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._scan(stmt.body)
+                for h in stmt.handlers:
+                    self._scan(h.body)
+                self._scan(stmt.orelse)
+                self._scan(stmt.finalbody)
+
+
+@register_rule(
+    "host-branch-on-traced",
+    "Python control flow / bool()/int()/float()/.item() on traced values")
+def host_branch_on_traced(mod: ModuleInfo) -> Iterator[Finding]:
+    seen = set()
+    for traced in traced_functions(mod):
+        for f in _TaintScan(mod, traced, "host-branch-on-traced").findings:
+            key = (f.line, f.col, f.message)
+            if key not in seen:       # nested defs are scanned once per parent
+                seen.add(key)
+                yield f
+
+
+def _local_call_graph(mod: ModuleInfo) -> Dict[str, Set[str]]:
+    """name -> called local names, approximated by bare-Name calls."""
+    defs = {n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.FunctionDef)}
+    graph: Dict[str, Set[str]] = {}
+    for name, fn in defs.items():
+        calls = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                    and node.func.id in defs:
+                calls.add(node.func.id)
+        graph[name] = calls
+    return graph
+
+
+@register_rule(
+    "host-sync-in-hot-loop",
+    "device_get / block_until_ready / np.asarray reachable from a traced "
+    "entrypoint")
+def host_sync_in_hot_loop(mod: ModuleInfo) -> Iterator[Finding]:
+    traced = traced_functions(mod)
+    if not traced:
+        return
+    graph = _local_call_graph(mod)
+    defs = {n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.FunctionDef)}
+    reachable = {t.node.name for t in traced}
+    frontier = list(reachable)
+    while frontier:
+        nxt = frontier.pop()
+        for callee in graph.get(nxt, ()):
+            if callee not in reachable:
+                reachable.add(callee)
+                frontier.append(callee)
+    seen = set()
+    for name in sorted(reachable):
+        fn = defs.get(name)
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fq = resolve(node.func, mod.imports)
+            bad = None
+            if fq in _SYNC_QUALNAMES:
+                bad = fq
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "block_until_ready"):
+                bad = ".block_until_ready()"
+            if bad and node.lineno not in seen:
+                seen.add(node.lineno)
+                yield Finding(
+                    rule="host-sync-in-hot-loop", path=mod.relpath,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"{bad} in `{name}`, reachable from a jitted "
+                            f"hot loop: forces a host sync / device "
+                            f"round-trip per step")

@@ -1,0 +1,122 @@
+"""Structural hazards: jit misuse (re-jit in loops, non-hashable static
+args) and mutable default pytrees.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Set
+
+from repro.analysis.astutils import (ModuleInfo, resolve, JIT_NAMES,
+                                     _partial_of_jit, _static_argnames)
+from repro.analysis.lint import Finding
+from repro.analysis.rules import register_rule
+
+
+@register_rule(
+    "jit-in-loop",
+    "jax.jit called inside a Python loop body (re-traces every iteration)")
+def jit_in_loop(mod: ModuleInfo) -> Iterator[Finding]:
+    for loop in ast.walk(mod.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        for node in ast.walk(loop):
+            if node is loop:
+                continue
+            # nested defs inside the loop only *define*, not call
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, ast.Call):
+                fq = resolve(node.func, mod.imports)
+                if fq in JIT_NAMES or _partial_of_jit(node, mod.imports):
+                    yield Finding(
+                        rule="jit-in-loop", path=mod.relpath,
+                        line=node.lineno, col=node.col_offset,
+                        message="jax.jit inside a loop body builds a fresh "
+                                "jitted callable (and cache entry) every "
+                                "iteration — hoist or memoize it")
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def _jitted_static_params(mod: ModuleInfo) -> Dict[str, Set[str]]:
+    """name -> static param names, for defs with a jit-like decorator."""
+    out: Dict[str, Set[str]] = {}
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for dec in fn.decorator_list:
+            call = dec if isinstance(dec, ast.Call) else None
+            if call is None:
+                continue
+            if resolve(call.func, mod.imports) in JIT_NAMES:
+                out[fn.name] = _static_argnames(call)
+            else:
+                p = _partial_of_jit(call, mod.imports)
+                if p is not None:
+                    out[fn.name] = _static_argnames(p)
+    return out
+
+
+@register_rule(
+    "nonhashable-static-arg",
+    "list/dict/set passed for a static jit argument (TypeError at call "
+    "time, or silent retrace churn via unstable hashes)")
+def nonhashable_static_arg(mod: ModuleInfo) -> Iterator[Finding]:
+    static = _jitted_static_params(mod)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # direct call of a module-local jitted function
+        if isinstance(node.func, ast.Name) and node.func.id in static:
+            names = static[node.func.id]
+            for kw in node.keywords:
+                if kw.arg in names and isinstance(kw.value, _UNHASHABLE):
+                    yield Finding(
+                        rule="nonhashable-static-arg", path=mod.relpath,
+                        line=kw.value.lineno, col=kw.value.col_offset,
+                        message=f"static argument `{kw.arg}` of "
+                                f"`{node.func.id}` gets a non-hashable "
+                                f"literal — pass a tuple / frozen value")
+        # jax.jit(f, static_argnames=...) with unhashable *bound* args via
+        # functools.partial(f, cfg=[...])-style wrapping
+        fq = resolve(node.func, mod.imports)
+        if fq in ("functools.partial", "partial") and node.args:
+            tgt = node.args[0]
+            if isinstance(tgt, ast.Name) and tgt.id in static:
+                names = static[tgt.id]
+                for kw in node.keywords:
+                    if kw.arg in names and isinstance(kw.value, _UNHASHABLE):
+                        yield Finding(
+                            rule="nonhashable-static-arg", path=mod.relpath,
+                            line=kw.value.lineno, col=kw.value.col_offset,
+                            message=f"static argument `{kw.arg}` of "
+                                    f"`{tgt.id}` bound to a non-hashable "
+                                    f"literal in functools.partial")
+
+
+@register_rule(
+    "mutable-default-pytree",
+    "mutable (or device-array) default argument values")
+def mutable_default_pytree(mod: ModuleInfo) -> Iterator[Finding]:
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        defaults = (fn.args.defaults
+                    + [d for d in fn.args.kw_defaults if d is not None])
+        for d in defaults:
+            what = None
+            if isinstance(d, _UNHASHABLE):
+                what = "mutable literal"
+            elif isinstance(d, ast.Call):
+                fq = resolve(d.func, mod.imports) or ""
+                if fq.startswith(("jax.numpy.", "numpy.", "jax.")):
+                    what = f"`{fq}` call (evaluated once, at import time)"
+            if what:
+                yield Finding(
+                    rule="mutable-default-pytree", path=mod.relpath,
+                    line=d.lineno, col=d.col_offset,
+                    message=f"default value of `{fn.name}` is a {what}: "
+                            f"shared across calls — default to None and "
+                            f"build inside the function")

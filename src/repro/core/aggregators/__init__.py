@@ -35,3 +35,84 @@ __all__ = [
     "set_path", "FedItAggregator", "FfaAggregator", "FlexLoRAAggregator",
     "FloraAggregator", "FloristAggregator",
 ]
+
+
+# -- abstract contracts (checked by repro.analysis.contracts) -----------------
+
+from repro.analysis.registry import ContractCase, check_contract
+
+#: geometry for the aggregation-core contracts: L layer-stacked adapters of
+#: rank r over an m x n base matrix
+_L, _M, _R, _N = 4, 32, 12, 24
+
+
+@check_contract("agg.florist_finalize", mesh_sizes=(1,))
+def _contract_florist_finalize(case):
+    """The jit-safe FLoRIST core: zero-padded global factors keep the
+    client-rank shapes (no data-dependent widths inside jit), the spectrum
+    carries all r singular values, and the kept rank is a traced scalar."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import fixtures as FX
+    from repro.core.svd import florist_core_batched
+
+    def core(b, a):
+        return florist_core_batched(b, a, 0.9, "gram")
+
+    def out_check(out, _case):
+        b_g, a_g, spectrum, p = out
+        assert b_g.shape == (_L, _M, _R), b_g.shape
+        assert a_g.shape == (_L, _R, _N), a_g.shape
+        assert spectrum.shape == (_L, _R), spectrum.shape
+        assert p.shape == (_L,) and p.dtype == jnp.int32, (p.shape, p.dtype)
+        assert all(v.dtype == jnp.float32 for v in (b_g, a_g, spectrum))
+
+    return ContractCase(core, (FX.sds((_L, _M, _R), "float32"),
+                               FX.sds((_L, _R, _N), "float32")),
+                        out_check=out_check)
+
+
+@check_contract("agg.thin_svd", mesh_sizes=(1,))
+def _contract_thin_svd(case):
+    """Batched thin SVD (both the LAPACK path and the gram-trick path used
+    on stacked client factors) keeps thin shapes and fp32."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import fixtures as FX
+    from repro.core.svd import thin_svd_batched
+
+    x = FX.sds((_L, _M, _R), "float32")
+
+    def core(v):
+        return tuple(thin_svd_batched(v, "gram")) \
+            + tuple(thin_svd_batched(v, "svd"))
+
+    def out_check(out, _case):
+        for (u, s, vt) in (out[:3], out[3:]):
+            assert u.shape == (_L, _M, _R), u.shape
+            assert s.shape == (_L, _R), s.shape
+            assert vt.shape == (_L, _R, _R), vt.shape
+            assert u.dtype == s.dtype == vt.dtype == jnp.float32
+
+    return ContractCase(core, (x,), out_check=out_check)
+
+
+@check_contract("agg.sharded_florist", mesh_sizes=(1,))
+def _contract_sharded_florist(case):
+    """The shard_map'd multi-pod FLoRIST backend matches the host core's
+    output avals exactly (shard_map needs device-backed meshes, so this
+    contract runs at mesh 1 only)."""
+    import jax
+
+    from repro.analysis import fixtures as FX
+    from repro.core.distributed import make_sharded_florist
+    from repro.core.svd import florist_core_batched
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    fn = make_sharded_florist(mesh, tau=0.9, svd_method="gram")
+    args = (FX.sds((_L, _M, _R), "float32"), FX.sds((_L, _R, _N), "float32"))
+    return ContractCase(lambda b, a: tuple(fn(b, a)), args,
+                        twin=(lambda b, a: tuple(
+                            florist_core_batched(b, a, 0.9, "gram")), args))

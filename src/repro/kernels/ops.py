@@ -223,3 +223,115 @@ def adapter_gram(x, bm: int = 512):
     """xᵀx (r, r) fp32 for any (m, r) — tail masking inside the kernel."""
     return adapter_gram_kernel(x, bm=min(bm, x.shape[0]),
                                interpret=_interpret())
+
+
+# -- abstract contracts (checked by repro.analysis.contracts) -----------------
+#
+# Every Pallas kernel must be aval-identical to its XLA twin / oracle —
+# ``pallas_call`` abstract-evals on any backend, so these hold on CPU CI.
+
+from repro.analysis.registry import ContractCase, check_contract  # noqa: E402
+
+
+@check_contract("kernel.ring_decode", families=("gqa",), mesh_sizes=(1,))
+def _contract_ring_decode(case):
+    from repro.analysis import fixtures as FX
+    from repro.models.attention_core import ring_flash_decode
+    B, C, H, K, hd, cap = 2, 4, 8, 4, 16, 64
+    args = (FX.sds((B, C, H, hd), "float32"),
+            FX.sds((B, cap, K, hd), "float32"),
+            FX.sds((B, cap, K, hd), "float32"),
+            FX.sds((B,), "int32"), FX.sds((B,), "int32"))
+
+    def out_check(out, _case):
+        assert out.shape == (B, C, H, hd) and out.dtype == jnp.float32
+
+    return ContractCase(ring_decode, args, out_check=out_check,
+                        twin=(ring_flash_decode, args))
+
+
+@check_contract("kernel.mla_ring_decode", families=("mla",), mesh_sizes=(1,))
+def _contract_mla_ring_decode(case):
+    from repro.analysis import fixtures as FX
+    from repro.models.attention_core import mla_ring_flash_decode
+    B, C, H, kvr, rope, cap = 2, 4, 4, 32, 16, 64
+    scale = (kvr + rope) ** -0.5
+    args = (FX.sds((B, C, H, kvr + rope), "float32"),
+            FX.sds((B, cap, kvr), "float32"),
+            FX.sds((B, cap, rope), "float32"),
+            FX.sds((B,), "int32"), FX.sds((B,), "int32"))
+
+    def out_check(out, _case):
+        assert out.shape == (B, C, H, kvr) and out.dtype == jnp.float32
+
+    return ContractCase(functools.partial(mla_ring_decode, scale=scale), args,
+                        out_check=out_check,
+                        twin=(functools.partial(mla_ring_flash_decode, scale=scale),
+                              args))
+
+
+@check_contract("kernel.flash_attention", families=("gqa",), mesh_sizes=(1,))
+def _contract_flash_attention(case):
+    from repro.analysis import fixtures as FX
+    from repro.kernels.ref import flash_attention_ref
+    B, S, H, K, hd = 2, 16, 8, 4, 16
+    args = (FX.sds((B, S, H, hd), "float32"),
+            FX.sds((B, S, K, hd), "float32"),
+            FX.sds((B, S, K, hd), "float32"))
+    return ContractCase(flash_attention, args,
+                        twin=(flash_attention_ref, args))
+
+
+@check_contract("kernel.lora_matmul", families=("gqa",), mesh_sizes=(1,))
+def _contract_lora_matmul(case):
+    from repro.analysis import fixtures as FX
+    from repro.kernels.ref import lora_matmul_ref
+    B, S, din, dout, r = 2, 8, 32, 24, 4
+    args = (FX.sds((B, S, din), "float32"),
+            FX.sds((din, dout), "float32"),
+            FX.sds((r, din), "float32"),
+            FX.sds((dout, r), "float32"), 2.0)
+    return ContractCase(lora_matmul, args, twin=(lora_matmul_ref, args))
+
+
+@check_contract("kernel.wkv6", families=("ssm",), mesh_sizes=(1,))
+def _contract_wkv6(case):
+    from repro.analysis import fixtures as FX
+    from repro.kernels.ref import wkv6_ref
+    B, S, H, hd = 2, 8, 4, 16
+    args = tuple(FX.sds((B, S, H, hd), "float32") for _ in range(4)) \
+        + (FX.sds((H, hd), "float32"),)
+    return ContractCase(wkv6, args, twin=(wkv6_ref, args))
+
+
+@check_contract("kernel.adapter_gram", families=("gqa",), mesh_sizes=(1,))
+def _contract_adapter_gram(case):
+    from repro.analysis import fixtures as FX
+    from repro.kernels.ref import adapter_gram_ref
+    args = (FX.sds((100, 12), "float32"),)
+    return ContractCase(adapter_gram, args, twin=(adapter_gram_ref, args))
+
+
+@check_contract("kernel.bgmv", families=("gqa",), mesh_sizes=(1,))
+def _contract_bgmv(case):
+    """The paged multi-tenant LoRA delta: the Pallas bgmv path and the XLA
+    gather/einsum twin must agree on avals through ``paged_lora_delta``."""
+    from repro.analysis import fixtures as FX
+    from repro.peft.lora import PagedLoRA, paged_lora_delta
+    B, C, din, dout = 4, 4, 32, 24
+    P, pr, maxA, Pmax = 8, 4, 4, 2
+    leaves = (FX.sds((P, pr, din), "float32"),      # a_pages
+              FX.sds((P, dout, pr), "float32"),     # b_pages
+              FX.sds((maxA,), "float32"),           # scale
+              FX.sds((maxA, Pmax), "int32"),        # table
+              FX.sds((maxA,), "int32"),             # rank
+              FX.sds((B,), "int32"))                # ids
+    x = FX.sds((B, C, din), "float32")
+
+    def run(impl):
+        def f(x, a, b, s, t, r, i):
+            return paged_lora_delta(x, PagedLoRA(a, b, s, t, r, i, impl=impl))
+        return f
+
+    args = (x,) + leaves
+    return ContractCase(run("kernel"), args, twin=(run("xla"), args))

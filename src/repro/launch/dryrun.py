@@ -17,7 +17,7 @@ Usage:
 """
 import argparse
 import json
-import re
+import os
 import sys
 import time
 from typing import Any, Dict
@@ -28,9 +28,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common.config import INPUT_SHAPES, LoRAConfig, ModelConfig, OptimConfig, ShapeConfig
 from repro.configs import ASSIGNED, get_config, long_context_variant, lora_targets
-from repro.launch.mesh import make_production_mesh
-from repro.launch.sharding import (batch_pspecs, cache_pspecs, params_pspecs,
-                                   replicated_pspecs, to_shardings)
+from repro.topology import (axis_size, batch_pspecs, cache_pspecs,
+                            make_production_mesh, params_pspecs,
+                            replicated_pspecs, to_shardings)
 from repro.launch.specs import cache_specs, input_specs, state_specs
 from repro.train.step import make_serve_step, make_train_step, make_prefill_step
 
@@ -41,48 +41,13 @@ PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8, "c64": 8, "c128": 16}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum result-shape bytes of every collective op in optimized HLO."""
-    out = {c: 0 for c in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        ls = line.strip()
-        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", ls)
-        if not m:
-            continue
-        op = m.group(2)
-        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or op in _COLLECTIVES:
-            base = op
-            for c in _COLLECTIVES:
-                if op.startswith(c):
-                    base = c
-                    break
-            else:
-                continue
-            out[base] += _shape_bytes(m.group(1))
-    return out
+# HLO text parsing lives in the jax-free audit layer; re-exported here for
+# the dry-run record writers and existing callers
+from repro.analysis.hlo_audit import (  # noqa: E402,F401
+    _COLLECTIVES,
+    collective_bytes,
+    shape_bytes as _shape_bytes,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +60,6 @@ def default_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
     microbatch still spans the data axis."""
     if shape.mode != "train":
         return 1
-    from repro.launch.mesh import axis_size
     dp = axis_size(mesh, "data") * axis_size(mesh, "pod")
     carry = shape.global_batch * shape.seq_len // dp * cfg.d_model * 2 * cfg.num_layers
     micro = 1
@@ -137,7 +101,6 @@ def build_dryrun(cfg: ModelConfig, shape: ShapeConfig, mesh,
         )
         return fn, (params_s, adapters_s, opt_s, batch_s)
 
-    from repro.launch.mesh import axis_size
     vocab_ax = "model" if cfg.vocab_size % axis_size(mesh, "model") == 0 else None
 
     if shape.mode == "prefill":

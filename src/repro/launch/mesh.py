@@ -1,5 +1,9 @@
-"""Re-export shim: mesh construction moved to :mod:`repro.topology.mesh`
-(shared by the trainer and the serving stack).  Import from there."""
+"""DEPRECATED re-export shim: mesh construction moved to
+:mod:`repro.topology.mesh` (shared by the trainer and the serving stack).
+Import from :mod:`repro.topology` — importing this module warns, and the
+``topology-shim-bypass`` lint rule rejects internal use."""
+import warnings
+
 from repro.topology.mesh import (  # noqa: F401
     axis_size,
     data_axes,
@@ -7,6 +11,10 @@ from repro.topology.mesh import (  # noqa: F401
     make_production_mesh,
     make_serve_mesh,
 )
+
+warnings.warn(
+    "repro.launch.mesh is a deprecated shim; import from repro.topology",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["axis_size", "data_axes", "make_host_mesh",
            "make_production_mesh", "make_serve_mesh"]

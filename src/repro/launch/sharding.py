@@ -1,7 +1,10 @@
-"""Re-export shim: partition rules moved to
+"""DEPRECATED re-export shim: partition rules moved to
 :mod:`repro.topology.partitioning` (shared by the trainer and the serving
 stack; serving-side specs live in :mod:`repro.topology.serve`).  Import
-from there."""
+from :mod:`repro.topology` — importing this module warns, and the
+``topology-shim-bypass`` lint rule rejects internal use."""
+import warnings
+
 from repro.topology.partitioning import (  # noqa: F401
     _COL_MODEL,
     _ROW_MODEL,
@@ -16,6 +19,10 @@ from repro.topology.partitioning import (  # noqa: F401
     replicated_pspecs,
     to_shardings,
 )
+
+warnings.warn(
+    "repro.launch.sharding is a deprecated shim; import from repro.topology",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["CACHE_LEAF_RANKS", "ZERO3_THRESHOLD", "batch_pspecs",
            "cache_pspecs", "param_pspec", "params_pspecs",

@@ -578,3 +578,70 @@ class ServeEngine:
         self._collect(stragglers, results)
         mask = self._state["active"].at[jnp.asarray(stragglers)].set(False)
         self._state = dict(self._state, active=mask)
+
+
+# -- abstract contracts (checked by repro.analysis.contracts) -----------------
+
+from repro.analysis.registry import ContractCase, check_contract  # noqa: E402
+
+
+def _engine_contract(case, build):
+    from repro.analysis import fixtures as FX
+    from repro.topology import serve_pspecs
+    cfg = FX.tiny_config(case.family)
+    if cfg.family == "ssm" and case.decode_impl != "dense":
+        return None          # recurrences have no attention interior to swap
+    params = FX.abstract_params(cfg)
+    cache = FX.abstract_cache(cfg)
+    state = FX.engine_state()
+    fn, out_check = build(FX, cfg, params, cache, state)
+    mesh = FX.abstract_mesh(case.mesh)
+    bundle = serve_pspecs(mesh, cfg, params, cache, state)
+    tree = {"params": params, "cache": cache, "state": state}
+    specs = {k: bundle[k] for k in tree}
+    return ContractCase(fn, (params, None, cache, state),
+                        out_check=out_check, pspec_tree=(tree, specs),
+                        mesh=mesh)
+
+
+@check_contract("serve.engine_step", families=("gqa", "mla", "moe", "ssm"),
+                decode_impls=("dense", "streamed", "kernel"))
+def _contract_engine_step(case):
+    """The engine step's cache/state avals are a fixed point (this is what
+    makes the continuous-batching hot loop retrace-free) and every
+    engine-owned tree shards under the serve rules at the mesh width."""
+
+    def build(FX, cfg, params, cache, state):
+        step = _build_engine_step(cfg, FX.chunk_width(cfg), stochastic=True,
+                                  decode_impl=case.decode_impl)
+
+        def out_check(out, _case):
+            c2, s2, finished = out
+            assert FX.avals_equal(c2, cache), "cache avals drift"
+            assert FX.avals_equal(s2, state), "state avals drift"
+            assert finished.shape == (FX.BATCH_SLOTS,), finished.shape
+            assert finished.dtype == jnp.bool_, finished.dtype
+
+        return step, out_check
+
+    return _engine_contract(case, build)
+
+
+@check_contract("serve.decode_burst", families=("gqa", "mla", "moe", "ssm"),
+                decode_impls=("dense", "streamed", "kernel"))
+def _contract_decode_burst(case):
+    """The scanned width-1 burst preserves (cache, state) avals — the
+    single-dispatch decode loop admits a fixed burst length."""
+
+    def build(FX, cfg, params, cache, state):
+        burst = _build_engine_burst(cfg, steps=2, stochastic=True,
+                                    decode_impl=case.decode_impl)
+
+        def out_check(out, _case):
+            c2, s2 = out
+            assert FX.avals_equal(c2, cache), "cache avals drift"
+            assert FX.avals_equal(s2, state), "state avals drift"
+
+        return burst, out_check
+
+    return _engine_contract(case, build)

@@ -48,5 +48,11 @@ def data_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
-def axis_size(mesh: Mesh, name: str) -> int:
-    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+def axis_size(mesh, name: str) -> int:
+    """Axis size by name (1 for absent axes).
+
+    Reads ``mesh.shape`` — the name→size mapping shared by ``Mesh`` and
+    ``jax.sharding.AbstractMesh`` — so partition rules can be validated
+    abstractly (the contract checker builds device-free meshes).
+    """
+    return dict(mesh.shape).get(name, 1)

@@ -147,3 +147,61 @@ def init_train_state(cfg: ModelConfig, run: RunConfig, key) -> Tuple:
                          run.lora.alpha, ka)
     opt_state = adamw_init(adapters)
     return params, adapters, opt_state
+
+
+# -- abstract contracts (checked by repro.analysis.contracts) -----------------
+
+from repro.analysis.registry import ContractCase, check_contract  # noqa: E402
+
+
+@check_contract("train.step", families=("gqa", "mla", "moe", "ssm"))
+def _contract_train_step(case):
+    """Adapter/opt-state avals are a fixed point of the train step (else the
+    trainer retraces every round), and params shard under the Megatron
+    rules at the case's mesh width."""
+    from repro.analysis import fixtures as FX
+    from repro.topology import params_pspecs
+    cfg = FX.tiny_config(case.family)
+    params = FX.abstract_params(cfg)
+    adapters = FX.abstract_adapters(cfg, params)
+    opt_state = jax.eval_shape(adamw_init, adapters)
+    batch = FX.train_batch(cfg)
+    step = make_train_step(cfg, OptimConfig(), remat=False)
+
+    def out_check(out, _case):
+        a2, o2, metrics = out
+        assert FX.avals_equal(a2, adapters), "adapter avals drift"
+        assert FX.avals_equal(o2, opt_state), "opt_state avals drift"
+        assert all(v.shape == () for v in jax.tree.leaves(metrics)), \
+            "metrics must be scalars"
+
+    mesh = FX.abstract_mesh(case.mesh)
+    return ContractCase(step, (params, adapters, opt_state, batch),
+                        out_check=out_check,
+                        pspec_tree=(params, params_pspecs(mesh, cfg, params)),
+                        mesh=mesh)
+
+
+@check_contract("serve.step", families=("gqa", "mla", "moe", "ssm"),
+                decode_impls=("dense", "streamed", "kernel"))
+def _contract_serve_step(case):
+    """Chunked decode returns (B, V) next-token logits and preserves cache
+    avals exactly — the zero-retrace property of the serving hot path."""
+    from repro.analysis import fixtures as FX
+    cfg = FX.tiny_config(case.family)
+    if cfg.family == "ssm" and case.decode_impl != "dense":
+        return None          # recurrences have no attention interior to swap
+    params = FX.abstract_params(cfg)
+    cache = FX.abstract_cache(cfg)
+    width = FX.chunk_width(cfg)
+    batch = {"tokens": FX.sds((FX.BATCH_SLOTS, width), jnp.int32)}
+    step = make_serve_step(cfg, decode_impl=case.decode_impl)
+
+    def out_check(out, _case):
+        logits, c2 = out
+        assert logits.shape == (FX.BATCH_SLOTS, cfg.vocab_size), logits.shape
+        assert logits.dtype == jnp.float32, logits.dtype
+        assert FX.avals_equal(c2, cache), "cache avals drift across decode"
+
+    return ContractCase(step, (params, None, cache, batch),
+                        out_check=out_check)

@@ -1,0 +1,223 @@
+"""repro-lint: one seeded violation per rule must flag, idiomatic clean
+code must not, suppressions silence, and the repo's own src/ tree is
+lint-clean (the CI ``analysis`` job enforces the same)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import Finding, lint_paths, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint(src, **kw):
+    return lint_source(textwrap.dedent(src), **kw)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# -- seeded violations: every rule catches its canonical bug ------------------
+
+def test_host_branch_on_traced_param():
+    found = lint("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:          # ConcretizationTypeError at trace time
+                return x
+            return -x
+    """)
+    assert "host-branch-on-traced" in rules_of(found)
+    assert any(f.line == 6 for f in found)
+
+
+def test_host_branch_via_builder_convention():
+    """Functions returned by make_*/build_* builders are traced even
+    without a visible jit decorator."""
+    found = lint("""
+        def make_train_step(cfg):
+            def train_step(params, batch):
+                if params["w"].sum() > 0:
+                    return batch
+                return params["w"].item()
+            return train_step
+    """)
+    assert "host-branch-on-traced" in rules_of(found)
+    # both the `if` and the `.item()` host sync flag
+    assert len([f for f in found if f.rule == "host-branch-on-traced"]) == 2
+
+
+def test_host_sync_in_hot_loop():
+    found = lint("""
+        import jax
+
+        def _log(x):
+            return jax.device_get(x)
+
+        @jax.jit
+        def step(x):
+            _log(x)
+            return x + 1
+    """)
+    assert "host-sync-in-hot-loop" in rules_of(found)
+
+
+def test_import_time_jax_compute():
+    found = lint("""
+        import jax.numpy as jnp
+
+        TABLE = jnp.arange(1024)    # compiles + allocates at import
+    """)
+    assert "import-time-jax-compute" in rules_of(found)
+
+
+def test_jit_in_loop():
+    found = lint("""
+        import jax
+
+        def sweep(fns, x):
+            outs = []
+            for fn in fns:
+                outs.append(jax.jit(fn)(x))   # retraces every iteration
+            return outs
+    """)
+    assert "jit-in-loop" in rules_of(found)
+
+
+def test_nonhashable_static_arg():
+    found = lint("""
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("dims",))
+        def f(x, dims):
+            return x.sum(dims)
+
+        def call(x):
+            return f(x, dims=[0, 1])    # unhashable -> TypeError
+    """)
+    assert "nonhashable-static-arg" in rules_of(found)
+
+
+def test_mutable_default_pytree():
+    found = lint("""
+        import jax.numpy as jnp
+
+        def init(state={}, w=jnp.zeros(3)):
+            return state, w
+    """)
+    assert rules_of(found) == ["mutable-default-pytree"]
+    assert len(found) == 2
+
+
+def test_topology_shim_bypass():
+    found = lint("""
+        from repro.launch.mesh import axis_size
+        from repro.launch import sharding
+    """, relpath="src/repro/train/trainer.py")
+    assert len([f for f in found if f.rule == "topology-shim-bypass"]) == 2
+
+
+# -- false-positive guards ----------------------------------------------------
+
+def test_clean_traced_code_no_findings():
+    """Idiomatic traced code: lax control flow, shape/dtype host reads,
+    hashable statics — zero findings."""
+    found = lint("""
+        from functools import partial
+
+        import jax
+        import jax.numpy as jnp
+
+        @partial(jax.jit, static_argnames=("k",))
+        def topk_mask(x, k):
+            if k <= 0:                      # static arg: host branch fine
+                return x
+            if x.ndim == 2:                 # shape read: host-safe
+                x = x[None]
+            return jax.lax.cond(jnp.all(x > 0), lambda v: v,
+                                lambda v: -v, x)
+
+        def make_step(cfg):
+            def step(params, batch):
+                del cfg
+                return jax.tree.map(lambda p: p + batch["lr"], params)
+            return step
+    """)
+    assert found == []
+
+
+def test_shim_files_exempt_from_bypass_rule():
+    """The shims re-export themselves; the rule must not flag them."""
+    found = lint("from repro.topology.mesh import axis_size\n",
+                 relpath="src/repro/launch/mesh.py",
+                 select=["topology-shim-bypass"])
+    assert found == []
+
+
+# -- suppression --------------------------------------------------------------
+
+def test_inline_suppression_with_justification():
+    src = """
+        import jax.numpy as jnp
+
+        T = jnp.zeros(3)  # repro-lint: disable=import-time-jax-compute -- tiny
+    """
+    assert lint(src) == []
+
+
+def test_disable_all_suppresses_everything():
+    src = """
+        import jax.numpy as jnp
+
+        T = jnp.zeros(3)  # repro-lint: disable=all
+    """
+    assert lint(src) == []
+
+
+def test_unrelated_suppression_does_not_silence():
+    src = """
+        import jax.numpy as jnp
+
+        T = jnp.zeros(3)  # repro-lint: disable=jit-in-loop
+    """
+    assert rules_of(lint(src)) == ["import-time-jax-compute"]
+
+
+# -- the repo itself ----------------------------------------------------------
+
+def test_src_tree_is_lint_clean():
+    findings = lint_paths([os.path.join(REPO, "src")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax.numpy as jnp\nT = jnp.zeros(3)\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    ok = subprocess.run([sys.executable, "-m", "repro.analysis.lint",
+                         str(tmp_path)], env=env, capture_output=True,
+                        text=True)
+    assert ok.returncode == 1
+    assert "import-time-jax-compute" in ok.stdout
+    bad.write_text("x = 1\n")
+    clean = subprocess.run([sys.executable, "-m", "repro.analysis.lint",
+                            str(tmp_path)], env=env, capture_output=True,
+                           text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+
+
+def test_unknown_rule_select_raises():
+    with pytest.raises(ValueError, match="unknown lint rule"):
+        lint_source("x = 1\n", select=["no-such-rule"])
+
+
+def test_finding_render_clickable():
+    f = Finding(rule="r", path="a/b.py", line=3, col=0, message="m")
+    assert f.render() == "a/b.py:3:1: [r] m"

@@ -1,0 +1,111 @@
+"""The declarative HLO audit layer: text parsing, check builders, and the
+``serve.decode_step`` audit — including a genuine compiled regression
+(a dense-score-buffer lowering must fail the streamed-decode audit)."""
+import jax
+import pytest
+
+from repro.analysis.hlo_audit import (audit_names, collective_bytes,
+                                      collective_budget, forbid_collective,
+                                      forbid_shapes, get_audit, iter_ops,
+                                      require_collective, run_audit,
+                                      shape_bytes)
+from repro.common.config import ModelConfig
+
+CANNED = """\
+HloModule step
+
+ENTRY %main (p0: f32[4,64]) -> f32[4,64] {
+  %p0 = f32[4,64] parameter(0)
+  %ar = f32[4,64] all-reduce(%p0), replica_groups={}
+  %ag.1 = f32[8,64] all-gather-start(%p0), dimensions={0}
+  %ag.2 = f32[8,64] all-gather-done(%ag.1)
+  ROOT %out = f32[4,64] add(%ar, %p0)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,64]") == 4 * 64 * 4
+    assert shape_bytes("(f32[2,2], s8[8])") == 16 + 8
+    assert shape_bytes("bf16[3]") == 6
+    assert shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_folds_async_halves():
+    totals = collective_bytes(CANNED)
+    assert totals["all-reduce"] == 4 * 64 * 4
+    # -start and -done both parse onto the base op
+    assert totals["all-gather"] == 2 * 8 * 64 * 4
+    assert totals["all-to-all"] == 0
+
+
+def test_iter_ops():
+    ops = [op for op, _, _ in iter_ops(CANNED)]
+    assert "all-reduce" in ops and "add" in ops
+
+
+def test_check_builders():
+    assert forbid_collective("all-to-all")(CANNED, {}) == []
+    assert forbid_collective("all-reduce")(CANNED, {}) != []
+    assert require_collective("all-reduce")(CANNED, {}) == []
+    assert require_collective("reduce-scatter")(CANNED, {}) != []
+    gated = require_collective("reduce-scatter",
+                               when=lambda ctx: ctx["mesh"] > 1)
+    assert gated(CANNED, {"mesh": 1}) == []
+    assert gated(CANNED, {"mesh": 8}) != []
+    assert collective_budget(lambda ctx: 10 ** 9)(CANNED, {}) == []
+    over = collective_budget(lambda ctx: 1, "tiny")(CANNED, {})
+    assert over and "exceed" in over[0]
+    hit = forbid_shapes(lambda ctx: ["f32[8,64]"], "test")(CANNED, {})
+    assert hit and "f32[8,64]" in hit[0]
+    assert forbid_shapes(lambda ctx: ["f32[9,9]"])(CANNED, {}) == []
+
+
+def test_registry():
+    assert "serve.decode_step" in audit_names()
+    with pytest.raises(KeyError):
+        get_audit("no.such.audit")
+
+
+# -- the serve.decode_step audit on real compiled artifacts -------------------
+
+TINY = ModelConfig(name="hlo-audit-tiny", family="dense", num_layers=2,
+                   d_model=64, num_heads=8, num_kv_heads=8, head_dim=16,
+                   d_ff=128, vocab_size=256, dtype="float32")
+
+
+def _compiled_step_text(decode_impl, B=4, cap=512):
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    eng = ServeEngine(TINY, params, batch_slots=B, capacity=cap,
+                      prefill_chunk=8, decode_impl=decode_impl)
+    return eng.lower_step(width=1, stochastic=False).compile().as_text()
+
+
+def _ctx(decode_impl, mesh=1, B=4, cap=512):
+    return {"cfg": TINY, "mesh": mesh, "batch": B, "capacity": cap,
+            "width": 1, "decode_impl": decode_impl}
+
+
+def test_streamed_step_passes_audit():
+    txt = _compiled_step_text("streamed")
+    assert run_audit("serve.decode_step", txt, _ctx("streamed")) == []
+
+
+def test_dense_score_buffer_regression_fails_audit():
+    """The regression CI must catch: if the streamed interior ever
+    rematerializes a dense (B,H,C,cap) score buffer, the audit fails.
+    The dense oracle genuinely materializes one, so auditing its lowering
+    under the streamed claim must flag exactly that."""
+    txt = _compiled_step_text("dense")
+    failures = run_audit("serve.decode_step", txt, _ctx("dense"))
+    assert failures == [], "dense impl makes no streaming claim"
+    failures = run_audit("serve.decode_step", txt, _ctx("streamed"))
+    assert failures, "dense score buffers must fail the streamed audit"
+    assert any("forbidden buffers" in f for f in failures), failures
+
+
+def test_meshless_step_schedules_no_collectives():
+    txt = _compiled_step_text("streamed")
+    assert sum(collective_bytes(txt).values()) == 0

@@ -173,8 +173,13 @@ def test_eight_device_driver():
 # -- topology layer import surface (device-count independent) ----------------
 
 def test_launch_shims_reexport_topology():
-    import repro.launch.mesh as lm
-    import repro.launch.sharding as ls
+    # the shims are deprecated (DeprecationWarning on import) but their
+    # re-export surface must stay intact for external callers
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import repro.launch.mesh as lm
+        import repro.launch.sharding as ls
     from repro import topology as topo
     assert lm.make_production_mesh is topo.make_production_mesh
     assert lm.make_host_mesh is topo.make_host_mesh
@@ -185,6 +190,17 @@ def test_launch_shims_reexport_topology():
     assert ls.cache_pspecs is topo.cache_pspecs
     assert ls.to_shardings is topo.to_shardings
     assert ls.ZERO3_THRESHOLD == topo.ZERO3_THRESHOLD
+
+
+def test_launch_shims_warn_deprecation():
+    import importlib
+
+    import repro.launch.mesh as lm
+    import repro.launch.sharding as ls
+    with pytest.warns(DeprecationWarning, match="repro.launch.mesh"):
+        importlib.reload(lm)
+    with pytest.warns(DeprecationWarning, match="repro.launch.sharding"):
+        importlib.reload(ls)
 
 
 def test_cache_leaf_ranks_single_table():

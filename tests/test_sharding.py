@@ -9,8 +9,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.common.config import INPUT_SHAPES, LoRAConfig
 from repro.configs import get_config, get_smoke_config, lora_targets
-from repro.launch.mesh import make_production_mesh
-from repro.launch.sharding import batch_pspecs, cache_pspecs, params_pspecs
+from repro.topology import (batch_pspecs, cache_pspecs,
+                            make_production_mesh, params_pspecs)
 from repro.launch.specs import cache_specs, input_specs, state_specs
 from repro.models import transformer as T
 

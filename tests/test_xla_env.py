@@ -1,0 +1,81 @@
+"""XLA_FLAGS management: append-never-clobber semantics of
+``repro.common.xla_env`` (jax-free, so these run without backend init)."""
+import pytest
+
+from repro.common.xla_env import (append_xla_flags, force_host_devices,
+                                  merge_flags, render_flags)
+
+
+class TestMergeFlags:
+    def test_append_to_empty(self):
+        assert merge_flags("", "--a=1") == "--a=1"
+
+    def test_append_new_flag(self):
+        assert merge_flags("--a=1", "--b=2") == "--a=1 --b=2"
+
+    def test_existing_name_wins(self):
+        """A flag whose NAME is already set is left alone — the user's
+        value wins even when ours differs."""
+        assert merge_flags("--a=1", "--a=2") == "--a=1"
+
+    def test_duplicate_among_new_flags(self):
+        assert merge_flags("--a=1", "--b=2", "--b=3") == "--a=1 --b=2 --b=3"
+        # first-wins precedence applies against base, not within additions:
+        # XLA itself takes the last occurrence, so callers pass one value
+
+    def test_valueless_flag(self):
+        assert merge_flags("--xla_dump_to=/tmp/x", "--xla_dump_to=/y") \
+            == "--xla_dump_to=/tmp/x"
+
+    def test_multiple_base_flags(self):
+        base = "--a=1 --b=2"
+        assert merge_flags(base, "--b=9", "--c=3") == "--a=1 --b=2 --c=3"
+
+
+class TestAppendXlaFlags:
+    def test_sets_env(self, monkeypatch):
+        monkeypatch.delenv("XLA_FLAGS", raising=False)
+        import os
+        assert append_xla_flags("--a=1") == "--a=1"
+        assert os.environ["XLA_FLAGS"] == "--a=1"
+
+    def test_idempotent(self, monkeypatch):
+        monkeypatch.setenv("XLA_FLAGS", "")
+        first = append_xla_flags("--a=1")
+        second = append_xla_flags("--a=1")
+        assert first == second == "--a=1"
+
+    def test_preserves_user_flags(self, monkeypatch):
+        monkeypatch.setenv("XLA_FLAGS", "--user=yes")
+        assert append_xla_flags("--mine=1") == "--user=yes --mine=1"
+
+
+class TestForceHostDevices:
+    def test_sets_count(self, monkeypatch):
+        monkeypatch.delenv("XLA_FLAGS", raising=False)
+        out = force_host_devices(8)
+        assert out == "--xla_force_host_platform_device_count=8"
+
+    def test_user_count_wins(self, monkeypatch):
+        """The clobbering bug class this module exists to fix: a user-set
+        device count must survive our request."""
+        monkeypatch.setenv(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+        out = force_host_devices(512)
+        assert out == "--xla_force_host_platform_device_count=2"
+
+    def test_unrelated_user_flags_survive(self, monkeypatch):
+        monkeypatch.setenv("XLA_FLAGS", "--xla_cpu_use_thunk_runtime=false")
+        out = force_host_devices(4)
+        assert out == ("--xla_cpu_use_thunk_runtime=false "
+                       "--xla_force_host_platform_device_count=4")
+
+
+class TestRenderFlags:
+    def test_renders_values_and_booleans(self):
+        assert render_flags({"a": 1, "b": True, "c": False, "d": "x"}) \
+            == "--a=1 --b=true --c=false --d=x"
+
+    def test_roundtrip_through_merge(self):
+        frag = render_flags({"xla_foo": 7})
+        assert merge_flags(frag, "--xla_foo=9") == frag
