@@ -5,11 +5,24 @@ pipeline: instead of K·steps jitted train-step dispatches per round (one
 per client per batch, each with its own host→device transfer), every
 equal-rank cohort trains in ONE compiled ``vmap``-of-``scan`` call.  This
 measures what that dispatch collapse buys on the CPU smoke config, across
-the sync and async schedulers.
+the sync and async schedulers, plus two extra axes:
 
-Emits JSON for CI artifacts (the ``BENCH_fed.json`` trajectory)::
+* ``--smoke`` also sweeps the **utility-vs-ε DP curve**: the same smoke
+  round with the transport's DP stage at decreasing privacy budgets
+  (σ calibrated per ε by the classical Gaussian-mechanism bound), so the
+  accuracy cost of DP-on-the-wire is a watched trajectory, not folklore;
+* ``--scale`` runs the **population-scale arm**: 1024 clients, a sampled
+  participation fraction, and the ``sharded_cohort`` runner against the
+  single-device ``cohort`` and legacy ``sequential`` runners.  Run it
+  under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to measure
+  the mesh-sharded round (the ``sharded_vs_cohort`` ratio only shows real
+  speedup when the virtual devices map to real cores).
+
+Emits JSON for CI artifacts (the ``BENCH_fed.json`` /
+``BENCH_fed_scale.json`` trajectories)::
 
     PYTHONPATH=src python benchmarks/fed_bench.py --smoke --json BENCH_fed.json
+    PYTHONPATH=src python benchmarks/fed_bench.py --scale --json BENCH_fed_scale.json
 """
 from __future__ import annotations
 
@@ -21,8 +34,11 @@ import time
 import jax
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.aggregators.florist import FloristAggregator
 from repro.core.federated import FederatedTrainer
-from repro.data.synthetic import make_eval_data
+from repro.core.privacy import noise_multiplier_for_epsilon
+from repro.core.runtime import SampledScheduler, ShardedCohortRunner
+from repro.data.synthetic import make_eval_data, make_federated_data
 
 SMOKE_MODEL = ModelConfig(name="fedbench-tiny", family="dense", num_layers=2,
                           d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
@@ -32,27 +48,128 @@ FULL_MODEL = ModelConfig(name="fedbench-small", family="dense", num_layers=4,
                          d_ff=256, vocab_size=512, dtype="float32")
 
 
-def make_trainer(cfg: ModelConfig, runner: str, scheduler: str, *,
+def make_trainer(cfg: ModelConfig, runner, scheduler, *,
                  clients: int, sample: int, local_steps: int,
-                 batch_size: int, seq_len: int) -> FederatedTrainer:
+                 batch_size: int, seq_len: int, **kw) -> FederatedTrainer:
     fed = FedConfig(num_clients=clients, clients_per_round=sample,
                     method="florist", tau=0.9, homogeneous_rank=8, seed=0)
+    data = kw.pop("clients_data", None)    # pre-built population, if shared
     return FederatedTrainer(cfg, fed, LoRAConfig(rank=8, alpha=8.0),
-                            OptimConfig(lr=3e-3), batch_size=batch_size,
+                            OptimConfig(lr=3e-3), clients=data,
+                            batch_size=batch_size,
                             local_steps=local_steps, seq_len=seq_len,
                             eval_data=make_eval_data(num_samples=32,
                                                      seq_len=seq_len,
                                                      vocab=cfg.vocab_size),
-                            runner=runner, scheduler=scheduler)
+                            runner=runner, scheduler=scheduler, **kw)
+
+
+def dp_axis(cfg: ModelConfig, *, clients: int, sample: int, local_steps: int,
+            batch_size: int, seq_len: int, rounds: int = 3) -> dict:
+    """Utility-vs-ε: final smoke eval loss as the per-round privacy budget
+    tightens (σ = classical Gaussian calibration for ε at δ=1e-5)."""
+    curve = []
+    for eps in (None, 8.0, 2.0, 0.5):
+        sigma = 0.0 if eps is None else noise_multiplier_for_epsilon(eps)
+        tr = make_trainer(cfg, "cohort", "sync", clients=clients,
+                          sample=sample, local_steps=local_steps,
+                          batch_size=batch_size, seq_len=seq_len,
+                          dp_clip=0.0 if eps is None else 1.0,
+                          dp_sigma=sigma)
+        loss = tr.run(rounds)[-1].eval_loss
+        curve.append({"epsilon": eps, "sigma": round(sigma, 4),
+                      "eval_loss": round(loss, 5)})
+        tag = "inf" if eps is None else f"{eps:g}"
+        print(f"dp eps={tag:>4s} sigma={sigma:6.3f} loss={loss:.4f}")
+    ref = curve[0]["eval_loss"]
+    tightest = curve[-1]["eval_loss"]
+    return {"curve": curve,
+            # utility cost of the tightest budget, as a machine-invariant
+            # ratio (deterministic seeds: shifts mean the CODE changed)
+            "loss_ratio_tightest_eps": round(tightest / ref, 4)}
+
+
+def scale_axis(iters: int) -> dict:
+    """1024-client rounds: sampled participation + the three runners.
+
+    ``sharded_cohort`` shards the cohort's client axis over the fed mesh's
+    ``data`` axis; with N real devices each compiled call trains 1/N of the
+    cohort per device.  ``peak_live_clients`` / ``peak_pending_blocks``
+    assert the O(cohort) memory claim on both sides of the wire.
+    """
+    cfg = ModelConfig(name="fedbench-nano", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                      d_ff=64, vocab_size=128, dtype="float32")
+    clients, participants, local_steps = 1024, 64, 2
+    batch_size, seq_len = 2, 16
+    data = make_federated_data(num_clients=clients, mean_samples=6,
+                               seq_len=seq_len, vocab=cfg.vocab_size, seed=0)
+    arms = {"sequential": "sequential", "cohort": "cohort",
+            "sharded_cohort": ShardedCohortRunner(block=participants)}
+    results, trainers = [], {}
+    for name, runner in arms.items():
+        agg = FloristAggregator(tau=0.9, svd_method="svd", stream="auto",
+                                flush_every=participants)
+        tr = make_trainer(cfg, runner,
+                          SampledScheduler(fraction=participants / clients),
+                          clients=clients, sample=participants,
+                          local_steps=local_steps, batch_size=batch_size,
+                          seq_len=seq_len, aggregator=agg, clients_data=data)
+        trainers[name] = tr
+        rnd = 0
+        tr.run_round(rnd)                      # warmup/compile round
+        rnd += 1
+        samples = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            tr.run_round(rnd)
+            rnd += 1
+            samples.append(time.perf_counter() - t0)
+        sec = float(statistics.median(samples))
+        results.append({"runner": name, "ms_per_round": round(sec * 1e3, 3),
+                        "rounds_per_sec": round(1.0 / sec, 4)})
+        print(f"scale {name:15s} {sec * 1e3:9.2f} ms/round "
+              f"({1.0 / sec:.3f} rounds/s)")
+
+    by = {r["runner"]: r["ms_per_round"] for r in results}
+    sharded = trainers["sharded_cohort"]
+    return {
+        "config": {"model": cfg.name, "num_clients": clients,
+                   "participants": participants, "local_steps": local_steps,
+                   "mesh_devices": jax.device_count()},
+        "results": results,
+        "speedup_sharded_vs_sequential":
+            round(by["sequential"] / by["sharded_cohort"], 2),
+        "speedup_sharded_vs_cohort":
+            round(by["cohort"] / by["sharded_cohort"], 2),
+        "peak_live_clients": sharded.runner.peak_live_clients,
+        "peak_pending_blocks": sharded.aggregator.peak_pending_blocks,
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small config + few iters (CI)")
+    ap.add_argument("--scale", action="store_true",
+                    help="1024-client sampled + sharded_cohort arm only")
     ap.add_argument("--json", default="", help="write results to this path")
     ap.add_argument("--iters", type=int, default=0)
     args = ap.parse_args()
+
+    if args.scale:
+        report = scale_axis(args.iters or 3)
+        report["config"]["backend"] = jax.default_backend()
+        print(f"speedup (sharded_cohort vs sequential): "
+              f"{report['speedup_sharded_vs_sequential']:.2f}x")
+        print(f"speedup (sharded_cohort vs cohort, mesh "
+              f"{report['config']['mesh_devices']}): "
+              f"{report['speedup_sharded_vs_cohort']:.2f}x")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.json}")
+        return
 
     cfg = SMOKE_MODEL if args.smoke else FULL_MODEL
     clients, sample = (32, 16)
@@ -107,6 +224,9 @@ def main() -> None:
                    "backend": jax.default_backend()},
         "results": results,
         "speedup_cohort_vs_sequential": round(speedup, 2),
+        "dp_axis": dp_axis(cfg, clients=clients, sample=sample,
+                           local_steps=local_steps, batch_size=batch_size,
+                           seq_len=seq_len),
     }
     if args.json:
         with open(args.json, "w") as f:

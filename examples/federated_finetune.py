@@ -3,7 +3,9 @@ methods on a configurable model, several hundred local steps total.
 
   PYTHONPATH=src python examples/federated_finetune.py \
       [--method florist] [--rounds 20] [--tau 0.9] [--heter] [--model 100m] \
-      [--runner cohort] [--scheduler async] [--codec bf16]
+      [--runner cohort] [--scheduler async] [--codec bf16] \
+      [--clients 1024] [--participation 0.05] [--rank-policy resource] \
+      [--dp-clip 1.0] [--dp-epsilon 8]
 
 ``--model 100m`` builds a ~100M-parameter decoder (12L × 768) — the
 paper-style end-to-end run (slow on CPU; the default 'tiny' profile runs in
@@ -11,6 +13,15 @@ a couple of minutes).  ``--runner cohort`` trains each equal-rank cohort in
 one vmapped call; ``--scheduler`` swaps the participation semantics;
 ``--codec`` picks the wire serialization whose measured bytes are printed
 per round (see :mod:`repro.core.runtime`).
+
+For the population-scale simulation, ``--clients 1024 --participation
+0.05 --runner sharded_cohort`` samples ~51 participants per round from a
+seed-deterministic rng and trains them in mesh-sharded cohort blocks
+(run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+shard over 8 virtual devices).  ``--rank-policy resource`` adapts each
+task's LoRA rank to a cyclic client-budget profile; ``--dp-clip`` /
+``--dp-sigma`` privatize every upload on the wire (``--dp-epsilon``
+calibrates σ from a per-round ε instead).
 """
 import argparse
 import time
@@ -19,7 +30,9 @@ from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 import repro.core.distributed  # noqa: F401  (registers florist_sharded)
 from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
-from repro.core.runtime import (available_codecs, available_runners,
+from repro.core.privacy import noise_multiplier_for_epsilon
+from repro.core.runtime import (SampledScheduler, available_codecs,
+                                available_rank_policies, available_runners,
                                 available_schedulers)
 
 PROFILES = {
@@ -50,24 +63,49 @@ def main():
     ap.add_argument("--scheduler", default="sync",
                     choices=available_schedulers())
     ap.add_argument("--codec", default="fp32", choices=available_codecs())
+    ap.add_argument("--clients", type=int, default=40)
+    ap.add_argument("--participation", type=float, default=0.0,
+                    help="sampled-scheduler fraction (overrides --scheduler)")
+    ap.add_argument("--rank-policy", default="static",
+                    choices=available_rank_policies())
+    ap.add_argument("--dp-clip", type=float, default=0.0)
+    ap.add_argument("--dp-sigma", type=float, default=0.0)
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="per-round epsilon -> sigma (overrides --dp-sigma)")
     args = ap.parse_args()
 
+    scheduler = args.scheduler
+    if args.participation:
+        scheduler = SampledScheduler(fraction=args.participation)
+    dp_sigma = args.dp_sigma
+    if args.dp_epsilon:
+        dp_sigma = noise_multiplier_for_epsilon(args.dp_epsilon)
+
     cfg = PROFILES[args.model]
-    fed = FedConfig(num_clients=40, clients_per_round=8, method=args.method,
+    c = args.clients
+    # the tiny heavy-tail profile, scaled to --clients (counts must sum to c)
+    dist = ((4, 4 * c // 10), (8, 2 * c // 10), (16, 2 * c // 10), (32, c // 10),
+            (64, c - (4 * c // 10) - 2 * (2 * c // 10) - c // 10))
+    fed = FedConfig(num_clients=c, clients_per_round=8, method=args.method,
                     tau=args.tau, homogeneous_rank=16,
                     heterogeneous=args.heter,
-                    rank_distribution=((4, 16), (8, 8), (16, 8), (32, 4), (64, 4)),
+                    rank_distribution=dist,
                     zero_padding=args.heter and args.method in ("fedit", "ffa"),
                     seed=args.seed)
     trainer = FederatedTrainer(cfg, fed, LoRAConfig(rank=16, alpha=16.0),
                                OptimConfig(lr=3e-4), batch_size=8,
                                local_steps=args.local_steps, seq_len=64,
-                               runner=args.runner, scheduler=args.scheduler,
+                               dp_clip=args.dp_clip, dp_sigma=dp_sigma,
+                               runner=args.runner, scheduler=scheduler,
+                               rank_policy=args.rank_policy,
                                transport=args.codec)
-    total_steps = args.rounds * fed.clients_per_round * args.local_steps
+    per_round = max(1, round(args.participation * c)) if args.participation \
+        else fed.clients_per_round
+    total_steps = args.rounds * per_round * args.local_steps
+    sched_name = scheduler if isinstance(scheduler, str) else scheduler.name
     print(f"== federated fine-tune: {cfg.name} ({cfg.param_count():,} params), "
           f"method={args.method}, runner={args.runner}, "
-          f"scheduler={args.scheduler}, codec={args.codec}, "
+          f"scheduler={sched_name}, codec={args.codec}, "
           f"{args.rounds} rounds (~{total_steps} local steps total) ==")
     t0 = time.time()
     for rnd in range(args.rounds):

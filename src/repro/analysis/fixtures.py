@@ -57,6 +57,12 @@ def abstract_mesh(model: int) -> AbstractMesh:
     return AbstractMesh((("data", 1), ("model", model)))
 
 
+def abstract_fed_mesh(data: int) -> AbstractMesh:
+    """A device-free fed-shaped mesh (data=N, model=1): the client-parallel
+    cohort specs validate at any data width on a 1-device host."""
+    return AbstractMesh((("data", data), ("model", 1)))
+
+
 def abstract_params(cfg: ModelConfig):
     return jax.eval_shape(partial(T.init, cfg), sds((2,), jnp.uint32))
 

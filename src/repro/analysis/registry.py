@@ -114,6 +114,7 @@ REGISTRATION_MODULES = (
     "repro.train.step",
     "repro.serve.engine",
     "repro.core.aggregators",
+    "repro.core.runtime.runners",
     "repro.kernels.ops",
 )
 

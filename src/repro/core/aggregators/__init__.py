@@ -73,6 +73,38 @@ def _contract_florist_finalize(case):
                         out_check=out_check)
 
 
+@check_contract("agg.florist_stream", mesh_sizes=(1,))
+def _contract_florist_stream(case):
+    """The streaming ``add_client`` path's compact intermediate: folding a
+    pending block into the running dense update preserves the O(m·n) aval
+    (a fixed point — the accumulator never grows with the client count),
+    and the delta-mode finalize keeps the padded-core output shapes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import fixtures as FX
+    from repro.core.svd import florist_core_delta_batched
+
+    def core(m, b, a):
+        m2 = m + b @ a                      # one _compact() fold
+        return (m2,) + tuple(florist_core_delta_batched(m2, 0.9, "gram"))
+
+    def out_check(out, _case):
+        m2, b_g, a_g, spectrum, p = out
+        q = min(_M, _N)
+        assert m2.shape == (_L, _M, _N), m2.shape    # accumulator fixed point
+        assert b_g.shape == (_L, _M, q), b_g.shape
+        assert a_g.shape == (_L, q, _N), a_g.shape
+        assert spectrum.shape == (_L, q), spectrum.shape
+        assert p.shape == (_L,) and p.dtype == jnp.int32, (p.shape, p.dtype)
+        assert all(v.dtype == jnp.float32 for v in (m2, b_g, a_g, spectrum))
+
+    return ContractCase(core, (FX.sds((_L, _M, _N), "float32"),
+                               FX.sds((_L, _M, _R), "float32"),
+                               FX.sds((_L, _R, _N), "float32")),
+                        out_check=out_check)
+
+
 @check_contract("agg.thin_svd", mesh_sizes=(1,))
 def _contract_thin_svd(case):
     """Batched thin SVD (both the LAPACK path and the gram-trick path used

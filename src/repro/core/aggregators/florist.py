@@ -14,51 +14,128 @@ from repro.core.aggregators.base import (AggResult, Aggregator,
                                          adapter_leaf_paths, bucket_by_shape,
                                          fold_scale, get_path,
                                          register_aggregator, set_path)
-from repro.core.svd import florist_core_batched, florist_core_stacked
+from repro.core.svd import (florist_core_batched, florist_core_delta_batched,
+                            florist_core_stacked)
 
 
 @register_aggregator("florist")
 class FloristAggregator(Aggregator):
     """Streaming stacker + thresholded core SVD at finalize.
 
-    ``add_client`` appends each client's scale-folded B block and weighted A
-    block per leaf — O(Σ r_k) columns per leaf, never K full trees — and
-    ``finalize`` runs the batched server pipeline on the completed stacks:
-    leaves with identical stack shapes are batched together and every layer
-    of a bucket goes through ONE compiled vmapped call
-    (:func:`~repro.core.svd.florist_core_batched`); spectra and concrete
-    per-layer ranks are materialized with a single device→host transfer at
-    the end, where the zero-padded outputs are truncated.  Ragged per-layer
-    ranks are zero-padded to the per-leaf max so the global tree stays
-    scan-compatible; the true ranks are recorded for communication
-    accounting.
+    ``add_client`` folds each arriving client into a *bounded* compact
+    intermediate: scale-folded B blocks and weighted A blocks are appended
+    to a per-leaf pending list and, every ``flush_every`` arrivals, the
+    pending blocks are compacted on device —
+
+    * **stacked mode** (small rounds): the pending blocks are concatenated
+      into one (L, m, Σr) / (L, Σr, n) pair, the exact intermediate the
+      paper's pipeline thin-SVDs at finalize;
+    * **delta mode** (``stream="delta"``, or ``"auto"`` once the stack
+      width Σ r_k would exceed ``min(m, n)``): the pending blocks are
+      contracted into a running dense update ``M += B_pend A_pend`` —
+      O(m·n) per leaf, *constant in the client count* — and finalize runs
+      the thin SVD of ``M`` directly (the same SVD the stacked route
+      computes implicitly, so the two modes agree up to fp error).
+
+    Either way the server never holds more than ``flush_every`` client
+    blocks plus one compact intermediate per leaf: peak live adapter
+    memory is O(cohort), not O(K).  ``peak_pending_blocks`` records the
+    high-water mark for the memory-bound tests.
+
+    ``finalize`` buckets leaves with identical intermediate shapes so every
+    layer of a bucket goes through ONE compiled vmapped call
+    (:func:`~repro.core.svd.florist_core_batched` /
+    :func:`~repro.core.svd.florist_core_delta_batched`); spectra and
+    concrete per-layer ranks are materialized with a single device→host
+    transfer at the end, where the zero-padded outputs are truncated.
+    Ragged per-layer ranks are zero-padded to the per-leaf max so the
+    global tree stays scan-compatible; the true ranks are recorded for
+    communication accounting.
 
     ``pipeline="loop"`` keeps the legacy per-(leaf, layer) Python loop
     (one eager ``florist_core_stacked`` + host sync per layer) as a
-    reference for equivalence tests and the ``agg_bench`` baseline.
+    reference for equivalence tests and the ``agg_bench`` baseline; it
+    forces stacked mode (the loop oracle predates the delta route).
     """
 
     def __init__(self, tau=0.9, svd_method: str = "svd", max_rank: int = 0,
-                 pipeline: str = "batched"):
+                 pipeline: str = "batched", stream: str = "auto",
+                 flush_every: int = 64):
         if pipeline not in ("batched", "loop"):
             raise ValueError(pipeline)
+        if stream not in ("auto", "stacked", "delta"):
+            raise ValueError(stream)
         self.tau = tau
         self.svd_method = svd_method
         self.max_rank = max_rank
         self.pipeline = pipeline
+        # the loop oracle iterates the stacked lists directly
+        self.stream = "stacked" if pipeline == "loop" else stream
+        self.flush_every = max(1, int(flush_every))
+        self.peak_pending_blocks = 0
         super().__init__()
+
+    # -- streaming accumulation ----------------------------------------------
 
     def _accumulate(self, update: Dict, weight: float, rank: int) -> None:
         for path in adapter_leaf_paths(update):
             Bk, Ak = fold_scale(get_path(update, path))
             acc = self._state.setdefault(
-                path, {"stacked": Ak.ndim == 3, "A": [], "B": []})
+                path, {"stacked": Ak.ndim == 3, "A": [], "B": [], "M": None})
             acc["B"].append(Bk)
             acc["A"].append(weight * Ak)
+            self.peak_pending_blocks = max(self.peak_pending_blocks,
+                                           len(acc["B"]))
+            if len(acc["B"]) >= self.flush_every:
+                self._compact(acc)
+
+    def _delta_mode(self, acc: Dict) -> bool:
+        if acc["M"] is not None or self.stream == "delta":
+            return True
+        if self.stream != "auto" or not acc["B"]:
+            return False
+        width = sum(b.shape[-1] for b in acc["B"])
+        m, n = acc["B"][0].shape[-2], acc["A"][0].shape[-1]
+        return width > min(m, n)
+
+    def _compact(self, acc: Dict) -> None:
+        """Fold the pending client blocks into the compact intermediate
+        (running dense ΔW in delta mode, one consolidated stack otherwise),
+        bounding the pending list at ``flush_every`` entries."""
+        if not acc["B"]:
+            return
+        B = acc["B"][0] if len(acc["B"]) == 1 \
+            else jnp.concatenate(acc["B"], axis=-1)
+        A = acc["A"][0] if len(acc["A"]) == 1 \
+            else jnp.concatenate(acc["A"], axis=-2)
+        if self._delta_mode(acc):
+            d = B @ A                       # (L, m, n) / (m, n): batched matmul
+            acc["M"] = d if acc["M"] is None else acc["M"] + d
+            acc["B"], acc["A"] = [], []
+        else:
+            acc["B"], acc["A"] = [B], [A]
+
+    def _settle(self) -> Dict[Tuple, Tuple]:
+        """Compact every leaf and return its finalize-ready intermediate:
+        ``("stack", B (L,m,Σr), A (L,Σr,n))`` or ``("delta", M (L,m,n))``
+        (un-stacked leaves get a singleton layer axis so every leaf is
+        3-D)."""
+        inter: Dict[Tuple, Tuple] = {}
+        for path, acc in self._state.items():
+            self._compact(acc)
+            if acc["M"] is not None:
+                M = acc["M"] if acc["stacked"] else acc["M"][None]
+                inter[path] = ("delta", M)
+            else:
+                B, A = acc["B"][0], acc["A"][0]
+                if not acc["stacked"]:
+                    B, A = B[None], A[None]
+                inter[path] = ("stack", B, A)
+        return inter
 
     def _leaf_stacks(self) -> Dict[Tuple, Tuple[jnp.ndarray, jnp.ndarray]]:
-        """{path: (B_stack (L,m,Σr), A_stack (L,Σr,n))} — un-stacked leaves
-        get a singleton layer axis so every leaf is 3-D."""
+        """{path: (B_stack (L,m,Σr), A_stack (L,Σr,n))} — stacked-mode
+        leaves only (the loop oracle and stacked-only callers)."""
         stacks = {}
         for path, acc in self._state.items():
             B_stack = jnp.concatenate(acc["B"], axis=-1)
@@ -68,15 +145,37 @@ class FloristAggregator(Aggregator):
             stacks[path] = (B_stack, A_stack)
         return stacks
 
-    def _finalize(self) -> AggResult:
-        if self.pipeline == "loop":
-            return self._finalize_loop()
+    # -- finalize -------------------------------------------------------------
+
+    def _materialize(self, device: Dict[Tuple, Tuple]) -> AggResult:
+        """Shared finalize tail: ONE device→host transfer for all leaves'
+        spectra + ranks, then truncate the zero-padded global factors to
+        each leaf's max kept rank (exact: the dropped columns are zeros)."""
         out: Dict = {}
         rank_rec: Dict[Tuple, List[int]] = {}
         spectra: Dict[Tuple, List[np.ndarray]] = {}
-        stacks = self._leaf_stacks()
-        # bucket leaves by stack shape: equal-shaped leaves (e.g. all the
-        # q/k/v/o projections) share one compiled call over G·L layers
+        host = jax.device_get({p: (v[2], v[3]) for p, v in device.items()})
+        for path, (Bg, Ag, _, _) in device.items():
+            sp_h, p_h = host[path]
+            ps = [int(x) for x in p_h]
+            p_max = max(ps)
+            Bg, Ag = Bg[:, :, :p_max], Ag[:, :p_max, :]
+            if not self._state[path]["stacked"]:
+                Bg, Ag = Bg[0], Ag[0]
+            set_path(out, path, {"A": Ag, "B": Bg,
+                                 "scale": self._ref_scales[path]})
+            rank_rec[path] = ps
+            spectra[path] = [np.asarray(s) for s in sp_h]
+        return AggResult(self.name, out, None, rank_rec, spectra)
+
+    def _finalize(self) -> AggResult:
+        if self.pipeline == "loop":
+            return self._finalize_loop()
+        inter = self._settle()
+        stacks = {p: v[1:] for p, v in inter.items() if v[0] == "stack"}
+        deltas = {p: v[1:] for p, v in inter.items() if v[0] == "delta"}
+        # bucket leaves by intermediate shape: equal-shaped leaves (e.g. all
+        # the q/k/v/o projections) share one compiled call over G·L layers
         device: Dict[Tuple, Tuple] = {}
         for paths in bucket_by_shape(stacks):
             Bb = jnp.concatenate([stacks[p][0] for p in paths], axis=0)
@@ -87,23 +186,15 @@ class FloristAggregator(Aggregator):
             for i, path in enumerate(paths):
                 sl = slice(i * L, (i + 1) * L)
                 device[path] = (Bg[sl], Ag[sl], sp[sl], pr[sl])
-        # exactly ONE device→host transfer: the spectra and concrete ranks
-        # needed for truncation and accounting
-        host = jax.device_get({p: (v[2], v[3]) for p, v in device.items()})
-        for path, (Bg, Ag, _, _) in device.items():
-            sp_h, p_h = host[path]
-            ps = [int(x) for x in p_h]
-            p_max = max(ps)
-            # columns beyond each layer's p_l are zeroed on device, so
-            # truncating to the per-leaf max is exact (same ΔW)
-            Bg, Ag = Bg[:, :, :p_max], Ag[:, :p_max, :]
-            if not self._state[path]["stacked"]:
-                Bg, Ag = Bg[0], Ag[0]
-            set_path(out, path, {"A": Ag, "B": Bg,
-                                 "scale": self._ref_scales[path]})
-            rank_rec[path] = ps
-            spectra[path] = [np.asarray(s) for s in sp_h]
-        return AggResult(self.name, out, None, rank_rec, spectra)
+        for paths in bucket_by_shape(deltas):
+            Mb = jnp.concatenate([deltas[p][0] for p in paths], axis=0)
+            Bg, Ag, sp, pr = florist_core_delta_batched(
+                Mb, self.tau, self.svd_method, self.max_rank)
+            L = deltas[paths[0]][0].shape[0]
+            for i, path in enumerate(paths):
+                sl = slice(i * L, (i + 1) * L)
+                device[path] = (Bg[sl], Ag[sl], sp[sl], pr[sl])
+        return self._materialize(device)
 
     def _finalize_loop(self) -> AggResult:
         """Legacy per-(leaf, layer) eager loop — kept verbatim as the

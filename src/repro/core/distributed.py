@@ -26,7 +26,7 @@ from repro.common.pjit_utils import shard_map as _shard_map
 
 from repro.core.aggregators import AggResult, register_aggregator, set_path
 from repro.core.aggregators.florist import FloristAggregator
-from repro.core.svd import florist_core_padded
+from repro.core.svd import florist_core_delta_padded, florist_core_padded
 
 
 def florist_aggregate_batched(B_stacks: jnp.ndarray, A_stacks: jnp.ndarray,
@@ -91,6 +91,35 @@ def make_sharded_florist(mesh: Mesh, tau, svd_method: str = "gram",
     return run
 
 
+def make_sharded_florist_delta(mesh: Mesh, tau, svd_method: str = "gram",
+                               max_rank: int = 0):
+    """Layer-sharded delta-mode finalize: fn(M (L, m, n)) ->
+    (B_g, A_g, spectra, ranks) — the streaming server's compact dense
+    intermediate SVD'd in place, layers sharded over 'model'."""
+    n_shard = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+    def local(ms):
+        fn = partial(florist_core_delta_padded, tau=tau,
+                     svd_method=svd_method, max_rank=max_rank)
+        return jax.vmap(fn)(ms)
+
+    sharded = _shard_map(
+        local, mesh=mesh,
+        in_specs=(P("model"),),
+        out_specs=(P("model"), P("model"), P("model"), P("model")),
+    )
+
+    @jax.jit
+    def run(M):
+        Mp, L = pad_layers(M, n_shard)
+        eye_bump = 1e-6
+        Mp = Mp.at[L:].add(eye_bump) if Mp.shape[0] > L else Mp
+        bg, ag, sp, p = sharded(Mp)
+        return bg[:L], ag[:L], sp[:L], p[:L]
+
+    return run
+
+
 @register_aggregator("florist_sharded")
 class ShardedFloristAggregator(FloristAggregator):
     """FLoRIST with the finalize step mapped onto a device mesh.
@@ -104,38 +133,29 @@ class ShardedFloristAggregator(FloristAggregator):
     """
 
     def __init__(self, tau=0.9, svd_method: str = "gram",
-                 mesh: Optional[Mesh] = None, max_rank: int = 0):
+                 mesh: Optional[Mesh] = None, max_rank: int = 0,
+                 stream: str = "auto", flush_every: int = 64):
         if mesh is None:
             mesh = Mesh(np.asarray(jax.devices()), ("model",))
         self.mesh = mesh
         self._fn_cache: Dict = {}
-        super().__init__(tau=tau, svd_method=svd_method, max_rank=max_rank)
+        super().__init__(tau=tau, svd_method=svd_method, max_rank=max_rank,
+                         stream=stream, flush_every=flush_every)
 
     def _finalize(self) -> AggResult:
-        out: Dict = {}
-        rank_rec: Dict[Tuple, List[int]] = {}
-        spectra: Dict[Tuple, List[np.ndarray]] = {}
         if "fn" not in self._fn_cache:
             self._fn_cache["fn"] = make_sharded_florist(
                 self.mesh, tau=self.tau, svd_method=self.svd_method,
                 max_rank=self.max_rank)
-        fn = self._fn_cache["fn"]
+            self._fn_cache["delta"] = make_sharded_florist_delta(
+                self.mesh, tau=self.tau, svd_method=self.svd_method,
+                max_rank=self.max_rank)
         device: Dict[Tuple, Tuple] = {}
-        for path, (B_stack, A_stack) in self._leaf_stacks().items():
-            device[path] = fn(B_stack, A_stack)
-        # one device→host transfer for all leaves' spectra + ranks
-        host = jax.device_get({p: (v[2], v[3]) for p, v in device.items()})
-        for path, (Bg, Ag, _, _) in device.items():
-            sp_h, p_h = host[path]
-            ps = [int(x) for x in p_h]
-            p_max = max(ps)
-            # zeroed columns beyond each layer's p_l make truncation to the
-            # per-leaf max exact (same ΔW, scan-compatible tree)
-            Bg, Ag = Bg[:, :, :p_max], Ag[:, :p_max, :]
-            if not self._state[path]["stacked"]:
-                Bg, Ag = Bg[0], Ag[0]
-            set_path(out, path, {"A": Ag, "B": Bg,
-                                 "scale": self._ref_scales[path]})
-            rank_rec[path] = ps
-            spectra[path] = [np.asarray(s) for s in sp_h]
-        return AggResult(self.name, out, None, rank_rec, spectra)
+        for path, inter in self._settle().items():
+            if inter[0] == "stack":
+                device[path] = self._fn_cache["fn"](inter[1], inter[2])
+            else:
+                device[path] = self._fn_cache["delta"](inter[1])
+        # _materialize does the single device→host transfer + exact
+        # truncation of the zero-padded columns
+        return self._materialize(device)

@@ -8,14 +8,22 @@ global-model evaluation — composed from four pluggable seams
 * a **RoundScheduler** decides who participates (``scheduler=``: ``sync``
   reproduces the paper's sample-K-wait-for-all semantics bit-for-bit;
   ``partial`` injects dropouts/stragglers with per-client step budgets;
-  ``async`` buffers staleness-discounted arrivals);
+  ``async`` buffers staleness-discounted arrivals; ``sampled`` draws a
+  seed-deterministic participation fraction of the full population);
+* a **RankPolicy** (``rank_policy=``: ``static`` / ``resource``) may then
+  adapt each task's LoRA rank to a declared client resource profile
+  (AFLoRA-style) before training starts;
 * a **ClientRunner** executes local fine-tuning (``runner=``:
   ``sequential`` is the legacy one-client-at-a-time loop; ``cohort``
-  trains each equal-rank cohort in one jitted vmapped train-step call);
+  trains each equal-rank cohort in one jitted vmapped train-step call;
+  ``sharded_cohort`` additionally shards the cohort's client axis over the
+  fed mesh's ``data`` axis — 1024 clients in a handful of compiled calls);
 * a **Transport** puts every exchanged adapter tree on a measured wire
   (``transport=`` codec: ``fp32`` exact / ``bf16`` / ``int8``), so each
   :class:`RoundRecord` carries real serialized ``upload_bytes`` /
-  ``download_bytes`` next to the analytic parameter counts;
+  ``download_bytes`` next to the analytic parameter counts — with
+  ``dp_clip``/``dp_sigma`` set, uploads are clipped/noised on the wire
+  (local DP) before encoding, whatever the codec;
 * an **Aggregator** owns the method semantics (client re-init, frozen-A
   composition, base merging, truncation, cost formulas) — pass
   ``aggregator=`` for a custom strategy, otherwise one is built from
@@ -41,8 +49,9 @@ import numpy as np
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core.aggregators import (AggResult, Aggregator, accepted_config,
                                     make_aggregator)
-from repro.core.runtime import (ClientRunner, RoundScheduler, Transport,
-                                make_runner, make_scheduler, make_transport)
+from repro.core.runtime import (ClientRunner, RankPolicy, RoundScheduler,
+                                Transport, make_rank_policy, make_runner,
+                                make_scheduler, make_transport)
 from repro.data.synthetic import ClientDataset, make_eval_data, make_federated_data
 from repro.models import transformer as T
 from repro.peft.lora import init_lora, merge_lora
@@ -97,11 +106,13 @@ class FederatedTrainer:
                  aggregator: Optional[Aggregator] = None,
                  runner: Any = "sequential",
                  scheduler: Any = "sync",
+                 rank_policy: Any = "static",
                  transport: Any = "fp32"):
         self.cfg, self.fed, self.lora, self.optim = cfg, fed, lora, optim
         self.batch_size, self.local_steps = batch_size, local_steps
         self.svd_method = svd_method
-        # client-level differential privacy (beyond-paper; see core/privacy)
+        # client-level differential privacy, applied on the wire by the
+        # transport's uplink DP stage (see core/runtime/transport)
         self.dp_clip, self.dp_sigma = dp_clip, dp_sigma
         self.rng = np.random.default_rng(fed.seed)
         key = jax.random.PRNGKey(fed.seed)
@@ -124,7 +135,9 @@ class FederatedTrainer:
             self.aggregator.A_init = self.A_init_full
         self.runner: ClientRunner = make_runner(runner)
         self.scheduler: RoundScheduler = make_scheduler(scheduler)
-        self.transport: Transport = make_transport(transport)
+        self.rank_policy: RankPolicy = make_rank_policy(rank_policy)
+        self.transport: Transport = make_transport(
+            transport, dp_clip=dp_clip, dp_sigma=dp_sigma, dp_seed=fed.seed)
         self.global_state: Optional[AggResult] = None
         self.clients = clients if clients is not None else make_federated_data(
             num_clients=fed.num_clients, seq_len=seq_len,
@@ -142,48 +155,51 @@ class FederatedTrainer:
         return _cached_train_step(self.cfg, self.optim, 64,
                                   self.aggregator.trains_b_only)
 
-    def _client_init(self, k: int) -> Dict:
+    def _client_init(self, k: int, rank: Optional[int] = None) -> Dict:
         """Build client k's starting adapters for this round (delegated to
-        the aggregation strategy's client-init semantics)."""
-        return self.aggregator.client_init(self.global_state,
-                                           self.client_ranks[k],
-                                           self.A_init_full)
+        the aggregation strategy's client-init semantics).  ``rank``
+        overrides the client's configured rank when a rank policy adapted
+        this round's task."""
+        return self.aggregator.client_init(
+            self.global_state,
+            self.client_ranks[k] if rank is None else rank,
+            self.A_init_full)
 
     # -- main loop ------------------------------------------------------------
     def run_round(self, rnd: int) -> RoundRecord:
         t0 = time.perf_counter()
         plan = self.scheduler.plan(rnd, self)
+        self.rank_policy.assign(rnd, plan, self)
         ranks = [t.rank for t in plan.tasks]
         self.aggregator.begin_round()
         upload_bytes = 0
 
-        def deliver(task, adapters):
-            # uplink through the measured wire, then stream into the server
+        def deliver(task, adapters, init_adapters=None):
+            # uplink through the measured wire (DP clip/noise happens there,
+            # against the round's init), then stream into the server
             # accumulators; the trained adapters go out of scope here (no
             # K-tree round buffer)
             nonlocal upload_bytes
             adapters, nbytes = self.transport.client_to_server(
-                adapters, self.aggregator)
+                adapters, self.aggregator, init_adapters=init_adapters,
+                rnd=rnd, client_id=task.client_id)
             upload_bytes += nbytes
             self.aggregator.add_client(adapters, task.weight, rank=task.rank)
 
         self.runner.run(self, plan, deliver)
         agg = self.aggregator.finalize()
-        if self.dp_sigma and agg.global_adapters is not None:
-            from repro.core.privacy import add_gaussian_noise
-            key = jax.random.PRNGKey(10_000 + rnd)
-            agg.global_adapters = add_gaussian_noise(
-                agg.global_adapters, self.dp_sigma, self.dp_clip or 1.0,
-                len(plan.tasks), key)
         dims = self.aggregator.dims
         up = self.aggregator.round_upload_params
-        down = self.aggregator.download_params(agg, dims, len(plan.tasks),
-                                               ranks)
+        # participation-aware downlink count: only clients actually handed
+        # the model this round (async: dispatch-time snapshots)
+        n_down = plan.downloads if plan.downloads is not None \
+            else len(plan.tasks)
+        down = self.aggregator.download_params(agg, dims, n_down, ranks)
 
         # downlink through the measured wire: what the clients resume from
         # next round is the decoded broadcast (identity under fp32)
         bcast, download_bytes = self.transport.server_to_clients(
-            agg, self.aggregator, len(plan.tasks))
+            agg, self.aggregator, n_down)
         if agg.merge_into_base:
             # FLoRA: every *client* folds the broadcast stack into its base,
             # so the merge consumes the decoded wire tensors, codec included

@@ -3,17 +3,22 @@
 FFA-LoRA's motivating context (Sun et al. 2024, "Improving LoRA in
 privacy-preserving federated learning") is DP-SGD-style training; the
 FLoRIST paper inherits the privacy framing but does not implement noise.
-We provide the standard client-level DP mechanism:
+We provide the standard client-level DP mechanisms:
 
   1. clip each client's adapter update to L2 norm ≤ C (flattened over the
      whole adapter tree, the update being the delta from the round's init),
-  2. add Gaussian noise N(0, σ²C²/K) to the *aggregated* update
-     (server-side, after FLoRIST truncation — noise is added in the rank-p
-     global adapter factor space, which keeps the download compact).
+  2. **local** (DP-on-the-wire, the runtime default): add Gaussian noise
+     N(0, σ²C²) to each clipped update *before it leaves the client* — the
+     transport's DP codec stage (:mod:`repro.core.runtime.transport`), so
+     the server and the wire only ever see privatized bytes;
+  3. **central** (legacy helper): add N(0, σ²C²/K) to the *aggregated*
+     update server-side (sensitivity C/K under mean aggregation).
 
-Interaction with SVT (documented): thresholding *before* noising means the
-noise does not inflate the kept rank; the Eckart–Young bound then holds for
-the pre-noise aggregate.
+Interaction with SVT (documented): under the local mechanism the stacked
+intermediate the server thresholds is already noisy — small singular values
+are noise-floor-inflated, so a given τ keeps a slightly *higher* rank than
+the noiseless run; the Eckart–Young bound holds for the noisy aggregate the
+server actually sees.
 """
 from __future__ import annotations
 
@@ -57,6 +62,21 @@ def add_gaussian_noise(tree: Any, sigma: float, clip_norm: float,
     """Server-side Gaussian mechanism: noise std = σ·C / K per coordinate
     (client-level DP with sensitivity C/K under mean aggregation)."""
     std = sigma * clip_norm / max(num_clients, 1)
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (l + std * jax.random.normal(k, l.shape)).astype(l.dtype)
+        if l.ndim >= 2 else l           # don't noise scalars ("scale")
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def local_gaussian_noise(tree: Any, sigma: float, clip_norm: float,
+                         key: jax.Array) -> Any:
+    """Client-side (local) Gaussian mechanism: noise std = σ·C per
+    coordinate, applied to one clipped update before upload."""
+    std = sigma * clip_norm
     leaves, treedef = jax.tree.flatten(tree)
     keys = jax.random.split(key, len(leaves))
     noisy = [

@@ -1,41 +1,57 @@
-"""Federated round runtime: pluggable client runners, round schedulers and
-measured wire transport.
+"""Federated round runtime: pluggable client runners, round schedulers,
+rank policies and measured wire transport.
 
 The :class:`~repro.core.federated.FederatedTrainer` is a thin composition
-of four seams, each independently swappable:
+of five seams, each independently swappable:
 
 ====================  ====================================================
 seam                  registry / built-ins
 ====================  ====================================================
 ``ClientRunner``      ``make_runner``: ``sequential`` (legacy loop,
                       bit-for-bit) · ``cohort`` (equal-rank cohorts in one
-                      jitted vmapped train call)
+                      jitted vmapped train call) · ``sharded_cohort``
+                      (cohort with the client axis sharded over the fed
+                      mesh's ``data`` axis)
 ``RoundScheduler``    ``make_scheduler``: ``sync`` · ``partial``
                       (dropouts/stragglers) · ``async`` (buffered,
-                      staleness-discounted)
+                      staleness-discounted) · ``sampled`` (population-
+                      scale participation fraction, seed-deterministic)
+``RankPolicy``        ``make_rank_policy``: ``static`` · ``resource``
+                      (AFLoRA-style budget tiers with warmup ramp)
 ``Transport``         ``make_codec``: ``fp32`` · ``bf16`` · ``int8`` —
                       measured bytes per round, cross-checkable against the
-                      analytic counts in :mod:`repro.core.costs`
+                      analytic counts in :mod:`repro.core.costs`; DP
+                      clip/noise composes as an uplink codec stage
 ``Aggregator``        :mod:`repro.core.aggregators` (PR 1/2)
 ====================  ====================================================
 """
 from repro.core.runtime.runners import (ClientRunner, CohortRunner,
-                                        SequentialRunner, available_runners,
-                                        make_runner, register_runner)
+                                        SequentialRunner,
+                                        ShardedCohortRunner,
+                                        available_runners, make_runner,
+                                        register_runner)
 from repro.core.runtime.schedulers import (AsyncScheduler, ClientTask,
-                                           PartialScheduler, RoundPlan,
-                                           RoundScheduler, SyncScheduler,
+                                           PartialScheduler, RankPolicy,
+                                           ResourceRankPolicy, RoundPlan,
+                                           RoundScheduler, SampledScheduler,
+                                           StaticRankPolicy, SyncScheduler,
+                                           available_rank_policies,
                                            available_schedulers,
-                                           make_scheduler, register_scheduler)
+                                           make_rank_policy, make_scheduler,
+                                           register_rank_policy,
+                                           register_scheduler)
 from repro.core.runtime.transport import (AdapterPayload, Codec, Transport,
                                           available_codecs, make_codec,
                                           make_transport, register_codec)
 
 __all__ = [
     "AdapterPayload", "AsyncScheduler", "ClientRunner", "ClientTask",
-    "Codec", "CohortRunner", "PartialScheduler", "RoundPlan",
-    "RoundScheduler", "SequentialRunner", "SyncScheduler", "Transport",
-    "available_codecs", "available_runners", "available_schedulers",
-    "make_codec", "make_runner", "make_scheduler", "make_transport",
-    "register_codec", "register_runner", "register_scheduler",
+    "Codec", "CohortRunner", "PartialScheduler", "RankPolicy",
+    "ResourceRankPolicy", "RoundPlan", "RoundScheduler", "SampledScheduler",
+    "SequentialRunner", "ShardedCohortRunner", "StaticRankPolicy",
+    "SyncScheduler", "Transport", "available_codecs",
+    "available_rank_policies", "available_runners", "available_schedulers",
+    "make_codec", "make_rank_policy", "make_runner", "make_scheduler",
+    "make_transport", "register_codec", "register_rank_policy",
+    "register_runner", "register_scheduler",
 ]

@@ -3,9 +3,10 @@
 A :class:`ClientRunner` consumes a :class:`~repro.core.runtime.schedulers.
 RoundPlan` and trains every task against the round context ``ctx`` (the
 :class:`~repro.core.federated.FederatedTrainer`: frozen ``params``,
-``clients``, ``batch_size``, ``dp_clip``, ``_client_init``), calling
-``deliver(task, trained_adapters)`` once per finished client so the server
-can stream each update into the aggregator and drop it.
+``clients``, ``batch_size``, ``_client_init``), calling ``deliver(task,
+trained_adapters, init_adapters)`` once per finished client so the server
+can stream each update through the transport (where DP clipping/noising
+happens against ``init_adapters``) into the aggregator and drop it.
 
 * ``sequential`` — one client at a time, exactly the legacy ``run_round``
   loop (same batch rng ``default_rng(1000·rnd + k)``, same step order):
@@ -17,11 +18,21 @@ can stream each update into the aggregator and drop it.
   batch sizes are padded with zero-masked rows (mathematically inert under
   the masked CE), so cohort training is numerically equivalent to the
   sequential loop up to batched-matmul reassociation.
+* ``sharded_cohort`` — ``cohort`` with the client axis additionally sharded
+  over the fed mesh's ``data`` axis (specs from
+  :func:`repro.topology.fed_pspecs`, consumed the same way the serving
+  stack consumes ``serve_pspecs``): a 1024-client round becomes a handful
+  of compiled sharded calls, each training ``block/N`` clients per device.
+
+Runners *stream*: each cohort block is prepared, trained, and delivered
+before the next is staged, so peak host memory is one cohort of client
+state — not the whole round's (``peak_live_clients`` records the
+high-water mark for the O(cohort) memory tests).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, List, Tuple, Type
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +48,9 @@ class ClientRunner:
     name: str = "?"
 
     def run(self, ctx, plan, deliver: Callable) -> None:
-        """Train every task in ``plan``; call ``deliver(task, adapters)``
-        once per completed client, in a deterministic order."""
+        """Train every task in ``plan``; call ``deliver(task, adapters,
+        init_adapters)`` once per completed client, in a deterministic
+        order."""
         raise NotImplementedError
 
 
@@ -76,17 +88,19 @@ def _init_getter(ctx):
     """Per-plan client-init resolver: a task resumes from its dispatch-time
     snapshot (async) or the aggregator's client-init for the current global
     state.  ``Aggregator.client_init(global_state, rank, a_init)`` depends
-    only on the client's *rank*, so equal-rank clients share one computed
-    tree instead of re-running the eager truncate/pad per client."""
+    only on the task's *rank* (which a rank policy may have adapted away
+    from the client's static profile), so equal-rank tasks share one
+    computed tree instead of re-running the eager truncate/pad per client —
+    at 1024 clients this is the difference between 4 and 1024 host-side
+    tree builds."""
     cache: Dict[int, Dict] = {}
 
     def get(task) -> Dict:
         if task.init_adapters is not None:
             return task.init_adapters
-        rank = ctx.client_ranks[task.client_id]
-        if rank not in cache:
-            cache[rank] = ctx._client_init(task.client_id)
-        return cache[rank]
+        if task.rank not in cache:
+            cache[task.rank] = ctx._client_init(task.client_id, task.rank)
+        return cache[task.rank]
 
     return get
 
@@ -106,13 +120,6 @@ def _batch_schedule(ctx, rnd: int, task) -> List[Dict[str, np.ndarray]]:
     return batches
 
 
-def _maybe_clip(ctx, adapters: Dict, init_adapters: Dict) -> Dict:
-    if ctx.dp_clip:
-        from repro.core.privacy import clip_client_adapters
-        return clip_client_adapters(adapters, init_adapters, ctx.dp_clip)
-    return adapters
-
-
 # ---------------------------------------------------------------------------
 # sequential (legacy-equivalent)
 # ---------------------------------------------------------------------------
@@ -126,26 +133,27 @@ class SequentialRunner(ClientRunner):
         step = ctx._train_step()
         task_init = _init_getter(ctx)
         for task in plan.tasks:
-            adapters = task_init(task)
-            init_adapters = adapters
+            init_adapters = task_init(task)
+            adapters = init_adapters
             opt_state = adamw_init(adapters)
             for batch in _batch_schedule(ctx, plan.round, task):
                 jb = {kk: jnp.asarray(v) for kk, v in batch.items()}
                 adapters, opt_state, _ = step(ctx.params, adapters,
                                               opt_state, jb)
-            deliver(task, _maybe_clip(ctx, adapters, init_adapters))
+            deliver(task, adapters, init_adapters)
 
 
 # ---------------------------------------------------------------------------
-# cohort (vmapped)
+# cohort (vmapped) + sharded cohort (vmapped, client axis over the mesh)
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
-def _cached_cohort_train(cfg, optim, loss_chunk: int, b_only: bool):
-    """Jitted cohort trainer: vmap over the client axis of a scan over the
-    local step axis.  jax.jit re-specializes per (cohort, rank, batch)
-    shape, so every equal-shaped cohort reuses one compiled program."""
+def _cohort_train_fn(cfg, optim, loss_chunk: int, b_only: bool):
+    """The un-jitted cohort trainer: vmap over the client axis of a scan
+    over the local step axis.  ``fn(params, stacked_adapters, batches)``
+    with batches ``{"tokens": (C, steps, B, T), "loss_mask": ...}`` returns
+    the trained stacked adapters (an aval fixed point — asserted by the
+    ``fed.cohort_step`` contract)."""
     step = make_train_step(cfg, optim, remat=False, loss_chunk=loss_chunk,
                            b_only=b_only)
 
@@ -160,58 +168,232 @@ def _cached_cohort_train(cfg, optim, loss_chunk: int, b_only: bool):
         (adapters, _), _ = jax.lax.scan(body, (adapters, opt_state), batches)
         return adapters
 
-    return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))
+    return jax.vmap(one_client, in_axes=(None, 0, 0))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_cohort_train(cfg, optim, loss_chunk: int, b_only: bool):
+    """Jitted cohort trainer.  jax.jit re-specializes per (cohort, rank,
+    batch) shape, so every equal-shaped cohort reuses one compiled
+    program."""
+    return jax.jit(_cohort_train_fn(cfg, optim, loss_chunk, b_only))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_sharded_cohort_train(cfg, optim, loss_chunk: int, b_only: bool,
+                                 mesh):
+    """Jitted cohort trainer with the client axis sharded over ``data``.
+
+    The fed specs are pytree *prefixes* (one spec per argument subtree,
+    trailing dims replicated — see :func:`repro.topology.fed_pspecs`), so
+    the wrapper is built once per (config, mesh) without concrete cohort
+    trees; GSPMD then partitions every client-stacked leaf the same way.
+    """
+    from jax.sharding import NamedSharding
+
+    from repro.topology import fed_pspecs
+
+    specs = fed_pspecs(mesh)
+    param_s = NamedSharding(mesh, specs["params"])
+    cohort_s = NamedSharding(mesh, specs["cohort"])
+    batch_s = NamedSharding(mesh, specs["batch"])
+    return jax.jit(_cohort_train_fn(cfg, optim, loss_chunk, b_only),
+                   in_shardings=(param_s, cohort_s, batch_s),
+                   out_shardings=cohort_s)
+
+
+def _group_cohorts(plan) -> Dict[Tuple[int, int], List]:
+    """Tasks bucketed by (rank, steps) — each bucket trains in one
+    compiled call (or a few fixed-size blocks of one)."""
+    cohorts: Dict[Tuple[int, int], List] = {}
+    for task in plan.tasks:
+        cohorts.setdefault((task.rank, task.steps), []).append(task)
+    return cohorts
+
+
+def _stack_cohort(ctx, rnd: int, tasks: List, task_init, pad_c: int):
+    """Host-side prep for one cohort block: replay the sequential batch
+    draws, zero-pad ragged batch sizes (padded rows carry ``loss_mask = 0``
+    and contribute nothing to loss, gradient, or metric denominators),
+    stack inits/batches along a new client axis, and pad the client axis to
+    ``pad_c`` with inert replicas (zero mask ⇒ zero gradients).
+
+    Returns ``(stacked_adapters, {"tokens", "loss_mask"}, inits)`` with
+    ``inits`` the unpadded per-task init trees (deliver needs them for the
+    DP stage)."""
+    steps = tasks[0].steps
+    scheds = [_batch_schedule(ctx, rnd, t) for t in tasks]
+    seq_len = scheds[0][0]["tokens"].shape[1]
+    bs = ctx.batch_size                  # fixed batch axis: stable shape
+    toks = np.zeros((pad_c, steps, bs, seq_len), np.int32)
+    mask = np.zeros((pad_c, steps, bs, seq_len), np.float32)
+    for ci, sched in enumerate(scheds):
+        for si, b in enumerate(sched):
+            toks[ci, si, : b["tokens"].shape[0]] = b["tokens"]
+            mask[ci, si, : b["tokens"].shape[0]] = b["loss_mask"]
+    inits = [task_init(t) for t in tasks]
+    padded = inits + [inits[0]] * (pad_c - len(tasks))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+    return stacked, {"tokens": toks, "loss_mask": mask}, inits
 
 
 @register_runner("cohort")
 class CohortRunner(ClientRunner):
     """Equal-rank cohorts train in one compiled vmapped call each.
 
-    Host-side prep replays the sequential batch draws, zero-pads ragged
-    batch sizes up to ``ctx.batch_size`` (padded rows carry
-    ``loss_mask = 0`` and contribute nothing to loss, gradient, or metric
-    denominators), stacks adapters/batches along a new client axis, and
-    dispatches one device call per (rank, steps) cohort instead of
-    K·steps calls.  The client axis is padded to the next power of two
-    with inert replicas (zero mask ⇒ zero gradients), so schedulers with
-    varying arrival counts (``async``/``partial``) hit at most
-    O(log K) compiled shapes instead of one per count.
+    Host-side prep (see :func:`_stack_cohort`) stages ONE cohort block at a
+    time: stack → train → one device→host transfer per block.  The client
+    axis is padded to the next power of two, so schedulers with varying
+    arrival counts (``async``/``partial``) hit at most O(log K) compiled
+    shapes instead of one per count.
+
+    Delivery order is a subclass policy (``stream``): the plain cohort
+    runner buffers trained results and delivers in *plan order*, keeping
+    the aggregator's stack column order identical to ``sequential`` (for
+    SVD-based methods a permuted stack yields the same ΔW but can rotate
+    near-degenerate singular vectors, which factor-level equivalence tests
+    would see); ``sharded_cohort`` streams cohort-grouped, delivering each
+    block as it finishes so host memory stays O(block) at 1000+ clients.
     """
+
+    #: deliver per finished block (True) or buffered in plan order (False)
+    stream = False
+
+    def __init__(self):
+        self.peak_live_clients = 0
+
+    def _pad(self, k_c: int, ctx) -> int:
+        return 1 << (k_c - 1).bit_length()       # next power of two
+
+    def _train_fn(self, ctx):
+        return _cached_cohort_train(ctx.cfg, ctx.optim, 64,
+                                    ctx.aggregator.trains_b_only)
+
+    def _params(self, ctx):
+        return ctx.params
+
+    def _blocks(self, tasks: List) -> Iterator[List]:
+        yield tasks
 
     def run(self, ctx, plan, deliver: Callable) -> None:
         task_init = _init_getter(ctx)
-        prepared = [(task, task_init(task),
-                     _batch_schedule(ctx, plan.round, task))
-                    for task in plan.tasks]
-        cohorts: Dict[Tuple[int, int], List[int]] = {}
-        for i, (task, _, _) in enumerate(prepared):
-            cohorts.setdefault((task.rank, task.steps), []).append(i)
-        train = _cached_cohort_train(ctx.cfg, ctx.optim, 64,
-                                     ctx.aggregator.trains_b_only)
-        results: List[Dict] = [None] * len(prepared)
-        for (_, steps), idxs in cohorts.items():
-            k_c = len(idxs)
-            pad_c = 1 << (k_c - 1).bit_length()      # next power of two
-            seq_len = prepared[idxs[0]][2][0]["tokens"].shape[1]
-            bs = ctx.batch_size              # fixed batch axis: stable shape
-            toks = np.zeros((pad_c, steps, bs, seq_len), np.int32)
-            mask = np.zeros((pad_c, steps, bs, seq_len), np.float32)
-            for ci, i in enumerate(idxs):
-                for si, b in enumerate(prepared[i][2]):
-                    toks[ci, si, : b["tokens"].shape[0]] = b["tokens"]
-                    mask[ci, si, : b["tokens"].shape[0]] = b["loss_mask"]
-            inits = [prepared[i][1] for i in idxs]
-            inits += [inits[0]] * (pad_c - k_c)      # inert pad replicas
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
-            out = train(ctx.params, stacked,
-                        {"tokens": jnp.asarray(toks),
-                         "loss_mask": jnp.asarray(mask)})
-            # ONE device→host transfer for the whole cohort; per-client
-            # unstacking is then free numpy views (eager per-leaf device
-            # slicing would cost a dispatch per (client, leaf))
-            host_out = jax.device_get(out)
-            for ci, i in enumerate(idxs):
-                adapters = jax.tree.map(lambda x: x[ci], host_out)
-                results[i] = _maybe_clip(ctx, adapters, prepared[i][1])
-        for (task, _, _), adapters in zip(prepared, results):
-            deliver(task, adapters)
+        train = self._train_fn(ctx)
+        params = self._params(ctx)
+        order = {id(t): i for i, t in enumerate(plan.tasks)}
+        buffered: Dict[int, Tuple] = {}
+        for _, tasks in _group_cohorts(plan).items():
+            for block in self._blocks(tasks):
+                pad_c = self._pad(len(block), ctx)
+                stacked, batch, inits = _stack_cohort(
+                    ctx, plan.round, block, task_init, pad_c)
+                self.peak_live_clients = max(self.peak_live_clients, pad_c)
+                out = train(params, stacked,
+                            {"tokens": jnp.asarray(batch["tokens"]),
+                             "loss_mask": jnp.asarray(batch["loss_mask"])})
+                # ONE device→host transfer for the whole block; per-client
+                # unstacking is then free numpy views (eager per-leaf
+                # device slicing would cost a dispatch per (client, leaf))
+                host_out = jax.device_get(out)
+                for ci, task in enumerate(block):
+                    adapters = jax.tree.map(lambda x: x[ci], host_out)
+                    if self.stream:
+                        deliver(task, adapters, inits[ci])
+                    else:
+                        buffered[order[id(task)]] = (task, adapters,
+                                                     inits[ci])
+        for i in sorted(buffered):
+            deliver(*buffered[i])
+
+
+@register_runner("sharded_cohort")
+class ShardedCohortRunner(CohortRunner):
+    """Cohort training with the client axis sharded over the fed mesh.
+
+    Each (rank, steps) cohort is cut into blocks of ≤ ``block`` clients,
+    the block's client axis is padded to a multiple of the ``data`` axis
+    (on top of the power-of-two rounding that bounds compiled-shape count),
+    and one sharded jitted call trains ``pad_c / N`` clients per device.
+    Blocks *stream*: each is delivered (cohort-grouped order) and dropped
+    before the next is staged, so a 1024-client round never holds more
+    than ``block`` trained trees on the host.  Base params are replicated
+    once per round via a cached ``device_put`` (flora merges swap
+    ``ctx.params`` between rounds, hence the id key).
+    """
+
+    stream = True
+
+    def __init__(self, mesh=None, block: int = 256):
+        super().__init__()
+        self._mesh = mesh
+        self.block = int(block)
+        self._params_cache: Dict[int, Any] = {}
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            from repro.topology import make_fed_mesh
+            self._mesh = make_fed_mesh()
+        return self._mesh
+
+    def _pad(self, k_c: int, ctx) -> int:
+        from repro.topology import axis_size
+        data = axis_size(self.mesh, "data")
+        pow2 = 1 << (k_c - 1).bit_length()
+        return -(-pow2 // data) * data
+
+    def _train_fn(self, ctx):
+        return _cached_sharded_cohort_train(ctx.cfg, ctx.optim, 64,
+                                            ctx.aggregator.trains_b_only,
+                                            self.mesh)
+
+    def _params(self, ctx):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        key = id(ctx.params)
+        if key not in self._params_cache:
+            self._params_cache.clear()   # params swapped (flora merge)
+            self._params_cache[key] = jax.device_put(
+                ctx.params, NamedSharding(self.mesh, P()))
+        return self._params_cache[key]
+
+    def _blocks(self, tasks: List) -> Iterator[List]:
+        for i in range(0, len(tasks), self.block):
+            yield tasks[i: i + self.block]
+
+
+# ---------------------------------------------------------------------------
+# contract: the sharded cohort step's aval fixed point + fed partitioning
+# ---------------------------------------------------------------------------
+
+from repro.analysis.registry import ContractCase, check_contract  # noqa: E402
+
+
+@check_contract("fed.cohort_step")
+def _contract_cohort_step(case):
+    """Stacked adapter avals are a fixed point of the cohort train step
+    (else the round loop retraces every cohort), and the client-stacked
+    trees partition under the fed rules at the case's mesh width."""
+    from repro.analysis import fixtures as FX
+    from repro.common.config import OptimConfig
+    from repro.topology import fed_client_pspecs
+    from jax.sharding import PartitionSpec as P
+
+    cfg = FX.tiny_config(case.family)
+    params = FX.abstract_params(cfg)
+    adapters = FX.abstract_adapters(cfg, params)
+    C, steps, bs, seq = 4, 2, 2, 16
+    stacked = jax.tree.map(
+        lambda l: FX.sds((C,) + tuple(l.shape), l.dtype), adapters)
+    batch = {"tokens": FX.sds((C, steps, bs, seq), jnp.int32),
+             "loss_mask": FX.sds((C, steps, bs, seq), jnp.float32)}
+    fn = _cohort_train_fn(cfg, OptimConfig(), 64, False)
+
+    def out_check(out, _case):
+        assert FX.avals_equal(out, stacked), "cohort adapter avals drift"
+
+    mesh = FX.abstract_fed_mesh(case.mesh)
+    specs = ({"params": params, "cohort": stacked, "batch": batch},
+             {"params": jax.tree.map(lambda l: P(*([None] * l.ndim)), params),
+              "cohort": fed_client_pspecs(mesh, stacked),
+              "batch": fed_client_pspecs(mesh, batch)})
+    return ContractCase(fn, (params, stacked, batch), out_check=out_check,
+                        pspec_tree=specs, mesh=mesh)

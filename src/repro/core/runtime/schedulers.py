@@ -20,6 +20,17 @@ Registered schedulers:
   in-flight clients dispatched with a *snapshot* of the global state;
   arrivals are aggregated with staleness-discounted weights
   ``n_k · (1 + s)^(-α)`` feeding the streaming ``add_client``.
+* ``sampled`` — population-scale participation: each round draws a
+  ``fraction`` of the *full* client population from a rng keyed on
+  ``(seed, rnd)`` only (same seed → identical participant sets, regardless
+  of what else consumed ``ctx.rng``), optionally composed with the
+  ``partial`` dropout/straggler semantics.
+
+This module also hosts the **rank policies** (:class:`RankPolicy`): an
+AFLoRA-style hook that adapts each task's LoRA rank to a declared per-client
+resource profile after the scheduler builds the plan — ``static`` keeps the
+config's heterogeneous ranks, ``resource`` scales them by budget tier with a
+warmup ramp, snapping to powers of two so cohorts stay batchable.
 """
 from __future__ import annotations
 
@@ -44,6 +55,10 @@ class ClientTask:
 class RoundPlan:
     round: int
     tasks: List[ClientTask]
+    #: server→client model dispatches this round (``None``: one per task).
+    #: ``async`` sets it to the number of *new* dispatches — clients already
+    #: in flight received their snapshot in an earlier round's downlink.
+    downloads: Optional[int] = None
 
 
 class RoundScheduler:
@@ -174,8 +189,10 @@ class AsyncScheduler(RoundScheduler):
 
     def plan(self, rnd: int, ctx) -> RoundPlan:
         cap = self.buffer_size or ctx.fed.clients_per_round
+        dispatched = 0
         while len(self._in_flight) < cap:
             self._dispatch(rnd, ctx)
+            dispatched += 1
         due = [f for f in self._in_flight if f["completes"] <= rnd]
         if not due:
             soonest = min(f["completes"] for f in self._in_flight)
@@ -196,4 +213,140 @@ class AsyncScheduler(RoundScheduler):
         total = sum(raw)
         for t, w in zip(tasks, raw):
             t.weight = w / total
+        # downlink happened at dispatch time (the snapshot), not arrival
+        return RoundPlan(rnd, tasks, downloads=dispatched)
+
+
+@register_scheduler("sampled")
+class SampledScheduler(RoundScheduler):
+    """Per-round participation fraction over the full population.
+
+    Draws ``max(min_clients, fraction · num_clients)`` participants from a
+    rng keyed on ``(seed, rnd)`` *only* — unlike ``sync``, whose draw
+    consumes the trainer's shared ``ctx.rng`` stream, the participant set
+    is a pure function of (federated seed, round): two runs with the same
+    seed pick identical sets even if other components consumed randomness
+    in between.  ``drop_rate``/``straggler_rate`` compose the ``partial``
+    semantics on top of the sample (a sampled client may still drop out or
+    finish a cut step budget); weights renormalize over survivors.
+    """
+
+    def __init__(self, fraction: float = 0.1, min_clients: int = 1,
+                 drop_rate: float = 0.0, straggler_rate: float = 0.0,
+                 min_steps: int = 1):
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        self.fraction = fraction
+        self.min_clients = min_clients
+        self.drop_rate = drop_rate
+        self.straggler_rate = straggler_rate
+        self.min_steps = min_steps
+
+    def plan(self, rnd: int, ctx) -> RoundPlan:
+        fed = ctx.fed
+        srng = np.random.default_rng([fed.seed, 7919, rnd])
+        k = min(fed.num_clients,
+                max(self.min_clients,
+                    int(round(self.fraction * fed.num_clients))))
+        sampled = sorted(int(c) for c in
+                         srng.choice(fed.num_clients, k, replace=False))
+        survivors: List[Tuple[int, int]] = []
+        for c in sampled:
+            if self.drop_rate and srng.random() < self.drop_rate:
+                continue
+            steps = ctx.local_steps
+            if self.straggler_rate and srng.random() < self.straggler_rate:
+                steps = max(self.min_steps,
+                            int(round(ctx.local_steps
+                                      * srng.uniform(0.25, 1.0))))
+            survivors.append((c, steps))
+        if not survivors:            # never an empty round
+            survivors = [(sampled[0], ctx.local_steps)]
+        n_total = sum(ctx.clients[c].num_samples for c, _ in survivors)
+        tasks = [ClientTask(c, ctx.client_ranks[c], steps,
+                            ctx.clients[c].num_samples / n_total)
+                 for c, steps in survivors]
         return RoundPlan(rnd, tasks)
+
+
+# ---------------------------------------------------------------------------
+# rank policies (AFLoRA-style resource-aware rank assignment)
+# ---------------------------------------------------------------------------
+
+
+class RankPolicy:
+    """Post-plan hook adapting each task's LoRA rank to client resources.
+
+    ``assign(rnd, plan, ctx)`` mutates ``task.rank`` in place (never above
+    the client's configured rank — the shared A init only has that many
+    rows).  Runs after the scheduler builds the plan and before the runner
+    trains it, so policies see exactly the participating tasks.
+    """
+
+    name: str = "?"
+
+    def assign(self, rnd: int, plan: RoundPlan, ctx) -> None:
+        raise NotImplementedError
+
+
+_RANK_POLICIES: Dict[str, Type[RankPolicy]] = {}
+
+
+def register_rank_policy(name: str):
+    def deco(cls: Type[RankPolicy]) -> Type[RankPolicy]:
+        _RANK_POLICIES[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def make_rank_policy(spec: Any, **cfg) -> RankPolicy:
+    if isinstance(spec, RankPolicy):
+        return spec
+    try:
+        return _RANK_POLICIES[spec](**cfg)
+    except KeyError:
+        raise ValueError(f"unknown rank policy {spec!r} "
+                         f"(registered: {sorted(_RANK_POLICIES)})") from None
+
+
+def available_rank_policies() -> List[str]:
+    return sorted(_RANK_POLICIES)
+
+
+@register_rank_policy("static")
+class StaticRankPolicy(RankPolicy):
+    """Keep the scheduler-assigned (config-profile) ranks untouched."""
+
+    def assign(self, rnd: int, plan: RoundPlan, ctx) -> None:
+        return
+
+
+@register_rank_policy("resource")
+class ResourceRankPolicy(RankPolicy):
+    """AFLoRA-style resource-aware ranks (arXiv:2505.24773).
+
+    Each client declares a compute budget in (0, 1] — by default a cyclic
+    tier profile ``budgets[client_id % len(budgets)]``, or an explicit
+    ``profile`` list.  A task's rank is its configured cap scaled by the
+    budget and a linear ``warmup`` ramp (AFLoRA grows ranks as training
+    stabilizes), snapped DOWN to a power of two so equal-rank cohorts stay
+    batchable (at most O(log r) distinct compiled shapes per round).
+    """
+
+    def __init__(self, budgets: Tuple[float, ...] = (0.25, 0.5, 0.75, 1.0),
+                 warmup: int = 0, profile: Optional[List[float]] = None):
+        self.budgets = tuple(budgets)
+        self.warmup = int(warmup)
+        self.profile = profile
+
+    def assign(self, rnd: int, plan: RoundPlan, ctx) -> None:
+        ramp = min(1.0, (rnd + 1) / self.warmup) if self.warmup else 1.0
+        for task in plan.tasks:
+            cap = ctx.client_ranks[task.client_id]
+            if self.profile is not None:
+                budget = self.profile[task.client_id % len(self.profile)]
+            else:
+                budget = self.budgets[task.client_id % len(self.budgets)]
+            r = max(1, int(cap * budget * ramp))
+            task.rank = min(cap, 1 << (r.bit_length() - 1))   # pow2 floor

@@ -23,6 +23,16 @@ cross-checked per round.  Three pieces:
 ``scale`` never travels: it is an O(L) header re-derived locally, and the
 analytic model ignores it too, which keeps ``bytes == bytes_per_param ×
 params`` an exact identity for the cast codecs.
+
+**DP-on-the-wire**: with ``dp_clip``/``dp_sigma`` set, the uplink runs the
+local Gaussian mechanism as a codec *stage* — the client's update delta
+(trained − init) is clipped to L2 ≤ C and noised with std σ·C *before*
+encoding, so the bytes on the wire are already privatized and the byte
+accounting is unchanged (clip/noise don't alter shapes).  The noise key is
+derived deterministically from ``(dp_seed, round, client_id)``, so runs
+reproduce and no two uploads share a key.  This replaces the old
+server-side noising sidecar in ``federated.py`` — privacy composes with
+any codec, per-method byte accounting intact.
 """
 from __future__ import annotations
 
@@ -243,12 +253,43 @@ class Transport:
     serialized with the configured codec, its bytes are counted, and the
     *decoded* tree is what the receiving side actually uses."""
 
-    def __init__(self, codec: Any = "fp32"):
+    def __init__(self, codec: Any = "fp32", dp_clip: float = 0.0,
+                 dp_sigma: float = 0.0, dp_seed: int = 0):
         self.codec = codec if isinstance(codec, Codec) else make_codec(codec)
+        self.dp_clip = float(dp_clip)
+        self.dp_sigma = float(dp_sigma)
+        self.dp_seed = int(dp_seed)
 
-    def client_to_server(self, adapters: Dict, aggregator) -> Tuple[Dict, int]:
-        """Uplink one trained client tree.  Returns (decoded tree, bytes)."""
+    def _dp_stage(self, adapters: Dict, init_adapters: Optional[Dict],
+                  rnd: int, client_id: int) -> Dict:
+        """Local DP on one upload: clip the update delta to L2 ≤ C, noise
+        with std σ·C, re-anchor on the init.  Applied exactly once, before
+        encoding."""
+        if not (self.dp_clip or self.dp_sigma):
+            return adapters
+        from repro.core.privacy import (clip_update, local_gaussian_noise,
+                                        tree_add, tree_sub)
+        if init_adapters is None:
+            raise ValueError("DP transport needs the round's init adapters "
+                             "to form the update delta")
+        clip = self.dp_clip or 1.0
+        delta = tree_sub(adapters, init_adapters)
+        delta, _ = clip_update(delta, clip)
+        if self.dp_sigma:
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.dp_seed), rnd),
+                client_id)
+            delta = local_gaussian_noise(delta, self.dp_sigma, clip, key)
+        return tree_add(init_adapters, delta)
+
+    def client_to_server(self, adapters: Dict, aggregator, *,
+                         init_adapters: Optional[Dict] = None,
+                         rnd: int = 0, client_id: int = 0
+                         ) -> Tuple[Dict, int]:
+        """Uplink one trained client tree (through the DP stage when
+        configured).  Returns (decoded tree, bytes)."""
         wire = _wire_fn(aggregator)
+        adapters = self._dp_stage(adapters, init_adapters, rnd, client_id)
         payload = AdapterPayload.pack(adapters, self.codec, wire)
         return payload.unpack_into(adapters, self.codec), payload.num_bytes
 
@@ -279,9 +320,11 @@ class Transport:
         return decoded, payload.num_bytes * num_receivers
 
 
-def make_transport(spec: Any) -> Transport:
+def make_transport(spec: Any, **dp) -> Transport:
     """Coerce a transport spec (instance | codec name | Codec) into a
-    :class:`Transport`."""
+    :class:`Transport`.  ``dp`` kwargs (``dp_clip``/``dp_sigma``/
+    ``dp_seed``) configure the uplink's DP stage; an already-built
+    instance is returned as-is (its own DP config wins)."""
     if isinstance(spec, Transport):
         return spec
-    return Transport(spec or "fp32")
+    return Transport(spec or "fp32", **dp)

@@ -243,6 +243,48 @@ def florist_core_batched(B_stacks: jnp.ndarray, A_stacks: jnp.ndarray, tau,
     return _batched_core_fn(tau, svd_method, int(max_rank))(B_stacks, A_stacks)
 
 
+def florist_core_delta_padded(M: jnp.ndarray, tau, svd_method: str = "svd",
+                              max_rank: int = 0):
+    """Jit-safe FLoRIST core on an *accumulated* update ΔW = Σ_k w_k B_k A_k.
+
+    The stacked pipeline (:func:`florist_core_padded`) computes the SVD of
+    ``B_stack A_stack`` — exactly the SVD of ΔW — without forming ΔW, which
+    is the compact route while the stack width Σ r_k stays below
+    ``min(m, n)``.  Past that point (hundreds of clients per round) the
+    dense ΔW itself is the *smaller* intermediate, so the streaming
+    aggregator contracts arriving blocks into a running ``M`` and this core
+    finishes the job: one thin SVD of ``M`` and the same energy threshold /
+    knee selection / rank cap as the stacked path (identical ΔW up to fp).
+
+    Returns (B_g (m, q), A_g (q, n), spectrum (q,), p int32) with
+    q = min(m, n) and columns ≥ p zeroed, mirroring the padded stacked core.
+    """
+    M = M.astype(jnp.float32)
+    u, s, vt = thin_svd(M, svd_method)
+    p = knee_rank_traced(s) if tau == "auto" else energy_rank_traced(s, tau)
+    if max_rank:
+        p = jnp.minimum(p, max_rank)
+    keep = (jnp.arange(s.shape[0]) < p)
+    B_g = u * jnp.where(keep, s, 0.0)[None, :]
+    A_g = vt * keep[:, None]
+    return B_g, A_g, s, p
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_delta_fn(tau, svd_method: str, max_rank: int):
+    fn = functools.partial(florist_core_delta_padded, tau=tau,
+                           svd_method=svd_method, max_rank=max_rank)
+    return jax.jit(jax.vmap(fn))
+
+
+def florist_core_delta_batched(Ms: jnp.ndarray, tau,
+                               svd_method: str = "svd", max_rank: int = 0):
+    """Batched delta core: ONE compiled call for a layer stack of
+    accumulated updates.  Ms: (L, m, n).  Returns (B_g (L, m, q),
+    A_g (L, q, n), spectra (L, q), ranks (L,) int32), q = min(m, n)."""
+    return _batched_delta_fn(tau, svd_method, int(max_rank))(Ms)
+
+
 def reconstruction_error(Bs, As, weights, B_g, A_g) -> float:
     """‖ΔW − B_g A_g‖_F computed without forming ΔW twice (small shapes in
     tests — forms it once)."""

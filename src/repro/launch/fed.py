@@ -2,12 +2,20 @@
 
   PYTHONPATH=src python -m repro.launch.fed --method florist --rounds 10 \
       [--heter] [--tau 0.9] [--clients 100] [--sample 10] \
-      [--runner cohort] [--scheduler async] [--codec bf16]
+      [--runner cohort] [--scheduler async] [--codec bf16] \
+      [--participation 0.1] [--rank-policy resource] \
+      [--dp-clip 1.0] [--dp-epsilon 8]
 
 ``--method`` accepts any registered aggregation strategy (including
 plugins registered via ``repro.core.aggregators.register_aggregator``);
 ``--runner`` / ``--scheduler`` / ``--codec`` select the round runtime
-seams (see :mod:`repro.core.runtime`).
+seams (see :mod:`repro.core.runtime`).  ``--participation`` switches to
+the population-scale ``sampled`` scheduler at that fraction (pair with
+``--runner sharded_cohort`` and ``--clients 1024`` for the scaled
+simulation); ``--rank-policy resource`` adapts per-task LoRA ranks to
+client budgets (AFLoRA-style); ``--dp-clip``/``--dp-sigma`` enable
+DP-on-the-wire (``--dp-epsilon`` calibrates σ from a per-round ε and
+overrides ``--dp-sigma``).
 """
 from __future__ import annotations
 
@@ -17,7 +25,9 @@ import json
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
-from repro.core.runtime import (available_codecs, available_runners,
+from repro.core.privacy import noise_multiplier_for_epsilon
+from repro.core.runtime import (SampledScheduler, available_codecs,
+                                available_rank_policies, available_runners,
                                 available_schedulers)
 
 
@@ -42,10 +52,29 @@ def main(argv=None):
     ap.add_argument("--scheduler", default="sync",
                     choices=available_schedulers())
     ap.add_argument("--codec", default="fp32", choices=available_codecs())
+    ap.add_argument("--participation", type=float, default=0.0,
+                    help="sampled-scheduler participation fraction "
+                         "(overrides --scheduler)")
+    ap.add_argument("--rank-policy", default="static",
+                    choices=available_rank_policies())
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="L2 clip C for each client's update delta")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="noise multiplier (std = sigma * C on the wire)")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="per-round epsilon; calibrates sigma "
+                         "(overrides --dp-sigma)")
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
+
+    scheduler = args.scheduler
+    if args.participation:
+        scheduler = SampledScheduler(fraction=args.participation)
+    dp_sigma = args.dp_sigma
+    if args.dp_epsilon:
+        dp_sigma = noise_multiplier_for_epsilon(args.dp_epsilon)
 
     cfg = ModelConfig(name="fed-cli", family="dense", num_layers=args.layers,
                       d_model=args.d_model, num_heads=4, num_kv_heads=2,
@@ -63,7 +92,9 @@ def main(argv=None):
     tr = FederatedTrainer(cfg, fed, LoRAConfig(rank=16, alpha=16.0),
                           OptimConfig(lr=3e-4),
                           local_steps=args.local_steps, svd_method=args.svd,
-                          runner=args.runner, scheduler=args.scheduler,
+                          dp_clip=args.dp_clip, dp_sigma=dp_sigma,
+                          runner=args.runner, scheduler=scheduler,
+                          rank_policy=args.rank_policy,
                           transport=args.codec)
     hist = tr.run(args.rounds, verbose=True)
     if args.out:

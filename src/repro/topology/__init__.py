@@ -10,14 +10,21 @@ the trainer (``launch/``) and the serving stack (``serve/``):
     ``CACHE_LEAF_RANKS`` table and ``to_shardings``;
   * :mod:`repro.topology.serve` — serving-side specs: ring KV caches with a
     head-sharded (not sequence-sharded) layout, per-slot engine state, and
-    the paged multi-tenant adapter pools.
+    the paged multi-tenant adapter pools;
+  * :mod:`repro.topology.fed` — federated-side specs: client-parallel
+    cohort layouts for the sharded cohort runner, plus ``make_fed_mesh``.
 
 ``launch/mesh.py`` and ``launch/sharding.py`` remain as thin re-export shims
 so existing imports keep working.
 """
+from repro.topology.fed import (
+    fed_client_pspecs,
+    fed_pspecs,
+)
 from repro.topology.mesh import (
     axis_size,
     data_axes,
+    make_fed_mesh,
     make_host_mesh,
     make_production_mesh,
     make_serve_mesh,
@@ -46,6 +53,9 @@ __all__ = [
     "batch_pspecs",
     "cache_pspecs",
     "data_axes",
+    "fed_client_pspecs",
+    "fed_pspecs",
+    "make_fed_mesh",
     "make_host_mesh",
     "make_production_mesh",
     "make_serve_mesh",

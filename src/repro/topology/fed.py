@@ -1,0 +1,80 @@
+"""Federated-side partition specs: client-parallel cohort layouts.
+
+The sharded cohort runner stacks equal-(rank, steps) clients along a
+leading client axis — adapters ``(C, L, r, d)``, optimizer state, and batch
+schedules ``(C, steps, B, T)`` — and vmaps one local-training step over it.
+On a fed mesh ``(data=N, model=1)`` that client axis shards over ``data``:
+each device trains ``C/N`` clients and the only collective is the implicit
+gather when the server pulls the cohort's results.  Base params replicate
+(every simulated client fine-tunes the same frozen base, and smoke-scale
+models don't need tensor parallelism — the ``model`` axis is kept at 1 so
+the same rule set extends to larger bases later).
+
+Consumed exactly like ``serve_pspecs``: build the bundle once per (config,
+mesh) and hand the specs to ``jit`` as pytree-prefix in/out shardings.
+Every rule degrades to replicated when the client axis does not divide the
+``data`` axis (the runner pads cohorts to a multiple of the axis size, so
+this only triggers for hand-built shapes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.topology.mesh import data_axes
+from repro.topology.partitioning import _fits, params_pspecs
+
+
+def _client_axis(mesh: Mesh):
+    dax = data_axes(mesh)
+    return dax if len(dax) > 1 else dax[0]
+
+
+def fed_client_pspecs(mesh: Mesh, tree: Optional[Any] = None) -> Any:
+    """Specs for a client-stacked pytree (leading axis = cohort clients).
+
+    With ``tree=None`` returns the single pytree-*prefix* spec ``P(data)``
+    — leading axis over ``data``, trailing dims replicated — which is what
+    the runner feeds ``jit``'s in/out shardings (no concrete cohort tree
+    needed at trace-cache time).  With a concrete/abstract ``tree``,
+    returns a matching tree of full specs, degrading to replicated where
+    the leading dim does not divide the axis.
+    """
+    ax = _client_axis(mesh)
+    if tree is None:
+        return P(ax)
+
+    def fix(leaf):
+        if leaf.ndim == 0 or not _fits(mesh, leaf.shape[0], ax):
+            return P(*([None] * leaf.ndim))
+        return P(*((ax,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(fix, tree)
+
+
+def fed_pspecs(mesh: Mesh, cfg: Optional[ModelConfig] = None,
+               params: Optional[Any] = None, cohort: Optional[Any] = None,
+               batch: Optional[Any] = None) -> Dict[str, Any]:
+    """The spec bundle for one sharded cohort step.
+
+    * ``params`` — the frozen base: replicated (prefix ``P()``) unless a
+      concrete tree + config is supplied, in which case the training
+      Megatron rules apply on the mesh's ``model`` axis (=1 on fed meshes,
+      so they reduce to replicated anyway);
+    * ``cohort`` — client-stacked adapters / optimizer state: client axis
+      over ``data``;
+    * ``batch`` — the per-client batch schedule ``(C, steps, B, T)``:
+      client axis over ``data``.
+    """
+    if cfg is not None and params is not None:
+        pspec = params_pspecs(mesh, cfg, params)
+    else:
+        pspec = P()
+    return {
+        "params": pspec,
+        "cohort": fed_client_pspecs(mesh, cohort),
+        "batch": fed_client_pspecs(mesh, batch),
+    }

@@ -43,6 +43,21 @@ def make_serve_mesh(model: int = 0, *, devices: Optional[Sequence] = None) -> Me
     return jax.make_mesh((1, n), ("data", "model"), devices=devs[:n])
 
 
+def make_fed_mesh(data: int = 0, *, devices: Optional[Sequence] = None) -> Mesh:
+    """Federated simulation mesh (data=N, model=1) over the first N devices.
+
+    The data axis carries the cohort's client dimension (see
+    :mod:`repro.topology.fed`); ``model`` is kept (size 1) so fed specs and
+    training specs share the same axis vocabulary.  ``data=0`` takes every
+    device.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    n = data or len(devs)
+    if n > len(devs):
+        raise ValueError(f"requested data={n} but only {len(devs)} devices")
+    return jax.make_mesh((n, 1), ("data", "model"), devices=devs[:n])
+
+
 def data_axes(mesh: Mesh):
     """Axes carrying the batch dimension."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,461 @@
+"""Population-scale federated runtime: sampled-participation determinism,
+sharded-cohort parity, streaming-aggregation memory bounds, DP-on-the-wire
+and participation-aware round accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.costs as C
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.aggregators import (METHODS, adapter_leaf_paths, fold_scale,
+                                    get_path, make_aggregator)
+from repro.core.aggregators.florist import FloristAggregator
+from repro.core.federated import FederatedTrainer
+from repro.core.privacy import (clip_update, global_l2, local_gaussian_noise,
+                                tree_add, tree_sub)
+from repro.core.runtime import (AsyncScheduler, ResourceRankPolicy,
+                                SampledScheduler, ShardedCohortRunner,
+                                Transport)
+from repro.data.synthetic import make_eval_data, make_federated_data
+
+CFG = ModelConfig(name="fs-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=256, dtype="float32")
+LORA = LoRAConfig(rank=8, alpha=8.0)
+OPT = OptimConfig(lr=3e-3)
+
+
+def make_trainer(method, heter=False, **kw):
+    fed = FedConfig(num_clients=12, clients_per_round=4, method=method,
+                    tau=0.9, homogeneous_rank=8, heterogeneous=heter,
+                    rank_distribution=((4, 4), (8, 4), (16, 4)),
+                    zero_padding=heter, seed=0)
+    kw.setdefault("local_steps", 2)
+    return FederatedTrainer(CFG, fed, LORA, OPT, batch_size=8, seq_len=32,
+                            **kw)
+
+
+def adapter_products(tree):
+    """Per-leaf ΔW = scale·B@A — the permutation/rotation-invariant object
+    (cohort delivery order can rotate near-degenerate SVD factors while
+    leaving the product unchanged)."""
+    out = {}
+    for path in adapter_leaf_paths(tree):
+        B, A = fold_scale(get_path(tree, path))
+        B, A = np.asarray(B, np.float64), np.asarray(A, np.float64)
+        out[path] = B @ A if B.ndim == 3 else B @ A
+    return out
+
+
+def assert_same_products(t1, t2, atol):
+    p1, p2 = adapter_products(t1), adapter_products(t2)
+    assert p1.keys() == p2.keys()
+    for path in p1:
+        np.testing.assert_allclose(p1[path], p2[path], atol=atol,
+                                   err_msg=str(path))
+
+
+def rand_client_tree(rng, L=2, m=32, n=24, r=4):
+    return {"blk": {"A": rng.normal(size=(L, r, n)).astype(np.float32),
+                    "B": rng.normal(size=(L, m, r)).astype(np.float32),
+                    "scale": np.ones((L,), np.float32)}}
+
+
+# ---------------------------------------------------------------------------
+# sampled scheduler: seed-deterministic participation
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_participants_pure_function_of_seed_and_round():
+    """The participant set must not depend on what else consumed the
+    trainer's shared rng stream — only on (seed, round)."""
+    t1 = make_trainer("florist", scheduler=SampledScheduler(fraction=0.5))
+    t2 = make_trainer("florist", scheduler=SampledScheduler(fraction=0.5))
+    t2.rng.integers(1000, size=7)        # perturb the shared stream
+    for rnd in range(5):
+        p1 = t1.scheduler.plan(rnd, t1)
+        p2 = t2.scheduler.plan(rnd, t2)
+        assert [t.client_id for t in p1.tasks] == \
+            [t.client_id for t in p2.tasks]
+        assert [t.steps for t in p1.tasks] == [t.steps for t in p2.tasks]
+        assert sum(t.weight for t in p1.tasks) == pytest.approx(1.0)
+    # ... and the sets actually vary across rounds
+    sets = {tuple(t.client_id for t in t1.scheduler.plan(r, t1).tasks)
+            for r in range(6)}
+    assert len(sets) > 1
+
+
+def test_sampled_fraction_and_floor():
+    tr = make_trainer("florist")
+    plan = SampledScheduler(fraction=0.5).plan(0, tr)
+    assert len(plan.tasks) == 6           # 0.5 · 12
+    plan = SampledScheduler(fraction=1e-6, min_clients=2).plan(0, tr)
+    assert len(plan.tasks) == 2           # min_clients floor
+    with pytest.raises(ValueError):
+        SampledScheduler(fraction=0.0)
+
+
+def test_sampled_composes_partial_semantics():
+    tr = make_trainer("florist", local_steps=8)
+    sched = SampledScheduler(fraction=1.0, drop_rate=0.3, straggler_rate=0.3)
+    plans = [sched.plan(r, tr) for r in range(8)]
+    sizes = [len(p.tasks) for p in plans]
+    steps = [t.steps for p in plans for t in p.tasks]
+    assert any(s < tr.fed.num_clients for s in sizes)   # dropouts hit
+    assert all(s >= 1 for s in sizes)                   # never empty
+    assert any(st < 8 for st in steps)                  # stragglers hit
+    assert all(st >= 1 for st in steps)
+    for p in plans:
+        assert sum(t.weight for t in p.tasks) == pytest.approx(1.0)
+
+
+def test_sampled_end_to_end_deterministic():
+    h1 = make_trainer("florist",
+                      scheduler=SampledScheduler(fraction=0.5)).run(2)
+    h2 = make_trainer("florist",
+                      scheduler=SampledScheduler(fraction=0.5)).run(2)
+    for a, b in zip(h1, h2):
+        assert a.eval_loss == b.eval_loss
+        assert a.upload_bytes == b.upload_bytes
+
+
+# ---------------------------------------------------------------------------
+# sharded cohort parity (acceptance: all five methods, hom + heter)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("heter", [False, True])
+@pytest.mark.parametrize("method", METHODS)
+def test_sharded_cohort_matches_sequential(method, heter):
+    """sharded_cohort ≡ cohort ≡ sequential at the level that is invariant
+    to delivery order: eval loss, analytic counts, and the aggregated
+    product ΔW = B@A per leaf (streamed blocks permute the stack columns,
+    which can rotate near-degenerate SVD *factors* without changing ΔW)."""
+    rounds = 2 if method == "florist" else 1
+    seq = make_trainer(method, heter=heter)
+    sh = make_trainer(method, heter=heter,
+                      runner=ShardedCohortRunner(block=8))
+    for rnd in range(rounds):
+        rs, rh = seq.run_round(rnd), sh.run_round(rnd)
+        assert rh.eval_loss == pytest.approx(rs.eval_loss, abs=2e-4)
+        assert rh.upload_params == rs.upload_params
+        assert rh.download_params == rs.download_params
+        assert rh.global_rank_total == rs.global_rank_total
+    assert_same_products(seq.global_state.global_adapters,
+                         sh.global_state.global_adapters, atol=2e-3)
+
+
+def test_sharded_cohort_matches_cohort():
+    seq = make_trainer("florist", heter=True, runner="cohort")
+    sh = make_trainer("florist", heter=True, runner="sharded_cohort")
+    for rnd in range(2):
+        rs, rh = seq.run_round(rnd), sh.run_round(rnd)
+        assert rh.eval_loss == pytest.approx(rs.eval_loss, abs=2e-4)
+    assert_same_products(seq.global_state.global_adapters,
+                         sh.global_state.global_adapters, atol=2e-3)
+
+
+def test_sharded_cohort_streams_blocks():
+    """Block size caps the number of clients alive on host/device at once."""
+    runner = ShardedCohortRunner(block=2)
+    tr = make_trainer("florist", runner=runner)
+    tr.run_round(0)
+    assert 0 < runner.peak_live_clients <= max(
+        2, runner._pad(2, tr))            # one block, mesh-padded
+
+
+# ---------------------------------------------------------------------------
+# streaming aggregation: O(cohort) server memory
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_florist_bounds_pending_blocks_and_matches_stacked():
+    rng = np.random.default_rng(0)
+    trees = [rand_client_tree(rng) for _ in range(24)]
+    ref = FloristAggregator(tau=0.9, stream="stacked")
+    agg = FloristAggregator(tau=0.9, stream="delta", flush_every=4)
+    for a in (ref, agg):
+        a.begin_round()
+    w = 1.0 / len(trees)
+    for t in trees:
+        ref.add_client(t, w, rank=4)
+        agg.add_client(t, w, rank=4)
+    assert agg.peak_pending_blocks <= 4           # never K=24 trees live
+    assert ref.peak_pending_blocks == len(trees)  # the O(K) baseline
+    r_ref, r_agg = ref.finalize(), agg.finalize()
+    assert_same_products(r_ref.global_adapters, r_agg.global_adapters,
+                         atol=1e-4)
+
+
+def test_streaming_auto_converts_past_crossover():
+    """auto keeps the stacked factors while Σ r_k ≤ min(m, n) (bit-exact
+    legacy path) and contracts into the dense delta once past it."""
+    rng = np.random.default_rng(1)
+    agg = FloristAggregator(tau=0.9, stream="auto", flush_every=4)
+    agg.begin_round()
+    # m=32, n=24 → crossover at Σr > 24; 24 rank-4 clients cross at k=7
+    for k in range(24):
+        agg.add_client(rand_client_tree(rng), 1 / 24, rank=4)
+    assert agg.peak_pending_blocks <= 4
+    inter = agg._settle()
+    assert all(kind == "delta" for kind, *_ in inter.values())
+
+
+def test_trainer_streaming_memory_bound():
+    """End-to-end: a sampled 6-client round with flush_every=2 never holds
+    more than 2 un-compacted uploads server-side."""
+    agg = FloristAggregator(tau=0.9, svd_method="svd", stream="delta",
+                            flush_every=2)
+    tr = make_trainer("florist", aggregator=agg,
+                      scheduler=SampledScheduler(fraction=0.5),
+                      runner="sharded_cohort")
+    hist = tr.run(2)
+    assert all(np.isfinite(h.eval_loss) for h in hist)
+    assert agg.peak_pending_blocks <= 2
+
+
+# ---------------------------------------------------------------------------
+# DP-on-the-wire: clip + noise exactly once, before encoding
+# ---------------------------------------------------------------------------
+
+
+def _init_and_trained(rng, seed_delta=0.1):
+    init = rand_client_tree(rng)
+    trained = jax.tree.map(
+        lambda x: x + seed_delta * rng.normal(size=x.shape).astype(x.dtype)
+        if x.ndim >= 2 else x, init)
+    return init, trained
+
+
+def test_dp_transport_matches_manual_mechanism():
+    """The uplink is exactly clip(Δ) → noise(σ·C) → re-anchor → encode,
+    keyed on (dp_seed, round, client): bitwise vs a manual replication."""
+    rng = np.random.default_rng(2)
+    init, trained = _init_and_trained(rng)
+    agg = make_aggregator("fedit")
+    tp = Transport("fp32", dp_clip=0.5, dp_sigma=0.3, dp_seed=7)
+    out, nbytes = tp.client_to_server(trained, agg, init_adapters=init,
+                                      rnd=3, client_id=5)
+
+    delta, _ = clip_update(tree_sub(trained, init), 0.5)
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(7), 3), 5)
+    expected = tree_add(init, local_gaussian_noise(delta, 0.3, 0.5, key))
+
+    for path in adapter_leaf_paths(expected):
+        exp, got = get_path(expected, path), get_path(out, path)
+        for name in ("A", "B"):
+            np.testing.assert_array_equal(np.asarray(exp[name]),
+                                          np.asarray(got[name]),
+                                          err_msg=f"{path}/{name}")
+    # privatization never changes the byte accounting
+    plain, pbytes = Transport("fp32").client_to_server(trained, agg)
+    assert nbytes == pbytes
+
+
+def test_dp_clip_only_bounds_update_norm():
+    rng = np.random.default_rng(3)
+    init, trained = _init_and_trained(rng, seed_delta=2.0)
+    tp = Transport("fp32", dp_clip=0.25, dp_sigma=0.0)
+    out, _ = tp.client_to_server(trained, make_aggregator("fedit"),
+                                 init_adapters=init)
+    # scale never travels — compare the wire arrays only
+    d = global_l2(tree_sub(
+        {p: {k: get_path(out, p)[k] for k in ("A", "B")}
+         for p in adapter_leaf_paths(out)},
+        {p: {k: get_path(init, p)[k] for k in ("A", "B")}
+         for p in adapter_leaf_paths(init)}))
+    assert float(d) <= 0.25 * (1 + 1e-5)
+
+
+def test_dp_noise_keys_unique_per_round_and_client():
+    rng = np.random.default_rng(4)
+    init, trained = _init_and_trained(rng)
+    agg = make_aggregator("fedit")
+    tp = Transport("fp32", dp_clip=1.0, dp_sigma=0.5, dp_seed=0)
+
+    def upload(rnd, cid):
+        out, _ = tp.client_to_server(trained, agg, init_adapters=init,
+                                     rnd=rnd, client_id=cid)
+        return np.concatenate([np.asarray(get_path(out, p)[n]).ravel()
+                               for p in adapter_leaf_paths(out)
+                               for n in ("A", "B")])
+
+    base = upload(0, 0)
+    np.testing.assert_array_equal(base, upload(0, 0))    # deterministic
+    assert not np.array_equal(base, upload(0, 1))        # per-client key
+    assert not np.array_equal(base, upload(1, 0))        # per-round key
+
+
+def test_dp_requires_init_adapters():
+    tp = Transport("fp32", dp_clip=1.0)
+    with pytest.raises(ValueError, match="init adapters"):
+        tp.client_to_server(rand_client_tree(np.random.default_rng(5)),
+                            make_aggregator("fedit"))
+
+
+def test_dp_applied_exactly_once_per_upload(monkeypatch):
+    """One clip and one noise call per delivered client — no server-side
+    second application (the old sidecar is gone)."""
+    import repro.core.privacy as priv
+    clips, noises = [], []
+    orig_clip, orig_noise = priv.clip_update, priv.local_gaussian_noise
+    monkeypatch.setattr(priv, "clip_update",
+                        lambda *a: clips.append(1) or orig_clip(*a))
+    monkeypatch.setattr(priv, "local_gaussian_noise",
+                        lambda *a: noises.append(1) or orig_noise(*a))
+    tr = make_trainer("florist", dp_clip=1.0, dp_sigma=0.1)
+    rec = tr.run_round(0)
+    assert len(clips) == tr.fed.clients_per_round
+    assert len(noises) == tr.fed.clients_per_round
+    assert np.isfinite(rec.eval_loss)
+    # byte identity survives the DP stage (fp32 wire)
+    assert rec.upload_bytes == 4 * rec.upload_params
+
+
+def test_dp_end_to_end_deterministic_and_trains():
+    kw = dict(dp_clip=1.0, dp_sigma=0.1,
+              scheduler=SampledScheduler(fraction=0.5),
+              runner="sharded_cohort")
+    h1 = make_trainer("florist", **kw).run(2)
+    h2 = make_trainer("florist", **kw).run(2)
+    for a, b in zip(h1, h2):
+        assert a.eval_loss == b.eval_loss
+        assert np.isfinite(a.eval_loss)
+
+
+# ---------------------------------------------------------------------------
+# round accounting under sampling / async (participants only)
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_round_accounting_matches_analytics():
+    """RoundRecord counts cover exactly the participating clients, and the
+    measured fp32 wire cross-checks the table-3 analytic model."""
+    sched = SampledScheduler(fraction=0.5, drop_rate=0.3)
+    tr = make_trainer("florist", scheduler=sched)
+    rec = tr.run_round(0)
+    # replay the (pure-function) plan to learn who participated
+    plan = SampledScheduler(fraction=0.5, drop_rate=0.3).plan(0, tr)
+    n_part = len(plan.tasks)
+    assert n_part < tr.fed.num_clients
+    trees = [tr._client_init(t.client_id, t.rank) for t in plan.tasks]
+    assert rec.upload_params == C.upload_params("florist", trees)
+    assert rec.upload_bytes == C.wire_upload_bytes("florist", trees,
+                                                   codec="fp32")
+    agg = tr.global_state
+    assert rec.download_params == C.download_params(
+        "florist", agg, tr.aggregator.dims, n_part,
+        [t.rank for t in plan.tasks])
+    assert rec.download_bytes == C.wire_download_bytes("florist", agg,
+                                                       n_part, codec="fp32")
+    assert rec.upload_bytes == 4 * rec.upload_params
+    assert rec.download_bytes == 4 * rec.download_params
+
+
+def test_async_download_accounting_counts_dispatches():
+    """Async downlink bytes follow model *dispatches* (snapshot handed out),
+    not arrivals — round 0 fills the whole in-flight pool while only the
+    soonest cohort delivers."""
+    sched = AsyncScheduler()
+    plans = []
+    orig_plan = sched.plan
+
+    def spy(rnd, ctx):
+        p = orig_plan(rnd, ctx)
+        plans.append(p)
+        return p
+
+    sched.plan = spy
+    tr = make_trainer("florist", scheduler=sched)
+    recs = [tr.run_round(r) for r in range(4)]
+    cap = tr.fed.clients_per_round
+    assert plans[0].downloads == cap          # initial pool fill
+    for p_prev, p in zip(plans, plans[1:]):
+        assert p.downloads == len(p_prev.tasks)   # refill = last arrivals
+    assert any(p.downloads != len(p.tasks) for p in plans)
+    for rec in recs:
+        # wire consistency under the dispatch-based count
+        assert rec.download_bytes == 4 * rec.download_params
+
+
+def test_partial_round_accounting_counts_survivors():
+    tr = make_trainer("florist", scheduler="partial")
+    recs = tr.run(4)
+    for rec in recs:
+        assert rec.upload_bytes == 4 * rec.upload_params
+        assert rec.download_bytes == 4 * rec.download_params
+
+
+# ---------------------------------------------------------------------------
+# resource-aware rank policy (AFLoRA-style)
+# ---------------------------------------------------------------------------
+
+
+def test_resource_rank_policy_caps_and_pow2():
+    tr = make_trainer("florist", heter=True)
+    policy = ResourceRankPolicy()
+    plan = tr.scheduler.plan(0, tr)
+    policy.assign(0, plan, tr)
+    for t in plan.tasks:
+        cap = tr.client_ranks[t.client_id]
+        budget = policy.budgets[t.client_id % len(policy.budgets)]
+        assert 1 <= t.rank <= cap
+        assert t.rank & (t.rank - 1) == 0            # power of two
+        r = max(1, int(cap * budget))
+        assert t.rank == min(cap, 1 << (r.bit_length() - 1))
+
+
+def test_resource_rank_policy_warmup_ramps():
+    tr = make_trainer("florist", heter=True)
+    policy = ResourceRankPolicy(budgets=(1.0,), warmup=4)
+    plan = tr.scheduler.plan(0, tr)
+    early = {t.client_id: None for t in plan.tasks}
+    for rnd, frac in ((0, 0.25), (3, 1.0)):
+        policy.assign(rnd, plan, tr)
+        for t in plan.tasks:
+            cap = tr.client_ranks[t.client_id]
+            r = max(1, int(cap * frac))
+            assert t.rank == min(cap, 1 << (r.bit_length() - 1))
+            if rnd == 0:
+                early[t.client_id] = t.rank
+            else:
+                assert t.rank >= early[t.client_id]  # monotone ramp
+
+
+def test_resource_rank_policy_end_to_end():
+    hist = make_trainer("florist", heter=True, rank_policy="resource",
+                        runner="sharded_cohort").run(2)
+    assert all(np.isfinite(h.eval_loss) for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# 1024-client smoke: the scaled round completes with bounded memory
+# ---------------------------------------------------------------------------
+
+
+def test_1024_clients_sampled_sharded_round():
+    cfg = ModelConfig(name="fs-nano", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                      d_ff=64, vocab_size=128, dtype="float32")
+    fed = FedConfig(num_clients=1024, clients_per_round=16, method="florist",
+                    tau=0.9, homogeneous_rank=4, seed=0)
+    clients = make_federated_data(num_clients=1024, mean_samples=6,
+                                  seq_len=16, vocab=128, seed=0)
+    runner = ShardedCohortRunner(block=16)
+    agg = FloristAggregator(tau=0.9, svd_method="svd", stream="auto",
+                            flush_every=16)
+    tr = FederatedTrainer(cfg, fed, LORA, OPT, clients=clients,
+                          eval_data=make_eval_data(num_samples=32,
+                                                   seq_len=16, vocab=128),
+                          batch_size=2, local_steps=1, seq_len=16,
+                          aggregator=agg, runner=runner,
+                          scheduler=SampledScheduler(fraction=16 / 1024))
+    rec = tr.run_round(0)
+    assert np.isfinite(rec.eval_loss)
+    # 16 participants out of 1024; memory stays O(cohort) on both sides
+    plan = SampledScheduler(fraction=16 / 1024).plan(0, tr)
+    assert len(plan.tasks) == 16
+    assert runner.peak_live_clients <= runner._pad(16, tr)
+    assert agg.peak_pending_blocks <= 16
+    assert rec.upload_bytes == 4 * rec.upload_params
