@@ -60,6 +60,14 @@ WATCHED = {
         ("peak_live_clients", "lower", 0.0),
         ("peak_pending_blocks", "lower", 0.0),
     ],
+    # fault-tolerance arm: the hardened/off round-time ratio is ~1.0 by
+    # construction, so the per-entry 5% tol IS the ISSUE's overhead bound
+    # (checksums + validation must stay within 5% of a round); quarantine
+    # recall is deterministic (seeded fault plan) and must not drop
+    "fed_faults": [
+        ("overhead_hardened_vs_off", "lower", 0.05),
+        ("poison_quarantine_recall", "higher", 0.0),
+    ],
     "kernels": [
         ("decode.speedup_streamed_vs_dense_fp32", "higher"),
         ("decode.speedup_streamed_vs_dense_int8", "higher"),
@@ -90,6 +98,7 @@ DEFAULT_BASELINE = {
     "serve": "BENCH_serve.json",
     "fed": "BENCH_fed.json",
     "fed_scale": "BENCH_fed_scale.json",
+    "fed_faults": "BENCH_fed_faults.json",
     "kernels": "BENCH_kernels.json",
     "agg": "agg_bench.json",
     "xla_flags": "BENCH_xla_flags.json",

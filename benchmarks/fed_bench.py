@@ -18,11 +18,19 @@ the sync and async schedulers, plus two extra axes:
   the mesh-sharded round (the ``sharded_vs_cohort`` ratio only shows real
   speedup when the virtual devices map to real cores).
 
+* ``--faults`` measures the **fault-tolerance arm**: the full hardened
+  path (per-block checksums + the screening validation gate) against the
+  same rounds with both disabled — the ``overhead_hardened_vs_off`` ratio
+  is what the ``fed_faults`` bench-gate suite holds to ≤5% — plus a
+  poison-containment probe (20% NaN/scale clients against the ``full``
+  gate) whose quarantine recall is watched too.
+
 Emits JSON for CI artifacts (the ``BENCH_fed.json`` /
-``BENCH_fed_scale.json`` trajectories)::
+``BENCH_fed_scale.json`` / ``BENCH_fed_faults.json`` trajectories)::
 
     PYTHONPATH=src python benchmarks/fed_bench.py --smoke --json BENCH_fed.json
     PYTHONPATH=src python benchmarks/fed_bench.py --scale --json BENCH_fed_scale.json
+    PYTHONPATH=src python benchmarks/fed_bench.py --faults --json BENCH_fed_faults.json
 """
 from __future__ import annotations
 
@@ -37,7 +45,9 @@ from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core.aggregators.florist import FloristAggregator
 from repro.core.federated import FederatedTrainer
 from repro.core.privacy import noise_multiplier_for_epsilon
-from repro.core.runtime import SampledScheduler, ShardedCohortRunner
+from repro.core.runtime import (FaultPlan, SampledScheduler,
+                                ShardedCohortRunner, Transport,
+                                ValidationGate)
 from repro.data.synthetic import make_eval_data, make_federated_data
 
 SMOKE_MODEL = ModelConfig(name="fedbench-tiny", family="dense", num_layers=2,
@@ -147,15 +157,105 @@ def scale_axis(iters: int) -> dict:
     }
 
 
+def faults_axis(iters: int) -> dict:
+    """Fault-tolerance overhead + containment on the smoke config.
+
+    *Overhead*: identical clean rounds through (a) the fully hardened path
+    — per-block CRC-32 checksums verified at unpack plus the streaming
+    ``screen`` validation gate — and (b) both disabled (the pre-PR-10
+    path).  Interleaved round-robin timing, median ratio; the ``fed_faults``
+    gate holds the ratio to ≤5% overhead.
+
+    *Containment*: 20% of clients poisoned (NaN/Inf or 100×-scaled deltas)
+    against the buffering ``full`` gate; recall = caught / injected over
+    the measured rounds.
+    """
+    cfg = SMOKE_MODEL
+    clients, sample, local_steps = 32, 16, 12
+    batch_size, seq_len = 2, 16
+    arms = {
+        "off": dict(validation="off",
+                    transport=Transport("fp32", checksums=False)),
+        "hardened": dict(validation="screen"),
+    }
+    trainers = {name: make_trainer(cfg, "cohort", "sync", clients=clients,
+                                   sample=sample, local_steps=local_steps,
+                                   batch_size=batch_size, seq_len=seq_len,
+                                   **kw)
+                for name, kw in arms.items()}
+    rounds = {name: 0 for name in arms}
+    # long warmup: FLoRIST's global rank drifts over the first rounds and
+    # each new rank recompiles the eval step — time only the steady state
+    for name in arms:
+        for _ in range(5):
+            trainers[name].run_round(rounds[name])
+            rounds[name] += 1
+    samples = {name: [] for name in arms}
+    order = list(arms)
+    for it in range(iters):
+        # alternate which arm goes first: the leading arm of a pair absorbs
+        # any deferred host work from the previous pair
+        for name in (order if it % 2 == 0 else order[::-1]):
+            t0 = time.perf_counter()
+            trainers[name].run_round(rounds[name])
+            rounds[name] += 1
+            samples[name].append((time.perf_counter() - t0) * 1e3)
+    ms = {name: float(statistics.median(s)) for name, s in samples.items()}
+    overhead = ms["hardened"] / ms["off"]
+    for name in arms:
+        print(f"faults {name:9s} {ms[name]:9.2f} ms/round")
+    print(f"hardened/off overhead: {overhead:.3f}x")
+
+    # containment probe: poisoned clients must be caught by the full gate
+    plan = FaultPlan(seed=7, nan=0.1, scale=0.1)
+    tr = make_trainer(cfg, "cohort", "sync", clients=clients, sample=sample,
+                      local_steps=2, batch_size=batch_size, seq_len=seq_len,
+                      faults=plan, validation=ValidationGate("full"))
+    plans = []
+    orig_plan = tr.scheduler.plan
+    tr.scheduler.plan = lambda rnd, ctx: plans.append(orig_plan(rnd, ctx)) \
+        or plans[-1]
+    probe_rounds = 3
+    hist = tr.run(probe_rounds)
+    injected = sum(1 for p in plans for t in p.tasks
+                   if plan.client_fault(p.round, t.client_id).kind
+                   in ("nan", "scale"))
+    caught = sum(r.rejected + r.quarantined for r in hist)
+    recall = (caught / injected) if injected else 1.0
+    print(f"poison containment: {caught}/{injected} caught "
+          f"(recall {recall:.2f})")
+    return {
+        "config": {"model": cfg.name, "num_clients": clients,
+                   "clients_per_round": sample, "local_steps": local_steps,
+                   "iters": iters, "backend": jax.default_backend()},
+        "results": [{"arm": name, "ms_per_round": round(v, 3)}
+                    for name, v in ms.items()],
+        "overhead_hardened_vs_off": round(overhead, 4),
+        "poison_injected": injected,
+        "poison_caught": caught,
+        "poison_quarantine_recall": round(recall, 4),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small config + few iters (CI)")
     ap.add_argument("--scale", action="store_true",
                     help="1024-client sampled + sharded_cohort arm only")
+    ap.add_argument("--faults", action="store_true",
+                    help="hardened-path overhead + poison containment arm")
     ap.add_argument("--json", default="", help="write results to this path")
     ap.add_argument("--iters", type=int, default=0)
     args = ap.parse_args()
+
+    if args.faults:
+        report = faults_axis(args.iters or 5)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.json}")
+        return
 
     if args.scale:
         report = scale_axis(args.iters or 3)

@@ -22,8 +22,16 @@ shard over 8 virtual devices).  ``--rank-policy resource`` adapts each
 task's LoRA rank to a cyclic client-budget profile; ``--dp-clip`` /
 ``--dp-sigma`` privatize every upload on the wire (``--dp-epsilon``
 calibrates σ from a per-round ε instead).
+
+Long runs survive crashes: ``--checkpoint /tmp/fed.ckpt`` saves the
+round-boundary state atomically every round, and re-running with
+``--resume`` continues bit-identically from the last save.
+``--validation {off,screen,full}`` / ``--min-clients`` configure the
+server's update gate (screen rejects NaN/Inf and shape violations;
+full additionally quarantines norm outliers).
 """
 import argparse
+import os
 import time
 
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
@@ -72,6 +80,15 @@ def main():
     ap.add_argument("--dp-sigma", type=float, default=0.0)
     ap.add_argument("--dp-epsilon", type=float, default=0.0,
                     help="per-round epsilon -> sigma (overrides --dp-sigma)")
+    ap.add_argument("--checkpoint", default="",
+                    help="round-boundary checkpoint path (atomic writes)")
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint (bit-identical replay)")
+    ap.add_argument("--validation", default="screen",
+                    choices=["off", "screen", "full"])
+    ap.add_argument("--min-clients", type=int, default=1,
+                    help="round quorum: accepted updates required to fold")
     args = ap.parse_args()
 
     scheduler = args.scheduler
@@ -98,7 +115,9 @@ def main():
                                dp_clip=args.dp_clip, dp_sigma=dp_sigma,
                                runner=args.runner, scheduler=scheduler,
                                rank_policy=args.rank_policy,
-                               transport=args.codec)
+                               transport=args.codec,
+                               validation=args.validation,
+                               min_clients=args.min_clients)
     per_round = max(1, round(args.participation * c)) if args.participation \
         else fed.clients_per_round
     total_steps = args.rounds * per_round * args.local_steps
@@ -107,8 +126,12 @@ def main():
           f"method={args.method}, runner={args.runner}, "
           f"scheduler={sched_name}, codec={args.codec}, "
           f"{args.rounds} rounds (~{total_steps} local steps total) ==")
+    start = 0
+    if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
+        start = trainer.restore_checkpoint(args.checkpoint)
+        print(f"== resumed from {args.checkpoint} at round {start} ==")
     t0 = time.time()
-    for rnd in range(args.rounds):
+    for rnd in range(start, args.rounds):
         rec = trainer.run_round(rnd)
         print(f"[{time.time()-t0:7.1f}s] round {rnd:3d} "
               f"loss={rec.eval_loss:.4f} acc={rec.eval_acc:.3f} "
@@ -116,6 +139,8 @@ def main():
               f"wire_up_MB={rec.upload_bytes / 2**20:.2f} "
               f"wire_down_MB={rec.download_bytes / 2**20:.2f} "
               f"({rec.wall_secs:.2f}s/round)")
+        if args.checkpoint and (rnd + 1) % args.checkpoint_every == 0:
+            trainer.save_checkpoint(args.checkpoint, rnd + 1)
     print("done.")
 
 

@@ -1,12 +1,29 @@
-"""Checkpointing: pytree <-> npz with path-string keys.
+"""Checkpointing: pytree <-> npz with path-string keys, plus pickled
+round-state blobs for the federated trainer.
 
 Restores into an existing tree structure (dtype/shape validated), so a
 checkpoint written on host can be restored under a mesh by sharding the
 loaded arrays with ``jax.device_put`` against the target shardings.
+
+All writes are **atomic**: bytes go to a temp file in the destination
+directory first and land via ``os.replace``, so a crash mid-write leaves
+either the previous checkpoint or none — never a torn file.  ``np.savez``
+silently appends ``.npz`` to extensionless paths; :func:`save` writes
+through an open file object instead, so ``save(p)`` / ``restore(p)``
+round-trip for any ``p`` (the legacy suffix-append lookup is kept on the
+read side for old checkpoints).
+
+:func:`save_state` / :func:`restore_state` persist an arbitrary picklable
+object (the federated round state: rng states, per-leaf accumulator dicts
+keyed by tuple paths, RoundRecord history) with the same atomicity;
+:func:`to_host` / :func:`to_device` convert the array leaves of nested
+containers so device trees pickle portably and come back as jnp arrays.
 """
 from __future__ import annotations
 
 import os
+import pickle
+import tempfile
 from typing import Any, Dict, Optional
 
 import jax
@@ -28,18 +45,46 @@ def _key_str(path) -> str:
     return _SEP.join(parts)
 
 
+def _npz_path(path: str) -> str:
+    """Where :func:`save` actually wrote ``path``: exact path if present,
+    else the legacy ``np.savez`` suffix-append location."""
+    if os.path.exists(path) or path.endswith(".npz"):
+        return path
+    return path + ".npz"
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via ``write_fn(file_object)`` to a temp file in ``path``'s
+    directory, fsync, then ``os.replace`` into place — a crash leaves the
+    previous file (or nothing), never a torn one."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp.")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
 def save(path: str, tree: Any, step: Optional[int] = None) -> None:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {_key_str(p): np.asarray(v) for p, v in flat}
     if step is not None:
         arrays["__step__"] = np.asarray(step)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **arrays)
+    # writing through the file object (not a path string) stops np.savez
+    # appending ".npz", so the atomic replace lands on the requested name
+    _atomic_write(path, lambda f: np.savez(f, **arrays))
 
 
 def restore(path: str, like: Any) -> Any:
     """Restore into the structure of `like` (shape/dtype checked)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    data = np.load(_npz_path(path))
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for p, ref in flat:
@@ -55,5 +100,51 @@ def restore(path: str, like: Any) -> Any:
 
 
 def restore_step(path: str) -> Optional[int]:
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    data = np.load(_npz_path(path))
     return int(data["__step__"]) if "__step__" in data else None
+
+
+# ---------------------------------------------------------------------------
+# pickled state blobs (federated round state)
+# ---------------------------------------------------------------------------
+
+
+def save_state(path: str, state: Any) -> None:
+    """Atomically pickle an arbitrary state object (pass array leaves
+    through :func:`to_host` first so the blob is device-independent)."""
+    _atomic_write(path, lambda f: pickle.dump(state, f,
+                                              protocol=pickle.HIGHEST_PROTOCOL))
+
+
+def restore_state(path: str) -> Any:
+    with open(path, "rb") as f:
+        return pickle.load(f)
+
+
+def to_host(obj: Any) -> Any:
+    """Recursively convert array leaves of nested dict/list/tuple/set
+    containers to host numpy (scalars, strings, None pass through) —
+    makes device trees picklable and portable."""
+    if isinstance(obj, dict):
+        return {k: to_host(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(to_host(v) for v in obj)
+    if isinstance(obj, (set, frozenset)):
+        return type(obj)(to_host(v) for v in obj)
+    if isinstance(obj, jax.Array):
+        return np.asarray(jax.device_get(obj))
+    return obj
+
+
+def to_device(obj: Any) -> Any:
+    """Inverse of :func:`to_host`: numpy array leaves come back as jnp
+    arrays (containers recursed, everything else untouched)."""
+    if isinstance(obj, dict):
+        return {k: to_device(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(to_device(v) for v in obj)
+    if isinstance(obj, (set, frozenset)):
+        return type(obj)(to_device(v) for v in obj)
+    if isinstance(obj, np.ndarray) and obj.dtype != object:
+        return jnp.asarray(obj)
+    return obj

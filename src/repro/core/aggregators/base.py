@@ -247,6 +247,41 @@ class Aggregator:
     def _finalize(self) -> AggResult:
         raise NotImplementedError
 
+    # -- checkpoint hooks ----------------------------------------------------
+    #: extra per-round attributes a subclass wants serialized alongside the
+    #: base accumulators (e.g. fedit/ffa's ``_seen_ranks``).
+    _STATE_FIELDS: Tuple[str, ...] = ()
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Serializable snapshot of the mid-round streaming accumulators
+        (running sums, pending FLoRIST stacks, the delta-mode ``M``) —
+        device arrays are pulled to host so the blob pickles portably."""
+        from repro.checkpoint.io import to_host
+        state = {
+            "dims": self.dims,
+            "num_clients": self.num_clients,
+            "client_ranks": list(self.client_ranks),
+            "round_upload_params": self.round_upload_params,
+            "_ref_scales": to_host(self._ref_scales),
+            "_state": to_host(self._state),
+        }
+        for field in self._STATE_FIELDS:
+            state[field] = to_host(getattr(self, field))
+        return state
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        """Restore a :meth:`state_dict` snapshot (arrays back to device);
+        folding may resume exactly where the saved round left off."""
+        from repro.checkpoint.io import to_device
+        self.dims = state["dims"]
+        self.num_clients = int(state["num_clients"])
+        self.client_ranks = list(state["client_ranks"])
+        self.round_upload_params = int(state["round_upload_params"])
+        self._ref_scales = to_device(state["_ref_scales"])
+        self._state = to_device(state["_state"])
+        for field in self._STATE_FIELDS:
+            setattr(self, field, to_device(state[field]))
+
     # -- one-shot convenience (the legacy call shape) ------------------------
     def aggregate(self, clients: Sequence[Dict], weights: Sequence[float],
                   client_ranks: Optional[Sequence[int]] = None) -> AggResult:

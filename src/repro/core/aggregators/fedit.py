@@ -29,6 +29,8 @@ class FedItAggregator(Aggregator):
     """Streaming FedAvg: one running weighted sum of (A, B) per leaf, grown
     to the max rank seen so far — O(1) memory in the client count."""
 
+    _STATE_FIELDS = ("_seen_ranks",)
+
     def __init__(self, zero_padding: bool = False):
         self.zero_padding = zero_padding
         super().__init__()

@@ -22,6 +22,7 @@ class FfaAggregator(Aggregator):
     # only one of the two matrices is broadcast -> rank counts half in the
     # paper's efficiency denominator
     download_rank_factor = 0.5
+    _STATE_FIELDS = ("_seen_ranks",)
 
     def __init__(self, A_init: Optional[Dict] = None,
                  zero_padding: bool = False):

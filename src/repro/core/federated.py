@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from typing import Any, Dict, List, Optional
 
@@ -46,12 +47,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core.aggregators import (AggResult, Aggregator, accepted_config,
                                     make_aggregator)
-from repro.core.runtime import (ClientRunner, RankPolicy, RoundScheduler,
-                                Transport, make_rank_policy, make_runner,
-                                make_scheduler, make_transport)
+from repro.core.runtime import (ClientRunner, DeadClientError, RankPolicy,
+                                RoundScheduler, ServerCrash, Transport,
+                                ValidationGate, make_rank_policy, make_runner,
+                                make_scheduler, make_transport,
+                                make_validator)
 from repro.data.synthetic import ClientDataset, make_eval_data, make_federated_data
 from repro.models import transformer as T
 from repro.peft.lora import init_lora, merge_lora
@@ -86,6 +90,14 @@ class RoundRecord:
     upload_bytes: int = 0        # measured serialized uplink (all clients)
     download_bytes: int = 0      # measured serialized downlink (all clients)
     wall_secs: float = 0.0       # wall-clock of the whole round
+    # -- fault-tolerance counters (PR 10) -----------------------------------
+    retries: int = 0             # uplink re-sends after verification failure
+    dead_clients: int = 0        # dropped uploads + retry-exhausted clients
+    rejected: int = 0            # gate rejections (non-finite/shape/dup)
+    quarantined: int = 0         # norm-outlier quarantines (full mode)
+    quorum_met: bool = True      # round reached min_clients accepted updates
+    resumes: int = 0             # 1 on the first round after --resume
+    sim_secs: float = 0.0        # simulated time (backoff + slow clients)
 
 
 class FederatedTrainer:
@@ -107,13 +119,22 @@ class FederatedTrainer:
                  runner: Any = "sequential",
                  scheduler: Any = "sync",
                  rank_policy: Any = "static",
-                 transport: Any = "fp32"):
+                 transport: Any = "fp32",
+                 faults: Any = None,
+                 validation: Any = "screen",
+                 min_clients: int = 1):
         self.cfg, self.fed, self.lora, self.optim = cfg, fed, lora, optim
         self.batch_size, self.local_steps = batch_size, local_steps
         self.svd_method = svd_method
         # client-level differential privacy, applied on the wire by the
         # transport's uplink DP stage (see core/runtime/transport)
         self.dp_clip, self.dp_sigma = dp_clip, dp_sigma
+        # deterministic fault injection (None: healthy world) and the
+        # validation gate screening every fold (see core/runtime/faults,
+        # core/runtime/validation)
+        self.faults = faults
+        self.gate: ValidationGate = make_validator(
+            validation, min_clients=min_clients)
         self.rng = np.random.default_rng(fed.seed)
         key = jax.random.PRNGKey(fed.seed)
         kp, ka = jax.random.split(key)
@@ -137,7 +158,8 @@ class FederatedTrainer:
         self.scheduler: RoundScheduler = make_scheduler(scheduler)
         self.rank_policy: RankPolicy = make_rank_policy(rank_policy)
         self.transport: Transport = make_transport(
-            transport, dp_clip=dp_clip, dp_sigma=dp_sigma, dp_seed=fed.seed)
+            transport, dp_clip=dp_clip, dp_sigma=dp_sigma, dp_seed=fed.seed,
+            fault_plan=faults)
         self.global_state: Optional[AggResult] = None
         self.clients = clients if clients is not None else make_federated_data(
             num_clients=fed.num_clients, seq_len=seq_len,
@@ -147,6 +169,7 @@ class FederatedTrainer:
         self.eval_batch = {k: jnp.asarray(v) for k, v in ev.items()}
         self._eval = _cached_eval_step(cfg, seq_len)
         self.history: List[RoundRecord] = []
+        self._pending_resumes = 0    # stamped into the first post-resume record
 
     # -- helpers -------------------------------------------------------------
     def _train_step(self):
@@ -165,28 +188,70 @@ class FederatedTrainer:
             self.client_ranks[k] if rank is None else rank,
             self.A_init_full)
 
+    def _maybe_crash(self, rnd: int, point: str) -> None:
+        if self.faults is not None and self.faults.should_crash(rnd, point):
+            raise ServerCrash(rnd, point)
+
     # -- main loop ------------------------------------------------------------
     def run_round(self, rnd: int) -> RoundRecord:
         t0 = time.perf_counter()
+        self._maybe_crash(rnd, "begin")
+        clock = self.transport.clock
+        sim0 = clock.now if clock is not None else 0.0
+        self.transport.reset_stats()
         plan = self.scheduler.plan(rnd, self)
         self.rank_policy.assign(rnd, plan, self)
         ranks = [t.rank for t in plan.tasks]
         self.aggregator.begin_round()
+        self.gate.begin_round(self.aggregator)
         upload_bytes = 0
+        delivered = 0
+        dropped = 0
+        mid_crash_at = max(1, len(plan.tasks) // 2)
 
         def deliver(task, adapters, init_adapters=None):
             # uplink through the measured wire (DP clip/noise happens there,
-            # against the round's init), then stream into the server
-            # accumulators; the trained adapters go out of scope here (no
-            # K-tree round buffer)
-            nonlocal upload_bytes
-            adapters, nbytes = self.transport.client_to_server(
-                adapters, self.aggregator, init_adapters=init_adapters,
-                rnd=rnd, client_id=task.client_id)
-            upload_bytes += nbytes
-            self.aggregator.add_client(adapters, task.weight, rank=task.rank)
+            # against the round's init), then through the validation gate
+            # into the server accumulators; the trained adapters go out of
+            # scope here (no K-tree round buffer)
+            nonlocal upload_bytes, delivered, dropped
+            delivered += 1
+            fault = (self.faults.client_fault(rnd, task.client_id)
+                     if self.faults is not None else None)
+            try:
+                if fault is not None:
+                    if fault.kind == "drop":
+                        dropped += 1
+                        return
+                    if fault.kind == "slow" and clock is not None:
+                        clock.advance(fault.delay)
+                    adapters = self.faults.poison(adapters, init_adapters,
+                                                  rnd, task.client_id)
+                adapters, nbytes = self.transport.client_to_server(
+                    adapters, self.aggregator, init_adapters=init_adapters,
+                    rnd=rnd, client_id=task.client_id)
+                upload_bytes += nbytes
+                self.gate.submit(task, adapters, task.weight, rank=task.rank,
+                                 init_adapters=init_adapters)
+                if fault is not None and fault.kind == "duplicate":
+                    # at-least-once wire: the same upload arrives twice —
+                    # the gate's dedup must fold it exactly once
+                    self.gate.submit(task, adapters, task.weight,
+                                     rank=task.rank,
+                                     init_adapters=init_adapters)
+            except DeadClientError:
+                pass        # counted in transport stats; treated as a drop
+            finally:
+                if delivered == mid_crash_at:
+                    self._maybe_crash(rnd, "mid_round")
 
         self.runner.run(self, plan, deliver)
+        self._maybe_crash(rnd, "pre_finalize")
+        gstats = self.gate.finish()
+        tstats = self.transport.reset_stats()
+        if not gstats.quorum_met or self.aggregator.num_clients == 0:
+            return self._degraded_round(rnd, t0, sim0, gstats, tstats,
+                                        upload_bytes, dropped)
         agg = self.aggregator.finalize()
         dims = self.aggregator.dims
         up = self.aggregator.round_upload_params
@@ -228,13 +293,128 @@ class FederatedTrainer:
             upload_bytes=upload_bytes,
             download_bytes=download_bytes,
             wall_secs=time.perf_counter() - t0,
+            retries=tstats.retries,
+            dead_clients=tstats.dead_clients + dropped,
+            rejected=gstats.rejected,
+            quarantined=gstats.quarantined,
+            quorum_met=True,
+            resumes=self._pending_resumes,
+            sim_secs=(clock.now - sim0) if clock is not None else 0.0,
         )
+        self._pending_resumes = 0
         self.history.append(rec)
+        self._maybe_crash(rnd, "post_round")
         return rec
 
-    def run(self, num_rounds: Optional[int] = None, verbose: bool = False
-            ) -> List[RoundRecord]:
-        for rnd in range(num_rounds or self.fed.num_rounds):
+    def _degraded_round(self, rnd: int, t0: float, sim0: float, gstats,
+                        tstats, upload_bytes: int,
+                        dropped: int = 0) -> RoundRecord:
+        """Quorum failure: too few accepted updates to trust a fold.  The
+        round degrades gracefully — the previous global state is kept (the
+        half-filled accumulator is never finalized), clients will resume
+        from the old broadcast, and the record carries the fault counters
+        so the failure is visible in the history."""
+        gs = self.global_state
+        if gs is not None and gs.global_adapters is not None \
+                and not gs.merge_into_base:
+            eval_params = merge_lora(self.params, gs.global_adapters)
+        else:
+            eval_params = self.params
+        m = self._eval(eval_params, None, self.eval_batch)
+        clock = self.transport.clock
+        rec = RoundRecord(
+            round=rnd,
+            eval_loss=float(m["loss"]),
+            eval_acc=float(m["accuracy"]),
+            upload_params=self.aggregator.round_upload_params,
+            download_params=0,
+            download_rank=0.0,
+            global_rank_total=(gs.total_download_rank()
+                               if gs is not None else 0),
+            upload_bytes=upload_bytes,
+            download_bytes=0,
+            wall_secs=time.perf_counter() - t0,
+            retries=tstats.retries,
+            dead_clients=tstats.dead_clients + dropped,
+            rejected=gstats.rejected,
+            quarantined=gstats.quarantined,
+            quorum_met=False,
+            resumes=self._pending_resumes,
+            sim_secs=(clock.now - sim0) if clock is not None else 0.0,
+        )
+        self._pending_resumes = 0
+        self.history.append(rec)
+        self._maybe_crash(rnd, "post_round")
+        return rec
+
+    # -- checkpoint / resume ---------------------------------------------------
+    def state_dict(self, next_round: int) -> Dict[str, Any]:
+        """Everything a fresh process needs to continue from ``next_round``
+        bit-identically: base params, global state, the shared rng's exact
+        bit-generator state, scheduler in-flight pools, the aggregator's
+        streaming accumulators, and the full RoundRecord history."""
+        gs = self.global_state
+        return {
+            "next_round": int(next_round),
+            "rng": self.rng.bit_generator.state,
+            "params": ckpt_io.to_host(self.params),
+            "global_state": None if gs is None else {
+                "method": gs.method,
+                "global_adapters": ckpt_io.to_host(gs.global_adapters),
+                "per_client": ckpt_io.to_host(gs.per_client),
+                "ranks": gs.ranks,
+                "spectra": ckpt_io.to_host(gs.spectra),
+                "merge_into_base": gs.merge_into_base,
+            },
+            "scheduler": self.scheduler.state_dict(),
+            "aggregator": self.aggregator.state_dict(),
+            "history": [dataclasses.asdict(r) for r in self.history],
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> int:
+        """Inverse of :meth:`state_dict`; returns the round to run next."""
+        self.rng.bit_generator.state = state["rng"]
+        self.params = ckpt_io.to_device(state["params"])
+        gs = state["global_state"]
+        self.global_state = None if gs is None else AggResult(
+            method=gs["method"],
+            global_adapters=ckpt_io.to_device(gs["global_adapters"]),
+            per_client=ckpt_io.to_device(gs["per_client"]),
+            ranks=gs["ranks"],
+            spectra=ckpt_io.to_device(gs["spectra"]),
+            merge_into_base=gs["merge_into_base"],
+        )
+        self.scheduler.load_state_dict(state["scheduler"])
+        self.aggregator.load_state_dict(state["aggregator"])
+        self.history = [RoundRecord(**r) for r in state["history"]]
+        return int(state["next_round"])
+
+    def save_checkpoint(self, path: str, next_round: int) -> None:
+        """Atomically persist the round-boundary state (temp file +
+        ``os.replace`` via :func:`repro.checkpoint.io.save_state`)."""
+        ckpt_io.save_state(path, self.state_dict(next_round))
+
+    def restore_checkpoint(self, path: str) -> int:
+        """Restore a :meth:`save_checkpoint` blob; returns the next round.
+        The first record produced afterwards carries ``resumes=1``."""
+        start = self.load_state_dict(ckpt_io.restore_state(path))
+        self._pending_resumes = 1
+        return start
+
+    def run(self, num_rounds: Optional[int] = None, verbose: bool = False,
+            checkpoint: str = "", checkpoint_every: int = 0,
+            resume: bool = False) -> List[RoundRecord]:
+        """Run rounds ``[start, num_rounds)``.  With ``checkpoint`` set,
+        the round-boundary state is saved atomically every
+        ``checkpoint_every`` rounds (default 1); with ``resume``, a run
+        killed at any point restarts from the last saved boundary and —
+        because every in-round decision is a pure function of restored
+        state — replays to a bit-identical history."""
+        start = 0
+        if resume and checkpoint and os.path.exists(checkpoint):
+            start = self.restore_checkpoint(checkpoint)
+        every = checkpoint_every or (1 if checkpoint else 0)
+        for rnd in range(start, num_rounds or self.fed.num_rounds):
             rec = self.run_round(rnd)
             if verbose:
                 print(f"[{self.aggregator.name:9s}] round {rnd:3d} "
@@ -243,4 +423,6 @@ class FederatedTrainer:
                       f"up={rec.upload_bytes / 2**20:.2f}MB "
                       f"down={rec.download_bytes / 2**20:.2f}MB "
                       f"{rec.wall_secs:.2f}s")
+            if checkpoint and every and (rnd + 1) % every == 0:
+                self.save_checkpoint(checkpoint, rnd + 1)
         return self.history

@@ -24,7 +24,16 @@ seam                  registry / built-ins
                       clip/noise composes as an uplink codec stage
 ``Aggregator``        :mod:`repro.core.aggregators` (PR 1/2)
 ====================  ====================================================
+
+The fault-tolerance layer (PR 10) wraps the seams: a deterministic
+:class:`FaultPlan` (:mod:`.faults`) injects client/transport/server
+failures on a :class:`SimClock`; the :class:`Transport` retries
+checksummed uplinks and declares dead clients; a :class:`ValidationGate`
+(:mod:`.validation`) screens every update before the irreversible
+``add_client`` fold and enforces a round quorum.
 """
+from repro.core.runtime.faults import (CRASH_POINTS, Fault, FaultPlan,
+                                       ServerCrash, SimClock)
 from repro.core.runtime.runners import (ClientRunner, CohortRunner,
                                         SequentialRunner,
                                         ShardedCohortRunner,
@@ -40,18 +49,25 @@ from repro.core.runtime.schedulers import (AsyncScheduler, ClientTask,
                                            make_rank_policy, make_scheduler,
                                            register_rank_policy,
                                            register_scheduler)
-from repro.core.runtime.transport import (AdapterPayload, Codec, Transport,
+from repro.core.runtime.transport import (AdapterPayload, Codec,
+                                          DeadClientError, EncodedArray,
+                                          PayloadCorrupted, PayloadError,
+                                          Transport, TransportStats,
                                           available_codecs, make_codec,
                                           make_transport, register_codec)
+from repro.core.runtime.validation import (GateStats, ValidationGate,
+                                           make_validator)
 
 __all__ = [
-    "AdapterPayload", "AsyncScheduler", "ClientRunner", "ClientTask",
-    "Codec", "CohortRunner", "PartialScheduler", "RankPolicy",
-    "ResourceRankPolicy", "RoundPlan", "RoundScheduler", "SampledScheduler",
-    "SequentialRunner", "ShardedCohortRunner", "StaticRankPolicy",
-    "SyncScheduler", "Transport", "available_codecs",
+    "AdapterPayload", "AsyncScheduler", "CRASH_POINTS", "ClientRunner",
+    "ClientTask", "Codec", "CohortRunner", "DeadClientError", "EncodedArray",
+    "Fault", "FaultPlan", "GateStats", "PartialScheduler", "PayloadCorrupted",
+    "PayloadError", "RankPolicy", "ResourceRankPolicy", "RoundPlan",
+    "RoundScheduler", "SampledScheduler", "SequentialRunner", "ServerCrash",
+    "ShardedCohortRunner", "SimClock", "StaticRankPolicy", "SyncScheduler",
+    "Transport", "TransportStats", "ValidationGate", "available_codecs",
     "available_rank_policies", "available_runners", "available_schedulers",
     "make_codec", "make_rank_policy", "make_runner", "make_scheduler",
-    "make_transport", "register_codec", "register_rank_policy",
-    "register_runner", "register_scheduler",
+    "make_transport", "make_validator", "register_codec",
+    "register_rank_policy", "register_runner", "register_scheduler",
 ]

@@ -69,6 +69,16 @@ class RoundScheduler:
     def plan(self, rnd: int, ctx) -> RoundPlan:
         raise NotImplementedError
 
+    # -- checkpoint hooks ---------------------------------------------------
+    # Most schedulers are pure functions of (seed, round) and carry no
+    # cross-round state; ``async`` overrides these to serialize its
+    # in-flight pool so a resumed run replays identically.
+    def state_dict(self) -> Dict:
+        return {}
+
+    def load_state_dict(self, state: Dict) -> None:
+        return
+
 
 _REGISTRY: Dict[str, Type[RoundScheduler]] = {}
 
@@ -215,6 +225,16 @@ class AsyncScheduler(RoundScheduler):
             t.weight = w / total
         # downlink happened at dispatch time (the snapshot), not arrival
         return RoundPlan(rnd, tasks, downloads=dispatched)
+
+    def state_dict(self) -> Dict:
+        from repro.checkpoint.io import to_host
+        return {"in_flight": [dict(f, init=to_host(f["init"]))
+                              for f in self._in_flight]}
+
+    def load_state_dict(self, state: Dict) -> None:
+        from repro.checkpoint.io import to_device
+        self._in_flight = [dict(f, init=to_device(f["init"]))
+                           for f in state.get("in_flight", [])]
 
 
 @register_scheduler("sampled")

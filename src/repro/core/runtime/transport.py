@@ -33,10 +33,24 @@ derived deterministically from ``(dp_seed, round, client_id)``, so runs
 reproduce and no two uploads share a key.  This replaces the old
 server-side noising sidecar in ``federated.py`` — privacy composes with
 any codec, per-method byte accounting intact.
+
+**Hardening** (PR 10): every :class:`EncodedArray` carries a CRC-32 of its
+payload bytes (out-of-band — checksums don't count against the measured
+wire bytes, keeping the ``bytes == bytes_per_param × params`` identity),
+verified at :meth:`AdapterPayload.unpack_into` along with shape/layer/rank
+contract checks against the receiving tree; structural violations raise
+:class:`PayloadError` (or :class:`PayloadCorrupted` for checksum
+mismatches) host-side instead of silently broadcasting a corrupted leaf.
+The uplink retries corrupted payloads with deterministic exponential
+backoff + jitter on the simulated clock and declares the client dead
+(:class:`DeadClientError`) after ``max_retries`` re-sends; the DP stage
+runs exactly once per upload, *before* the retry loop, so a re-encode
+never re-clips or re-noises.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Type
 
 import jax
@@ -56,6 +70,24 @@ except ImportError:  # pragma: no cover - jax always depends on ml_dtypes
 _RANK_AXIS = {"A": -2, "B": -1}
 
 
+class PayloadError(ValueError):
+    """A received payload violates the structural contract (shape, layer
+    count, rank bound, or undecodable bytes) for the tree it targets."""
+
+
+class PayloadCorrupted(PayloadError):
+    """A received block's bytes do not match its CRC-32 checksum."""
+
+
+class DeadClientError(RuntimeError):
+    """A client's upload failed verification on every retry attempt."""
+
+    def __init__(self, client_id: int, attempts: int, last: Exception):
+        self.client_id, self.attempts, self.last = client_id, attempts, last
+        super().__init__(f"client {client_id} declared dead after "
+                         f"{attempts} failed upload attempts: {last}")
+
+
 # ---------------------------------------------------------------------------
 # codecs
 # ---------------------------------------------------------------------------
@@ -63,15 +95,31 @@ _RANK_AXIS = {"A": -2, "B": -1}
 
 @dataclasses.dataclass
 class EncodedArray:
-    """One serialized tensor: raw payload + the header needed to decode."""
+    """One serialized tensor: raw payload + the header needed to decode.
+
+    ``crc`` is an optional CRC-32 of ``data``, attached at pack time and
+    verified at unpack.  It is integrity metadata, not wire payload: the
+    analytic cost model counts parameters, and checksums (like TCP/IP
+    framing) live below that accounting, so ``num_bytes`` excludes them —
+    the ``bytes == bytes_per_param × params`` identity is untouched.
+    """
     data: bytes
     shape: Tuple[int, ...]
     meta: Tuple[float, ...] = ()
+    crc: Optional[int] = None
 
     @property
     def num_bytes(self) -> int:
         # meta entries (e.g. a quantization scale) travel as fp32 headers
         return len(self.data) + 4 * len(self.meta)
+
+    def verify(self) -> None:
+        """Raise :class:`PayloadCorrupted` if the bytes don't match the
+        checksum (no-op for unchecksummed blocks)."""
+        if self.crc is not None and zlib.crc32(self.data) != self.crc:
+            raise PayloadCorrupted(
+                f"checksum mismatch on block shape={self.shape}: "
+                f"crc32={zlib.crc32(self.data):#010x} != {self.crc:#010x}")
 
 
 class Codec:
@@ -180,15 +228,17 @@ class AdapterPayload:
 
     @classmethod
     def pack(cls, tree: Dict, codec: Codec, wire_fn=default_wire_arrays,
-             ranks: Optional[Dict[Tuple, Sequence[int]]] = None
-             ) -> "AdapterPayload":
+             ranks: Optional[Dict[Tuple, Sequence[int]]] = None,
+             checksum: bool = True) -> "AdapterPayload":
         """Serialize ``tree``'s wire arrays.  With ``ranks`` (per-leaf,
         per-layer, as recorded in an :class:`AggResult`), layer ``l`` of a
         leaf ships only its first ``r_l`` rank rows/columns.
 
         All wire arrays leave the device in ONE ``jax.device_get`` (ragged
         per-layer slicing happens host-side on the fetched buffers), so
-        packing costs one sync per payload, not one per tensor."""
+        packing costs one sync per payload, not one per tensor.  With
+        ``checksum`` (default) every block carries a CRC-32 verified at
+        :meth:`unpack_into`."""
         items: List[Tuple[Tuple, str, Any]] = []
         for path in adapter_leaf_paths(tree):
             leaf = get_path(tree, path)
@@ -209,29 +259,58 @@ class AdapterPayload:
                     lay = layers[l]
                     cut = lay[:r_l, :] if axis == -2 else lay[:, :r_l]
                     encs.append(codec.encode(cut))
+            if checksum:
+                encs = [dataclasses.replace(e, crc=zlib.crc32(e.data))
+                        for e in encs]
             blocks.setdefault(path, {})[name] = encs
             total += sum(e.num_bytes for e in encs)
         return cls(codec.name, blocks, total)
 
-    def unpack_into(self, tree: Dict, codec: Codec) -> Dict:
+    def unpack_into(self, tree: Dict, codec: Codec,
+                    verify: bool = True) -> Dict:
         """Rebuild a tree shaped like ``tree`` with every wire array
         replaced by its decoded bytes (non-wire entries, e.g. ``scale`` or a
         frozen ``A``, pass through from ``tree`` — they were never sent).
         Decoded leaves are host (numpy) arrays; downstream jnp ops move
-        them to device on first use."""
+        them to device on first use.
+
+        With ``verify`` (default) every block's CRC-32 is checked before
+        decoding and the decoded shapes are validated against the contract
+        implied by ``tree``: a whole-array block must match the reference
+        shape exactly; ragged per-layer blocks must cover exactly the
+        reference layer count with per-layer ranks within the reference
+        rank dimension.  Violations raise :class:`PayloadCorrupted` /
+        :class:`PayloadError` host-side — a corrupted leaf is never
+        silently broadcast into the aggregator."""
         out: Dict = {}
         for path in adapter_leaf_paths(tree):
             leaf = dict(get_path(tree, path))
             for name, encs in self.blocks[path].items():
                 ref = leaf[name]
+                if verify:
+                    for enc in encs:
+                        enc.verify()
                 if len(encs) == 1 and encs[0].shape == tuple(ref.shape):
-                    leaf[name] = codec.decode(encs[0])
+                    leaf[name] = _checked_decode(codec, encs[0], path, name)
                 else:  # ragged per-layer blocks: zero-fill past each r_l
-                    layers = np.zeros(ref.shape if ref.ndim == 3
-                                      else (1,) + tuple(ref.shape), np.float32)
-                    axis = _RANK_AXIS[name]
+                    axis = _RANK_AXIS.get(name)
+                    if verify and axis is None:
+                        raise PayloadError(
+                            f"{'/'.join(map(str, path))}:{name}: ragged "
+                            f"blocks for a non-rank wire array")
+                    ref_shape = (tuple(ref.shape) if ref.ndim == 3
+                                 else (1,) + tuple(ref.shape))
+                    if verify and len(encs) != ref_shape[0]:
+                        raise PayloadError(
+                            f"{'/'.join(map(str, path))}:{name}: "
+                            f"{len(encs)} ragged layer blocks for "
+                            f"{ref_shape[0]} layers")
+                    layers = np.zeros(ref_shape, np.float32)
                     for l, enc in enumerate(encs):
-                        dec = codec.decode(enc)
+                        dec = _checked_decode(codec, enc, path, name)
+                        if verify:
+                            _check_ragged(dec, ref_shape[1:], axis, path,
+                                          name, l)
                         if axis == -2:
                             layers[l, :dec.shape[0], :] = dec
                         else:
@@ -243,22 +322,96 @@ class AdapterPayload:
         return out
 
 
+def _checked_decode(codec: Codec, enc: EncodedArray, path: Tuple,
+                    name: str) -> np.ndarray:
+    """Decode one block, converting low-level buffer/reshape failures
+    (truncated bytes, inconsistent header) into :class:`PayloadError`."""
+    try:
+        dec = codec.decode(enc)
+    except (ValueError, TypeError) as e:
+        raise PayloadError(f"{'/'.join(map(str, path))}:{name}: "
+                           f"undecodable block: {e}") from e
+    if tuple(dec.shape) != tuple(enc.shape):
+        raise PayloadError(f"{'/'.join(map(str, path))}:{name}: decoded "
+                           f"shape {dec.shape} != header {enc.shape}")
+    return dec
+
+
+def _check_ragged(dec: np.ndarray, layer_shape: Tuple[int, ...], axis: int,
+                  path: Tuple, name: str, layer: int) -> None:
+    """One ragged layer block must be the reference layer shape with the
+    rank axis shortened to r_l ≤ full rank."""
+    full = list(layer_shape)
+    rank_dim = full[axis]
+    got = list(dec.shape)
+    ok = (len(got) == len(full) and got[axis] <= rank_dim
+          and all(g == f for i, (g, f) in enumerate(zip(got, full))
+                  if i != len(full) + axis))
+    if not ok:
+        raise PayloadError(
+            f"{'/'.join(map(str, path))}:{name}[{layer}]: ragged block "
+            f"shape {tuple(dec.shape)} violates layer contract "
+            f"{tuple(layer_shape)} (rank axis {axis} ≤ {rank_dim})")
+
+
 # ---------------------------------------------------------------------------
 # the transport
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class TransportStats:
+    """Per-round uplink reliability counters (reset by the trainer)."""
+    attempts: int = 0
+    retries: int = 0
+    crc_failures: int = 0
+    dead_clients: int = 0
+    backoff_secs: float = 0.0
+
+
+#: rng stream tag for retry-backoff jitter
+_JITTER_TAG = 0xBACF
+
+
 class Transport:
     """Measured client↔server wire: every exchanged adapter tree is
     serialized with the configured codec, its bytes are counted, and the
-    *decoded* tree is what the receiving side actually uses."""
+    *decoded* tree is what the receiving side actually uses.
+
+    The uplink is an at-least-once channel: payloads are checksummed
+    (``checksums``, default on), verification failures are retried up to
+    ``max_retries`` times with deterministic exponential backoff —
+    ``backoff_base · 2^attempt · (1 + backoff_jitter · u)`` with ``u``
+    drawn from a pure function of ``(round, client, attempt)`` — advancing
+    the simulated ``clock``, and a client whose every attempt fails is
+    declared dead (:class:`DeadClientError`; the trainer treats it as a
+    drop).  A ``fault_plan`` (see :mod:`.faults`) can corrupt attempts
+    deterministically for testing.  Retransmissions count against the
+    measured wire bytes (a real wire pays for them); checksums do not.
+    """
 
     def __init__(self, codec: Any = "fp32", dp_clip: float = 0.0,
-                 dp_sigma: float = 0.0, dp_seed: int = 0):
+                 dp_sigma: float = 0.0, dp_seed: int = 0,
+                 checksums: bool = True, max_retries: int = 3,
+                 backoff_base: float = 0.1, backoff_jitter: float = 0.5,
+                 fault_plan: Any = None, clock: Any = None):
         self.codec = codec if isinstance(codec, Codec) else make_codec(codec)
         self.dp_clip = float(dp_clip)
         self.dp_sigma = float(dp_sigma)
         self.dp_seed = int(dp_seed)
+        self.checksums = bool(checksums)
+        self.max_retries = int(max_retries)
+        self.backoff_base = float(backoff_base)
+        self.backoff_jitter = float(backoff_jitter)
+        self.fault_plan = fault_plan
+        self.clock = clock if clock is not None else (
+            fault_plan.clock if fault_plan is not None else None)
+        self.stats = TransportStats()
+
+    def reset_stats(self) -> TransportStats:
+        """Swap in fresh counters, returning the old ones."""
+        old, self.stats = self.stats, TransportStats()
+        return old
 
     def _dp_stage(self, adapters: Dict, init_adapters: Optional[Dict],
                   rnd: int, client_id: int) -> Dict:
@@ -287,11 +440,44 @@ class Transport:
                          rnd: int = 0, client_id: int = 0
                          ) -> Tuple[Dict, int]:
         """Uplink one trained client tree (through the DP stage when
-        configured).  Returns (decoded tree, bytes)."""
+        configured).  Returns (decoded tree, bytes across all attempts).
+
+        Verification failures retry with deterministic backoff; raises
+        :class:`DeadClientError` once ``max_retries`` re-sends have failed.
+        The DP stage runs exactly once, before the first pack — a retry
+        re-encodes the already-privatized tree, never re-clips/re-noises.
+        """
         wire = _wire_fn(aggregator)
         adapters = self._dp_stage(adapters, init_adapters, rnd, client_id)
-        payload = AdapterPayload.pack(adapters, self.codec, wire)
-        return payload.unpack_into(adapters, self.codec), payload.num_bytes
+        total_bytes, last_err = 0, None
+        for attempt in range(self.max_retries + 1):
+            payload = AdapterPayload.pack(adapters, self.codec, wire,
+                                          checksum=self.checksums)
+            if self.fault_plan is not None and self.fault_plan.is_corrupt(
+                    rnd, client_id, attempt):
+                payload = self.fault_plan.corrupt_payload(
+                    payload, rnd, client_id, attempt)
+            self.stats.attempts += 1
+            total_bytes += payload.num_bytes
+            try:
+                decoded = payload.unpack_into(adapters, self.codec,
+                                              verify=self.checksums)
+                return decoded, total_bytes
+            except PayloadError as e:
+                last_err = e
+                if isinstance(e, PayloadCorrupted):
+                    self.stats.crc_failures += 1
+                if attempt < self.max_retries:
+                    self.stats.retries += 1
+                    u = float(np.random.default_rng(
+                        [_JITTER_TAG, rnd, client_id, attempt]).random())
+                    delay = (self.backoff_base * 2 ** attempt
+                             * (1.0 + self.backoff_jitter * u))
+                    self.stats.backoff_secs += delay
+                    if self.clock is not None:
+                        self.clock.advance(delay)
+        self.stats.dead_clients += 1
+        raise DeadClientError(client_id, self.max_retries + 1, last_err)
 
     def server_to_clients(self, agg, aggregator, num_receivers: int
                           ) -> Tuple[Optional[Dict], int]:
@@ -320,11 +506,13 @@ class Transport:
         return decoded, payload.num_bytes * num_receivers
 
 
-def make_transport(spec: Any, **dp) -> Transport:
+def make_transport(spec: Any, **kw) -> Transport:
     """Coerce a transport spec (instance | codec name | Codec) into a
-    :class:`Transport`.  ``dp`` kwargs (``dp_clip``/``dp_sigma``/
-    ``dp_seed``) configure the uplink's DP stage; an already-built
-    instance is returned as-is (its own DP config wins)."""
+    :class:`Transport`.  ``kw`` kwargs (``dp_clip``/``dp_sigma``/
+    ``dp_seed``, plus the hardening knobs ``checksums``/``max_retries``/
+    ``backoff_base``/``backoff_jitter``/``fault_plan``/``clock``)
+    configure the built transport; an already-built instance is returned
+    as-is (its own config wins)."""
     if isinstance(spec, Transport):
         return spec
-    return Transport(spec or "fp32", **dp)
+    return Transport(spec or "fp32", **kw)

@@ -16,6 +16,13 @@ simulation); ``--rank-policy resource`` adapts per-task LoRA ranks to
 client budgets (AFLoRA-style); ``--dp-clip``/``--dp-sigma`` enable
 DP-on-the-wire (``--dp-epsilon`` calibrates σ from a per-round ε and
 overrides ``--dp-sigma``).
+
+Fault tolerance (PR 10): ``--checkpoint PATH`` saves the round-boundary
+state atomically every ``--checkpoint-every`` rounds and ``--resume``
+restarts from it bit-identically; ``--validation {off,screen,full}`` /
+``--min-clients`` configure the server's update gate; the ``--fault-*``
+flags and ``--crash-at ROUND:POINT`` drive the deterministic fault
+injector (testing/chaos runs).
 """
 from __future__ import annotations
 
@@ -26,9 +33,9 @@ from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
 from repro.core.aggregators import available_aggregators
 from repro.core.federated import FederatedTrainer
 from repro.core.privacy import noise_multiplier_for_epsilon
-from repro.core.runtime import (SampledScheduler, available_codecs,
-                                available_rank_policies, available_runners,
-                                available_schedulers)
+from repro.core.runtime import (CRASH_POINTS, FaultPlan, SampledScheduler,
+                                available_codecs, available_rank_policies,
+                                available_runners, available_schedulers)
 
 
 def main(argv=None):
@@ -67,6 +74,28 @@ def main(argv=None):
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--out", default="")
+    ap.add_argument("--checkpoint", default="",
+                    help="round-boundary checkpoint path (atomic writes)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="rounds between checkpoint saves")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint if it exists "
+                         "(bit-identical replay)")
+    ap.add_argument("--validation", default="screen",
+                    choices=["off", "screen", "full"],
+                    help="server-side update gate mode")
+    ap.add_argument("--min-clients", type=int, default=1,
+                    help="round quorum: accepted updates required to fold")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fault-drop", type=float, default=0.0)
+    ap.add_argument("--fault-corrupt", type=float, default=0.0)
+    ap.add_argument("--fault-duplicate", type=float, default=0.0)
+    ap.add_argument("--fault-nan", type=float, default=0.0)
+    ap.add_argument("--fault-scale", type=float, default=0.0)
+    ap.add_argument("--fault-slow", type=float, default=0.0)
+    ap.add_argument("--crash-at", default="",
+                    help=f"inject a server crash, e.g. '2:mid_round' "
+                         f"(points: {', '.join(CRASH_POINTS)})")
     args = ap.parse_args(argv)
 
     scheduler = args.scheduler
@@ -75,6 +104,19 @@ def main(argv=None):
     dp_sigma = args.dp_sigma
     if args.dp_epsilon:
         dp_sigma = noise_multiplier_for_epsilon(args.dp_epsilon)
+    faults = None
+    if (args.fault_drop or args.fault_corrupt or args.fault_duplicate
+            or args.fault_nan or args.fault_scale or args.fault_slow
+            or args.crash_at):
+        crashes = ()
+        if args.crash_at:
+            rnd, point = args.crash_at.split(":", 1)
+            crashes = ((int(rnd), point),)
+        faults = FaultPlan(seed=args.fault_seed, drop=args.fault_drop,
+                           corrupt=args.fault_corrupt,
+                           duplicate=args.fault_duplicate,
+                           nan=args.fault_nan, scale=args.fault_scale,
+                           slow=args.fault_slow, crashes=crashes)
 
     cfg = ModelConfig(name="fed-cli", family="dense", num_layers=args.layers,
                       d_model=args.d_model, num_heads=4, num_kv_heads=2,
@@ -95,8 +137,12 @@ def main(argv=None):
                           dp_clip=args.dp_clip, dp_sigma=dp_sigma,
                           runner=args.runner, scheduler=scheduler,
                           rank_policy=args.rank_policy,
-                          transport=args.codec)
-    hist = tr.run(args.rounds, verbose=True)
+                          transport=args.codec, faults=faults,
+                          validation=args.validation,
+                          min_clients=args.min_clients)
+    hist = tr.run(args.rounds, verbose=True, checkpoint=args.checkpoint,
+                  checkpoint_every=args.checkpoint_every,
+                  resume=args.resume)
     if args.out:
         with open(args.out, "w") as f:
             json.dump([vars(h) for h in hist], f, indent=2)

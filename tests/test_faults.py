@@ -1,0 +1,622 @@
+"""Fault-tolerant federated rounds: deterministic fault injection,
+checksummed/retrying transport, the validation/quarantine gate, and
+crash-exact checkpoint/resume."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.common.config import FedConfig, LoRAConfig, ModelConfig, OptimConfig
+from repro.core.aggregators import (adapter_leaf_paths, fold_scale, get_path,
+                                    make_aggregator)
+from repro.core.federated import FederatedTrainer
+from repro.core.runtime import (DeadClientError, FaultPlan, PayloadCorrupted,
+                                PayloadError, ServerCrash, Transport,
+                                ValidationGate, make_codec)
+from repro.core.runtime.transport import AdapterPayload
+
+CFG = ModelConfig(name="ft-tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=256, dtype="float32")
+LORA = LoRAConfig(rank=8, alpha=8.0)
+OPT = OptimConfig(lr=3e-3)
+
+
+def make_trainer(method="florist", **kw):
+    fed = FedConfig(num_clients=12, clients_per_round=4, method=method,
+                    tau=0.9, homogeneous_rank=8, seed=0)
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("seq_len", 16)
+    return FederatedTrainer(CFG, fed, LORA, OPT, **kw)
+
+
+def adapter_products(tree):
+    out = {}
+    for path in adapter_leaf_paths(tree):
+        B, A = fold_scale(get_path(tree, path))
+        out[path] = np.asarray(B, np.float64) @ np.asarray(A, np.float64)
+    return out
+
+
+def rand_client_tree(rng, L=2, m=32, n=24, r=4, b_scale=1.0):
+    return {"blk": {"A": rng.normal(size=(L, r, n)).astype(np.float32),
+                    "B": (b_scale * rng.normal(size=(L, m, r))
+                          ).astype(np.float32),
+                    "scale": np.ones((L,), np.float32)}}
+
+
+class _RecAgg:
+    """Minimal aggregator stand-in recording every fold."""
+
+    def __init__(self):
+        self.calls = []
+
+    def add_client(self, update, weight, rank=None):
+        self.calls.append((update, float(weight), rank))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: pure function of (seed, round, client)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_pure_and_deterministic():
+    mk = lambda: FaultPlan(seed=5, drop=0.2, duplicate=0.1, corrupt=0.2,
+                           nan=0.1, scale=0.1, slow=0.1)
+    p1, p2 = mk(), mk()
+    for rnd in range(4):
+        for cid in range(30):
+            f1, f2 = p1.client_fault(rnd, cid), p2.client_fault(rnd, cid)
+            assert f1 == f2
+            # re-querying never changes the answer (no mutable state)
+            assert p1.client_fault(rnd, cid) == f1
+    kinds = {p1.client_fault(r, c).kind for r in range(4) for c in range(30)}
+    assert {"drop", "corrupt", None} <= kinds       # taxonomy actually fires
+    # fault assignments vary by round for a fixed client
+    assert len({p1.client_fault(r, 3).kind for r in range(20)}) > 1
+
+
+def test_fault_plan_validates_rates_and_crash_points():
+    with pytest.raises(ValueError):
+        FaultPlan(drop=0.8, corrupt=0.5)             # sums > 1
+    with pytest.raises(ValueError):
+        FaultPlan(drop=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(crashes=((0, "nonsense"),))
+    plan = FaultPlan(seed=1, crashes=((2, "mid_round"),))
+    assert plan.should_crash(2, "mid_round")
+    assert not plan.should_crash(2, "begin")
+    assert not plan.without_crashes().should_crash(2, "mid_round")
+    # clearing crashes must not change the client-fault assignment
+    faulty = FaultPlan(seed=1, drop=0.5, crashes=((2, "mid_round"),))
+    clone = faulty.without_crashes()
+    for cid in range(20):
+        assert faulty.client_fault(0, cid) == clone.client_fault(0, cid)
+
+
+# ---------------------------------------------------------------------------
+# transport hardening: checksums, structural validation, retry
+# ---------------------------------------------------------------------------
+
+
+def test_checksum_catches_bit_flip():
+    tree = rand_client_tree(np.random.default_rng(0))
+    codec = make_codec("fp32")
+    payload = AdapterPayload.pack(tree, codec)
+    plan = FaultPlan(seed=0, corrupt=1.0)
+    bad = plan.corrupt_payload(payload, 0, 0, attempt=0)
+    with pytest.raises(PayloadCorrupted):
+        bad.unpack_into(tree, codec)
+    # the pristine payload still verifies and round-trips bit-exactly
+    out = payload.unpack_into(tree, codec)
+    np.testing.assert_array_equal(out["blk"]["A"], tree["blk"]["A"])
+
+
+def test_checksum_excluded_from_wire_bytes():
+    tree = rand_client_tree(np.random.default_rng(1))
+    codec = make_codec("fp32")
+    with_crc = AdapterPayload.pack(tree, codec, checksum=True)
+    without = AdapterPayload.pack(tree, codec, checksum=False)
+    assert with_crc.num_bytes == without.num_bytes   # integrity is out-of-band
+
+
+def test_unpack_rejects_wrong_shape_block():
+    tree = rand_client_tree(np.random.default_rng(2))
+    codec = make_codec("fp32")
+    payload = AdapterPayload.pack(tree, codec)
+    enc = payload.blocks[("blk",)]["A"][0]
+    # truncated bytes with a matching (stale) checksum: structural error
+    import zlib
+    cut = enc.data[:-8]
+    payload.blocks[("blk",)]["A"][0] = dataclasses.replace(
+        enc, data=cut, crc=zlib.crc32(cut))
+    with pytest.raises(PayloadError):
+        payload.unpack_into(tree, codec)
+
+
+def test_unpack_rejects_bad_ragged_blocks():
+    tree = rand_client_tree(np.random.default_rng(3), L=2, r=4)
+    codec = make_codec("fp32")
+    ranks = {("blk",): [2, 3]}
+    payload = AdapterPayload.pack(tree, codec, ranks=ranks)
+    ok = payload.unpack_into(tree, codec)
+    assert ok["blk"]["A"].shape == tree["blk"]["A"].shape
+    # missing layer block -> layer-count contract violation
+    short = AdapterPayload.pack(tree, codec, ranks=ranks)
+    short.blocks[("blk",)]["A"].pop()
+    with pytest.raises(PayloadError):
+        short.unpack_into(tree, codec)
+    # a ragged rank larger than the reference rank dim -> rank bound
+    wide = AdapterPayload.pack(tree, codec, ranks={("blk",): [4, 4]})
+    small = rand_client_tree(np.random.default_rng(3), L=2, r=2)
+    with pytest.raises(PayloadError):
+        wide.unpack_into(small, codec)
+
+
+def test_uplink_retry_then_success_and_dead_client():
+    tree = rand_client_tree(np.random.default_rng(4))
+    agg = _RecAgg()
+    plan = FaultPlan(seed=0, corrupt=1.0)            # every client corrupts
+    n_bad = plan.client_fault(0, 0).n_bad
+    tp = Transport("fp32", fault_plan=plan, max_retries=n_bad)
+    decoded, nbytes = tp.client_to_server(tree, agg, rnd=0, client_id=0)
+    np.testing.assert_array_equal(decoded["blk"]["A"], tree["blk"]["A"])
+    assert tp.stats.retries == n_bad
+    assert tp.stats.crc_failures == n_bad
+    assert tp.stats.dead_clients == 0
+    # retransmissions cost wire bytes; backoff advanced the simulated clock
+    one = AdapterPayload.pack(tree, tp.codec).num_bytes
+    assert nbytes == one * (n_bad + 1)
+    assert plan.clock.now > 0.0
+    # one fewer allowed attempt -> the client is declared dead
+    tp2 = Transport("fp32", fault_plan=plan, max_retries=n_bad - 1)
+    with pytest.raises(DeadClientError):
+        tp2.client_to_server(tree, agg, rnd=0, client_id=0)
+    assert tp2.stats.dead_clients == 1
+
+
+def test_backoff_is_deterministic():
+    tree = rand_client_tree(np.random.default_rng(5))
+    times = []
+    for _ in range(2):
+        plan = FaultPlan(seed=2, corrupt=1.0)
+        tp = Transport("fp32", fault_plan=plan,
+                       max_retries=plan.client_fault(0, 7).n_bad)
+        tp.client_to_server(tree, _RecAgg(), rnd=0, client_id=7)
+        times.append(plan.clock.now)
+    assert times[0] == times[1] > 0.0
+
+
+def test_dp_clip_applied_exactly_once_across_retries(monkeypatch):
+    import repro.core.privacy as P
+    calls = {"clip": 0, "noise": 0}
+    real_clip, real_noise = P.clip_update, P.local_gaussian_noise
+    monkeypatch.setattr(P, "clip_update", lambda *a, **k: (
+        calls.__setitem__("clip", calls["clip"] + 1), real_clip(*a, **k))[1])
+    monkeypatch.setattr(P, "local_gaussian_noise", lambda *a, **k: (
+        calls.__setitem__("noise", calls["noise"] + 1),
+        real_noise(*a, **k))[1])
+    rng = np.random.default_rng(6)
+    tree = rand_client_tree(rng)
+    init = rand_client_tree(np.random.default_rng(7))
+    plan = FaultPlan(seed=0, corrupt=1.0)
+    n_bad = plan.client_fault(0, 0).n_bad
+    tp = Transport("fp32", dp_clip=1.0, dp_sigma=0.5, fault_plan=plan,
+                   max_retries=n_bad)
+    tp.client_to_server(tree, _RecAgg(), init_adapters=init, rnd=0,
+                        client_id=0)
+    assert tp.stats.retries == n_bad
+    assert calls == {"clip": 1, "noise": 1}   # retries re-encode, never re-DP
+
+
+# ---------------------------------------------------------------------------
+# validation gate
+# ---------------------------------------------------------------------------
+
+
+def test_gate_screen_rejects_nonfinite_and_folds_clean():
+    rng = np.random.default_rng(8)
+    gate = ValidationGate("screen")
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    clean = rand_client_tree(rng)
+    assert gate.submit(object(), clean, 0.5, rank=4)
+    bad = rand_client_tree(rng)
+    bad["blk"]["B"][0, 0, 0] = np.nan
+    assert not gate.submit(object(), bad, 0.5, rank=4)
+    inf = rand_client_tree(rng)
+    inf["blk"]["A"][1, 2, 3] = np.inf
+    assert not gate.submit(object(), inf, 0.5, rank=4)
+    stats = gate.finish()
+    assert len(agg.calls) == 1
+    assert stats.rejected_nonfinite == 2 and stats.accepted == 1
+
+
+def test_gate_rejects_shape_and_rank_violations():
+    rng = np.random.default_rng(9)
+    gate = ValidationGate("screen")
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    assert gate.submit(object(), rand_client_tree(rng), 0.5, rank=4)
+    # wrong model dims vs the round's reference
+    assert not gate.submit(object(), rand_client_tree(rng, n=99), 0.5, rank=4)
+    # A/B rank dims disagree
+    torn = rand_client_tree(rng)
+    torn["blk"]["B"] = torn["blk"]["B"][:, :, :2]
+    assert not gate.submit(object(), torn, 0.5, rank=4)
+    # declared task rank does not match the uploaded tensors
+    assert not gate.submit(object(), rand_client_tree(rng), 0.5, rank=6)
+    assert gate.finish().rejected_shape == 3
+
+
+def test_gate_deduplicates_at_least_once_delivery():
+    rng = np.random.default_rng(10)
+    gate = ValidationGate("screen")
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    task = object()
+    tree = rand_client_tree(rng)
+    assert gate.submit(task, tree, 0.5, rank=4)
+    assert not gate.submit(task, tree, 0.5, rank=4)   # same delivery re-sent
+    stats = gate.finish()
+    assert len(agg.calls) == 1 and stats.rejected_duplicate == 1
+
+
+def test_gate_full_quarantines_norm_outliers_and_renormalizes():
+    rng = np.random.default_rng(11)
+    gate = ValidationGate("full", mad_threshold=6.0)
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    w = 1.0 / 6.0
+    for _ in range(5):
+        assert gate.submit(object(), rand_client_tree(rng), w, rank=4)
+    assert gate.submit(object(), rand_client_tree(rng, b_scale=100.0), w,
+                       rank=4)                        # held, not yet judged
+    assert not agg.calls                              # full mode buffers
+    stats = gate.finish()
+    assert stats.quarantined == 1 and stats.accepted == 5
+    # surviving weights renormalize to the round's total mass
+    assert sum(wt for _, wt, _ in agg.calls) == pytest.approx(6 * w)
+
+
+def test_gate_full_tight_honest_cluster_never_self_rejects():
+    """All-identical norms (e.g. every update clipped to the same DP bound)
+    must not quarantine anyone on numerically-tiny spread."""
+    gate = ValidationGate("full")
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    for i in range(6):
+        tree = rand_client_tree(np.random.default_rng(100 + i))
+        norm = np.sqrt(sum(float(np.sum(np.asarray(v, np.float64) ** 2))
+                           for v in (tree["blk"]["A"], tree["blk"]["B"])))
+        tree["blk"]["A"] /= norm                      # exact unit L2
+        tree["blk"]["B"] = np.zeros_like(tree["blk"]["B"])
+        gate.submit(object(), tree, 1 / 6, rank=4)
+    stats = gate.finish()
+    assert stats.quarantined == 0 and stats.accepted == 6
+
+
+def test_gate_quorum():
+    gate = ValidationGate("screen", min_clients=3)
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    gate.submit(object(), rand_client_tree(np.random.default_rng(12)), 1.0,
+                rank=4)
+    assert not gate.finish().quorum_met
+    gate.begin_round(agg)
+    for i in range(3):
+        gate.submit(object(),
+                    rand_client_tree(np.random.default_rng(13 + i)), 1 / 3,
+                    rank=4)
+    assert gate.finish().quorum_met
+
+
+def test_gate_off_mode_bypasses_checks():
+    gate = ValidationGate("off")
+    agg = _RecAgg()
+    gate.begin_round(agg)
+    bad = rand_client_tree(np.random.default_rng(14))
+    bad["blk"]["A"][0, 0, 0] = np.nan
+    assert gate.submit(object(), bad, 1.0, rank=4)
+    assert len(agg.calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: poison containment
+# ---------------------------------------------------------------------------
+
+
+def test_nan_poison_contained_exactly_as_if_dropped():
+    """Screen-gate rejection of NaN uploads must equal the same clients
+    never arriving: FaultPlan draws one uniform per (round, client), so
+    nan=p and drop=p poison the *same* client set."""
+    nan_plan = FaultPlan(seed=21, nan=0.4)
+    drop_plan = FaultPlan(seed=21, drop=0.4)
+    poisoned = [c for c in range(12)
+                if nan_plan.client_fault(0, c).kind == "nan"]
+    assert poisoned, "seed must poison someone for the test to bite"
+    t_nan = make_trainer(faults=nan_plan)
+    t_drop = make_trainer(faults=drop_plan)
+    h_nan, h_drop = t_nan.run(2), t_drop.run(2)
+    for a, b in zip(h_nan, h_drop):
+        assert a.eval_loss == b.eval_loss
+        assert a.rejected > 0 or a.dead_clients == b.dead_clients
+    pn = adapter_products(t_nan.global_state.global_adapters)
+    pd = adapter_products(t_drop.global_state.global_adapters)
+    for path in pn:
+        np.testing.assert_array_equal(pn[path], pd[path])
+    # counters surfaced in the history
+    assert sum(r.rejected for r in h_nan) == \
+        sum(r.dead_clients for r in h_drop)
+
+
+def test_scale_poison_quarantined_matches_clean_only_aggregation():
+    """100×-scaled updates are finite, so only the full gate's MAD
+    quarantine catches them; the finalized global adapters must match
+    folding the clean clients alone (weights renormalized)."""
+    plan = FaultPlan(seed=4, scale=0.3)
+    fed_sample = 4
+    # capture each clean client's decoded update via a recording gate
+    captured = []
+
+    class _CapturingGate(ValidationGate):
+        def submit(self, task, update, weight, rank=None,
+                   init_adapters=None):
+            captured.append((task.client_id, update, weight, rank))
+            return super().submit(task, update, weight, rank=rank,
+                                  init_adapters=init_adapters)
+
+    t_clean = make_trainer(validation=_CapturingGate("full"))
+    t_clean.run(1)
+    poisoned = {cid for cid, *_ in captured
+                if plan.client_fault(0, cid).kind == "scale"}
+    assert poisoned and len(poisoned) < fed_sample
+
+    t_poison = make_trainer(faults=plan, validation=ValidationGate("full"))
+    h = t_poison.run(1)
+    assert h[0].quarantined == len(poisoned)
+    assert h[0].quorum_met
+
+    # reference: clean clients only, weights renormalized to full mass
+    agg = make_aggregator("florist", tau=0.9)
+    agg.begin_round()
+    w_all = sum(w for _, _, w, _ in captured)
+    w_acc = sum(w for cid, _, w, _ in captured if cid not in poisoned)
+    for cid, update, w, rank in captured:
+        if cid not in poisoned:
+            agg.add_client(update, w * (w_all / w_acc), rank=rank)
+    ref = agg.finalize()
+    pr = adapter_products(ref.global_adapters)
+    pp = adapter_products(t_poison.global_state.global_adapters)
+    for path in pr:
+        np.testing.assert_allclose(pr[path], pp[path], atol=1e-5,
+                                   err_msg=str(path))
+
+
+def test_duplicate_uploads_fold_once():
+    t_dup = make_trainer(faults=FaultPlan(seed=0, duplicate=1.0))
+    t_ref = make_trainer()
+    h_dup, h_ref = t_dup.run(2), t_ref.run(2)
+    for a, b in zip(h_dup, h_ref):
+        assert a.eval_loss == b.eval_loss
+        assert a.rejected == 4                 # every re-send deduplicated
+    pd = adapter_products(t_dup.global_state.global_adapters)
+    pr = adapter_products(t_ref.global_state.global_adapters)
+    for path in pd:
+        np.testing.assert_array_equal(pd[path], pr[path])
+
+
+def test_slow_clients_only_cost_simulated_time():
+    t_slow = make_trainer(faults=FaultPlan(seed=0, slow=1.0, slow_secs=3.0))
+    t_ref = make_trainer()
+    h_slow, h_ref = t_slow.run(1), t_ref.run(1)
+    assert h_slow[0].eval_loss == h_ref[0].eval_loss
+    assert h_slow[0].sim_secs > 0.0 and h_ref[0].sim_secs == 0.0
+
+
+def test_all_dropped_round_degrades_gracefully():
+    tr = make_trainer(faults=FaultPlan(seed=0, drop=1.0))
+    h = tr.run(2)
+    assert all(not r.quorum_met for r in h)
+    assert all(r.dead_clients == 4 for r in h)
+    assert tr.global_state is None             # nothing was ever folded
+    assert np.isfinite(h[-1].eval_loss)        # still evaluates the base
+
+
+def test_honest_dp_clients_pass_full_gate():
+    tr = make_trainer(dp_clip=1.0, dp_sigma=0.7,
+                      validation=ValidationGate("full"))
+    h = tr.run(2)
+    assert all(r.quarantined == 0 and r.rejected == 0 for r in h)
+    assert all(r.quorum_met for r in h)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume: crash-exactness
+# ---------------------------------------------------------------------------
+
+
+def _strip(rec):
+    d = dataclasses.asdict(rec)
+    for k in ("wall_secs", "sim_secs", "resumes"):
+        d.pop(k)
+    return d
+
+
+def _assert_resume_bit_exact(tmp_path, crash_round, crash_point, rounds=3,
+                             **kw):
+    ref_tr = make_trainer(**kw)
+    ref = ref_tr.run(rounds)
+    ck = os.path.join(str(tmp_path), "fed.ckpt")
+    plan = FaultPlan(seed=0, crashes=((crash_round, crash_point),))
+    t1 = make_trainer(faults=plan, **kw)
+    with pytest.raises(ServerCrash):
+        t1.run(rounds, checkpoint=ck, checkpoint_every=1)
+    t2 = make_trainer(faults=plan.without_crashes(), **kw)
+    hist = t2.run(rounds, checkpoint=ck, checkpoint_every=1, resume=True)
+    assert [_strip(r) for r in hist] == [_strip(r) for r in ref]
+    assert any(r.resumes for r in hist) or crash_round == 0
+    pr = adapter_products(ref_tr.global_state.global_adapters)
+    pt = adapter_products(t2.global_state.global_adapters)
+    for path in pr:
+        np.testing.assert_array_equal(pr[path], pt[path])
+    eq = jax.tree.map(
+        lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+        jax.device_get(ref_tr.global_state.global_adapters),
+        jax.device_get(t2.global_state.global_adapters))
+    assert all(jax.tree.leaves(eq))
+
+
+@pytest.mark.parametrize("point",
+                         ["begin", "mid_round", "pre_finalize", "post_round"])
+def test_crash_resume_bit_exact_sequential(tmp_path, point):
+    _assert_resume_bit_exact(tmp_path, 1, point)
+
+
+@pytest.mark.parametrize("runner", ["cohort", "sharded_cohort"])
+def test_crash_resume_bit_exact_batched_runners(tmp_path, runner):
+    _assert_resume_bit_exact(tmp_path, 1, "mid_round", runner=runner)
+
+
+def test_crash_resume_round_zero_before_any_checkpoint(tmp_path):
+    _assert_resume_bit_exact(tmp_path, 0, "mid_round", rounds=2)
+
+
+def test_crash_resume_with_async_scheduler_state(tmp_path):
+    # spec string -> each trainer builds its OWN AsyncScheduler (the
+    # scheduler is stateful; sharing an instance would leak in-flight
+    # dispatches across runs), and resume restores its state_dict
+    _assert_resume_bit_exact(tmp_path, 1, "post_round", scheduler="async")
+
+
+def test_resume_skips_completed_rounds(tmp_path):
+    ck = os.path.join(str(tmp_path), "fed.ckpt")
+    t1 = make_trainer()
+    t1.run(3, checkpoint=ck)
+    runs = []
+    t2 = make_trainer()
+    orig = t2.run_round
+    t2.run_round = lambda rnd: runs.append(rnd) or orig(rnd)
+    hist = t2.run(3, checkpoint=ck, resume=True)
+    assert runs == []                          # nothing left to replay
+    assert len(hist) == 3
+    assert [_strip(r) for r in hist] == [_strip(r) for r in t1.history]
+
+
+# ---------------------------------------------------------------------------
+# aggregator mid-round state round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method",
+                         ["fedit", "ffa", "flora", "flexlora", "florist"])
+def test_aggregator_state_roundtrip_mid_round(method, tmp_path):
+    rng = np.random.default_rng(30)
+    clients = [rand_client_tree(rng) for _ in range(4)]
+    mk = lambda: make_aggregator(method, **({"tau": 0.9}
+                                           if method == "florist" else {}))
+    a_init = {"blk": {"A": clients[0]["blk"]["A"],
+                      "B": np.zeros_like(clients[0]["blk"]["B"]),
+                      "scale": np.ones((2,), np.float32)}}
+    agg1 = mk()
+    if method == "ffa":
+        agg1.A_init = a_init
+    agg1.begin_round()
+    for c in clients[:2]:
+        agg1.add_client(c, 0.25, rank=4)
+    # snapshot through the atomic pickle path, restore into a FRESH instance
+    blob = os.path.join(str(tmp_path), "agg.state")
+    ckpt_io.save_state(blob, agg1.state_dict())
+    agg2 = mk()
+    if method == "ffa":
+        agg2.A_init = a_init
+    agg2.begin_round()
+    agg2.load_state_dict(ckpt_io.restore_state(blob))
+    for agg in (agg1, agg2):
+        for c in clients[2:]:
+            agg.add_client(c, 0.25, rank=4)
+    r1, r2 = agg1.finalize(), agg2.finalize()
+    assert r1.ranks == r2.ranks
+    if r1.global_adapters is not None:
+        eq = jax.tree.map(
+            lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+            jax.device_get(r1.global_adapters),
+            jax.device_get(r2.global_adapters))
+        assert all(jax.tree.leaves(eq))
+    if r1.per_client is not None:
+        for t1, t2 in zip(r1.per_client, r2.per_client):
+            eq = jax.tree.map(
+                lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                 np.asarray(b))),
+                jax.device_get(t1), jax.device_get(t2))
+            assert all(jax.tree.leaves(eq))
+
+
+# ---------------------------------------------------------------------------
+# atomic checkpoint io
+# ---------------------------------------------------------------------------
+
+
+def test_npz_save_extensionless_path_round_trips(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones((4,), np.float32)}}
+    path = os.path.join(str(tmp_path), "ckpt")       # no .npz
+    ckpt_io.save(path, tree, step=7)
+    assert os.path.exists(path)                      # no silent suffix-append
+    back = ckpt_io.restore(path, tree)
+    assert ckpt_io.restore_step(path) == 7
+    np.testing.assert_array_equal(np.asarray(back["a"]), tree["a"])
+    # legacy suffixed checkpoints still restore
+    path2 = os.path.join(str(tmp_path), "ckpt2.npz")
+    ckpt_io.save(path2, tree)
+    np.testing.assert_array_equal(
+        np.asarray(ckpt_io.restore(path2, tree)["b"]["c"]), tree["b"]["c"])
+
+
+def test_atomic_writes_leave_no_temp_files(tmp_path):
+    d = str(tmp_path)
+    ckpt_io.save(os.path.join(d, "x"), {"a": np.ones((2,), np.float32)})
+    ckpt_io.save_state(os.path.join(d, "y"), {"k": 1})
+    # interrupted write (serializer throws) leaves no partial/temp file
+    class Boom(Exception):
+        pass
+
+    with pytest.raises(Boom):
+        ckpt_io._atomic_write(os.path.join(d, "z"),
+                              lambda f: (_ for _ in ()).throw(Boom()))
+    assert sorted(os.listdir(d)) == ["x", "y"]
+
+
+def test_save_overwrite_is_all_or_nothing(tmp_path):
+    path = os.path.join(str(tmp_path), "state")
+    ckpt_io.save_state(path, {"v": 1})
+    ckpt_io.save_state(path, {"v": 2})
+    assert ckpt_io.restore_state(path) == {"v": 2}
+
+
+def test_state_blob_round_trips_tuple_keys_and_arrays(tmp_path):
+    path = os.path.join(str(tmp_path), "blob")
+    state = {("layer", "q"): {"M": np.random.default_rng(0).normal(
+        size=(2, 3)).astype(np.float32)},
+             "seen": {4, 8}, "n": 3}
+    ckpt_io.save_state(path, ckpt_io.to_host(state))
+    back = ckpt_io.restore_state(path)
+    np.testing.assert_array_equal(back[("layer", "q")]["M"],
+                                  state[("layer", "q")]["M"])
+    assert back["seen"] == {4, 8} and back["n"] == 3
+
+
+def test_to_host_to_device_round_trip():
+    import jax.numpy as jnp
+    tree = {"a": jnp.ones((2, 2)), "l": [jnp.zeros((3,)), 5, None],
+            "t": (jnp.arange(4), "tag")}
+    host = ckpt_io.to_host(tree)
+    assert isinstance(host["a"], np.ndarray)
+    dev = ckpt_io.to_device(host)
+    assert isinstance(dev["a"], jax.Array)
+    assert dev["l"][1] == 5 and dev["l"][2] is None and dev["t"][1] == "tag"
+    np.testing.assert_array_equal(np.asarray(dev["t"][0]), np.arange(4))
